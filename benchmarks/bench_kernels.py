@@ -1,0 +1,46 @@
+"""Pallas kernel timings (interpret mode on CPU — indicative, the real
+target is TPU) vs the pure-jnp oracle, plus compiled-oracle throughput."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import block_topk, qsgd_quantize, sign_ef_compress
+from repro.kernels import ref
+
+SIZE = 1 << 18  # 256k elements
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (SIZE,))
+    tiles = x.reshape(-1, 1024)
+    e = jnp.zeros_like(x)
+
+    # jnp oracles (jit-compiled) — the CPU-meaningful numbers
+    f_topk = jax.jit(lambda t: ref.block_topk_threshold_ref(t, 10))
+    us = time_fn(f_topk, tiles)
+    emit("kernel.topk_oracle_jit", us, f"{SIZE / us:.0f}elem/us")
+
+    u = jax.random.uniform(key, tiles.shape)
+    nrm = jnp.linalg.norm(x).reshape(1, 1)
+    f_qsgd = jax.jit(lambda t, u, n: ref.qsgd_ref(t, u, n[0, 0], 256))
+    us = time_fn(f_qsgd, tiles, u, nrm)
+    emit("kernel.qsgd_oracle_jit", us, f"{SIZE / us:.0f}elem/us")
+
+    f_sign = jax.jit(lambda t, e: ref.sign_ef_ref(t, e))
+    us = time_fn(f_sign, tiles, e.reshape(-1, 1024))
+    emit("kernel.sign_ef_oracle_jit", us, f"{SIZE / us:.0f}elem/us")
+
+    # pallas interpret mode (correctness path; slow on CPU by construction)
+    us = time_fn(lambda: block_topk(x, 0.01, interpret=True), iters=3)
+    emit("kernel.topk_pallas_interpret", us, "correctness-path")
+    us = time_fn(lambda: qsgd_quantize(key, x, interpret=True), iters=3)
+    emit("kernel.qsgd_pallas_interpret", us, "correctness-path")
+    us = time_fn(lambda: sign_ef_compress(x, e, interpret=True), iters=3)
+    emit("kernel.sign_ef_pallas_interpret", us, "correctness-path")
+
+
+if __name__ == "__main__":
+    main()

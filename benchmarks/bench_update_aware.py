@@ -1,0 +1,33 @@
+"""Fig. 2 reproduction: update-aware scheduling policies BC / BN2 / BC-BN2 /
+BN2-C [62]. Derived: final eval loss per policy (combined channel+update
+policies should be best, per the chapter)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, make_lm_problem
+from repro.fl import runtime as rt
+
+ROUNDS = 80
+POLICIES = ("best_channel", "bn2", "bc_bn2", "bn2_c")
+
+
+def main() -> None:
+    results = {}
+    t0 = time.perf_counter()
+    for pol in POLICIES:
+        params, loss_fn, sample, eval_fn = make_lm_problem(n_clients=16,
+                                                           alpha=0.1)
+        cfg = rt.SimConfig(n_devices=16, n_scheduled=2, rounds=ROUNDS, lr=1.0,
+                           policy=pol, local_steps=4, model_bits=1e6)
+        logs = rt.run_simulation(cfg, loss_fn, params, sample, eval_fn=eval_fn)
+        results[pol] = logs[-1].loss
+    us = (time.perf_counter() - t0) / (len(POLICIES) * ROUNDS) * 1e6
+    for pol, loss in results.items():
+        emit(f"fig2.{pol}_final_loss", us, f"{loss:.4f}")
+    best = min(results, key=results.get)
+    emit("fig2.best_policy", us, best)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Shared benchmark scaffolding: a small learnable LM problem + timing.
+
+The chapter's experiments train CNNs on MNIST/CIFAR-10; offline we substitute
+a synthetic Markov LM task (same optimization structure: non-iid clients,
+NN model, SGD) scaled to CPU. Every benchmark prints
+``name,us_per_call,derived`` CSV rows via ``emit``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import SyntheticLMDataset, dirichlet_partition
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Tiny MLP LM problem for FL benchmarks
+# ---------------------------------------------------------------------------
+VOCAB, SEQ, DHID = 64, 16, 32
+
+
+def make_lm_problem(n_clients: int, alpha: float = 0.3, seed: int = 0):
+    ds = SyntheticLMDataset(VOCAB, SEQ, 2048, n_classes=4, seed=seed,
+                            branching=2)
+    parts = dirichlet_partition(ds.class_of(np.arange(len(ds))), n_clients,
+                                alpha=alpha, seed=seed, min_per_client=16)
+
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "emb": jax.random.normal(k1, (VOCAB, DHID)) * 0.1,
+        "w1": jax.random.normal(k2, (DHID, DHID)) * (DHID ** -0.5),
+        "w2": jax.random.normal(k3, (DHID, VOCAB)) * (DHID ** -0.5),
+    }
+
+    def loss_fn(p, batch):
+        h = jnp.take(p["emb"], batch["tokens"], axis=0)
+        h = jax.nn.relu(h @ p["w1"])
+        logits = h @ p["w2"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["labels"][..., None],
+                                   axis=-1)[..., 0]
+        return jnp.mean(lse - gold), {}
+
+    rng = np.random.default_rng(seed)
+
+    def sample_batches(t: int, n: int, h: int = 2, b: int = 16):
+        outs = {"tokens": [], "labels": []}
+        for ci in parts[:n]:
+            idx = rng.choice(ci, size=(h, b))
+            got = ds.get(idx.reshape(-1))
+            for k in outs:
+                outs[k].append(got[k].reshape(h, b, -1))
+        return {k: jnp.asarray(np.stack(v)) for k, v in outs.items()}
+
+    eval_idx = np.arange(256)
+    eval_batch = {k: jnp.asarray(v) for k, v in ds.get(eval_idx).items()}
+
+    def eval_fn(p) -> float:
+        return float(loss_fn(p, eval_batch)[0])
+
+    return params, loss_fn, sample_batches, eval_fn

@@ -1,0 +1,116 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh x policy) record:
+  compute term    = HLO_FLOPs / (chips * 197e12)          [s]
+  memory term     = HLO_bytes / (chips * 819e9)           [s]
+  collective term = collective_bytes / link_bw_per_chip   [s]
+plus MODEL_FLOPS/HLO_FLOPs (useful-compute ratio) and the dominant term.
+
+Notes:
+* cost_analysis() on the CPU backend reports PER-DEVICE flops/bytes for the
+  SPMD module (num_partitions=256) — no further division by chips is applied.
+* collective_bytes from hlo_analysis are per-device wire bytes; ICI budget is
+  ~4 links/chip x 50 GB/s on the v5e 2D torus -> 2e11 B/s per chip; the `pod`
+  axis crosses DCN (~25 GB/s per host) — recorded separately.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW_PER_CHIP = 4 * 50e9
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "artifacts")
+
+SHAPE_TOKENS = {  # tokens processed per step (train) / per decode step
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128,
+    "long_500k": 1,
+}
+
+
+def model_flops(rec: dict) -> float:
+    """6*N*D (dense) or 6*N_active*D (MoE); decode = per generated token."""
+    n = rec["active_params"]
+    toks = SHAPE_TOKENS[rec["shape"]]
+    if rec["shape"] in ("decode_32k", "long_500k"):
+        return 2.0 * n * toks  # forward-only per token
+    if rec["shape"] == "prefill_32k":
+        return 2.0 * n * toks
+    return 6.0 * n * toks
+
+
+def analyze(rec: dict) -> Dict:
+    chips = rec["n_devices"]
+    # FLOPs: loop-multiplied parse of the HLO (XLA-CPU cost_analysis counts
+    # scan bodies once — see hlo_analysis.hlo_compute_stats).
+    # HBM bytes: XLA's per-op "bytes accessed", loop-corrected by the same
+    # multiplier observed on flops (parsed/cost). Upper bound: CPU HLO leaves
+    # elementwise chains unfused that the TPU backend would fuse.
+    parsed = rec.get("parsed") or {}
+    cost_flops = rec["cost"].get("flops") or 0.0
+    flops_dev = parsed.get("flops") or cost_flops
+    corr = (max(1.0, parsed["flops"] / cost_flops)
+            if parsed.get("flops") and cost_flops else 1.0)
+    bytes_dev = (rec["cost"].get("bytes accessed") or 0.0) * corr
+    if not bytes_dev:
+        bytes_dev = parsed.get("hbm_bytes") or 0.0
+    coll = sum(v["bytes"] for v in rec.get("collectives", {}).values())
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll / ICI_BW_PER_CHIP
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    useful = mf / (flops_dev * chips) if flops_dev else 0.0
+    bound = max(terms.values())
+    mfu = (mf / chips / PEAK_FLOPS) / bound if bound else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "policy": rec["policy"], "status": rec["status"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_global": flops_dev * chips,
+        "useful_compute_ratio": useful,
+        "roofline_mfu": mfu,
+        "peak_bytes_per_dev": rec.get("memory", {}).get("peak_bytes"),
+    }
+
+
+def load_records(art_dir: str = ART_DIR) -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main() -> None:
+    recs = load_records()
+    ok = [r for r in recs if r["status"] == "ok"]
+    fail = [r for r in recs if r["status"] != "ok"]
+    rows = [analyze(r) for r in ok]
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"], r["policy"]))
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} {'policy':16s} "
+           f"{'compute':>9s} {'memory':>9s} {'collect':>9s} {'dom':>9s} "
+           f"{'useful':>7s} {'rMFU':>6s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{r['policy']:16s} {r['t_compute_s']:9.2e} "
+              f"{r['t_memory_s']:9.2e} {r['t_collective_s']:9.2e} "
+              f"{r['dominant']:>9s} {r['useful_compute_ratio']:7.3f} "
+              f"{r['roofline_mfu']:6.3f}")
+    for r in fail:
+        print(f"FAIL {r['arch']} {r['shape']} {r['mesh']} {r['policy']}: "
+              f"{r.get('error', '?')[:120]}")
+    print(f"{len(ok)} ok / {len(fail)} failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus the roofline table when
+dry-run artifacts exist). Run: ``PYTHONPATH=src python -m benchmarks.run``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_compression, bench_hfl, bench_kernels,
+                        bench_rs_rr_pf, bench_scheduling, bench_update_aware)
+from benchmarks import roofline
+
+MODULES = [
+    ("scheduling(fig1)", bench_scheduling),
+    ("update_aware(fig2)", bench_update_aware),
+    ("hfl(table1)", bench_hfl),
+    ("compression(sec2)", bench_compression),
+    ("rs_rr_pf(eqs50-56)", bench_rs_rr_pf),
+    ("kernels", bench_kernels),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        t0 = time.time()
+        try:
+            mod.main()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,FAILED:{type(e).__name__}:{e}")
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+    try:
+        print("\n=== roofline (from dry-run artifacts) ===")
+        roofline.main()
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline,0,SKIPPED:{e}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Decentralized learning (Alg. 2): consensus + local SGD over ring / torus /
+Erdos-Renyi topologies; convergence speed tracks the spectral gap (§I.B).
+
+Run:  PYTHONPATH=src:. python examples/decentralized_gossip.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import make_lm_problem
+from repro.core.topology import (erdos_renyi, laplacian_mixing, ring,
+                                 spectral_gap, torus_2d)
+from repro.fl.decentralized import gossip_round
+
+N = 16
+
+
+def main() -> None:
+    graphs = {
+        "ring": ring(N),
+        "torus 4x4": torus_2d(4, 4),
+        "erdos-renyi(0.4)": erdos_renyi(0, N, 0.4),
+    }
+    params0, loss_fn, sample, eval_fn = make_lm_problem(n_clients=N, alpha=0.5)
+    for name, adj in graphs.items():
+        w = jnp.asarray(laplacian_mixing(adj))
+        gap = spectral_gap(np.asarray(w))
+        cp = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (N,) + p.shape),
+                          params0)
+        loss = None
+        for t in range(80):
+            b = jax.tree.map(lambda v: v[:, 0], sample(t, N))
+            cp, loss = gossip_round(cp, w, b, loss_fn, 0.5)
+        # consensus error: how far replicas drifted apart
+        drift = float(jnp.linalg.norm(
+            cp["w1"] - cp["w1"].mean(0, keepdims=True)))
+        print(f"{name:18s} spectral gap {gap:.3f}  final loss {float(loss):.4f}"
+              f"  consensus drift {drift:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: federated training of a small LM with the paper's full stack —
+top-k sparsification + error feedback, age-based wireless scheduling, FedAvg.
+
+Run:  PYTHONPATH=src:. python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.compression import topk_sparsify
+from repro.data import FederatedLoader, SyntheticLMDataset, dirichlet_partition
+from repro.fl import runtime as rt
+from repro.models import transformer as tf
+
+
+def main() -> None:
+    cfg = get_config("gemma-2b").reduced()  # 2-layer, d=128 smoke variant
+    print(f"model: {cfg.name}  params~{cfg.param_count():,}")
+
+    ds = SyntheticLMDataset(cfg.vocab_size, seq_len=32, n_sequences=2048)
+    parts = dirichlet_partition(ds.class_of(np.arange(len(ds))), 12,
+                                alpha=0.3, min_per_client=8)
+    loader = FederatedLoader(ds, parts, batch=4, local_steps=2)
+
+    def loss_fn(params, batch):
+        return tf.lm_loss(params, cfg, batch, remat=False)
+
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    sim = rt.SimConfig(
+        n_devices=12, n_scheduled=4, rounds=30, local_steps=2, lr=2e-3,
+        policy="age",  # age-based wireless scheduling [58]
+        compressor=lambda g: topk_sparsify(g, max(1, g.size // 50)),
+        model_bits=32.0 * cfg.param_count())
+
+    logs = rt.run_simulation(
+        sim, loss_fn, params,
+        lambda t, n: {k: jnp.asarray(v) for k, v in loader.next_round().items()})
+    for lg in logs[::5] + [logs[-1]]:
+        print(f"round {lg.round:3d}  wall-clock {lg.latency_s:8.1f}s  "
+              f"loss {lg.loss:.4f}  scheduled {lg.n_scheduled}")
+    assert logs[-1].loss < logs[0].loss
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

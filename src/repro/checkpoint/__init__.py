@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpoint import save_checkpoint, load_checkpoint, latest_step  # noqa: F401

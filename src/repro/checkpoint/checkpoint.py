@@ -1,0 +1,69 @@
+"""Flat-key npz checkpointing for arbitrary param/opt pytrees.
+
+Host-gathered (suits the simulation scale); sharded arrays are materialized
+per-host before writing. Keys are '/'-joined pytree paths, so restore is
+layout-independent.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub":  # ml_dtypes (bf16 etc): store as f32
+            arr = np.asarray(leaf, dtype=np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for p, leaf in leaves_with_path:
+        key = "/".join(_path_str(pp) for pp in p)
+        arr = data[key]
+        assert arr.shape == leaf.shape, f"{key}: {arr.shape} vs {leaf.shape}"
+        out.append(jnp.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,6 @@
+"""The paper's contribution: communication-efficient collaborative learning.
+
+Modules map 1:1 onto the chapter's sections (see DESIGN.md §1):
+compression/ (§II.A/B), aggregation (§II.C/D), scheduling + wireless (§III),
+topology (§I.B decentralized consensus), hierarchy (§III.A hierarchical FL).
+"""

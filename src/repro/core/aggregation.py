@@ -1,0 +1,120 @@
+"""Consensus / aggregation strategies (paper §I.A, §II.C-D).
+
+All functions operate on *stacked client pytrees*: every leaf carries a
+leading client axis (shape (N, ...)). This is the layout the vmapped FL
+runtime produces and also what a data-axis all-reduce consumes under pjit.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _wmean(stacked: PyTree, weights: Optional[jnp.ndarray]) -> PyTree:
+    if weights is None:
+        return jax.tree.map(lambda x: jnp.mean(x, axis=0), stacked)
+    w = weights / jnp.sum(weights)
+
+    def leaf(x):
+        wb = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        return jnp.sum(x * wb, axis=0)
+    return jax.tree.map(leaf, stacked)
+
+
+# ---------------------------------------------------------------------------
+# PSSGD (Alg. 1) / FedSGD: average gradients
+# ---------------------------------------------------------------------------
+def average_gradients(grads: PyTree, weights: Optional[jnp.ndarray] = None) -> PyTree:
+    return _wmean(grads, weights)
+
+
+# ---------------------------------------------------------------------------
+# FedAvg (Alg. 7): average participating clients' models/deltas
+# ---------------------------------------------------------------------------
+def fedavg(client_models: PyTree, participation: Optional[jnp.ndarray] = None
+           ) -> PyTree:
+    """participation: (N,) 0/1 mask (scheduled devices S_t). Weighted mean
+    over participants only (eq. 36)."""
+    return _wmean(client_models, participation)
+
+
+# ---------------------------------------------------------------------------
+# SignSGD with majority vote (Alg. 5)
+# ---------------------------------------------------------------------------
+def signsgd_majority_vote(sign_grads: PyTree) -> PyTree:
+    """sign( sum_n sign(g_n) ) leaf-wise."""
+    return jax.tree.map(lambda s: jnp.sign(jnp.sum(jnp.sign(s), axis=0)), sign_grads)
+
+
+# ---------------------------------------------------------------------------
+# SlowMo (Alg. 8) — server momentum over the pseudo-gradient
+# ---------------------------------------------------------------------------
+class SlowMoState(NamedTuple):
+    momentum: PyTree
+
+
+def init_slowmo(params: PyTree) -> SlowMoState:
+    return SlowMoState(jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+
+def slowmo(params: PyTree, client_deltas: PyTree, state: SlowMoState, *,
+           inner_lr: float, alpha: float = 1.0, beta: float = 0.5,
+           participation: Optional[jnp.ndarray] = None
+           ) -> Tuple[PyTree, SlowMoState]:
+    """theta_{t+1} = theta_t - alpha * eta * m_{t+1};
+    m_{t+1} = beta*m_t + mean(delta)/eta  (Alg. 8 lines 13-16).
+
+    client_deltas are theta_i^H - theta_{t-1} (note sign: descent deltas are
+    negative), so the pseudo-gradient is -mean(delta)/eta.
+    """
+    mean_delta = _wmean(client_deltas, participation)
+    pseudo_grad = jax.tree.map(lambda d: -d.astype(jnp.float32) / inner_lr, mean_delta)
+    m = jax.tree.map(lambda m0, g: beta * m0 + g, state.momentum, pseudo_grad)
+    new_params = jax.tree.map(
+        lambda p, mm: (p.astype(jnp.float32) - alpha * inner_lr * mm).astype(p.dtype),
+        params, m)
+    return new_params, SlowMoState(m)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive server optimizers (FedAdam/FedYogi, Reddi et al. [56])
+# ---------------------------------------------------------------------------
+class ServerOptState(NamedTuple):
+    m: PyTree
+    v: PyTree
+    step: jnp.ndarray
+
+
+def init_server_opt(params: PyTree) -> ServerOptState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return ServerOptState(z, z, jnp.zeros((), jnp.int32))
+
+
+def fedadam(params: PyTree, client_deltas: PyTree, state: ServerOptState, *,
+            server_lr: float = 1e-2, beta1: float = 0.9, beta2: float = 0.99,
+            eps: float = 1e-3, participation: Optional[jnp.ndarray] = None,
+            yogi: bool = False) -> Tuple[PyTree, ServerOptState]:
+    """Server Adam on the pseudo-gradient -mean(delta)."""
+    mean_delta = _wmean(client_deltas, participation)
+    g = jax.tree.map(lambda d: -d.astype(jnp.float32), mean_delta)
+    step = state.step + 1
+    m = jax.tree.map(lambda m0, gg: beta1 * m0 + (1 - beta1) * gg, state.m, g)
+    if yogi:
+        v = jax.tree.map(
+            lambda v0, gg: v0 - (1 - beta2) * jnp.sign(v0 - gg * gg) * gg * gg,
+            state.v, g)
+    else:
+        v = jax.tree.map(lambda v0, gg: beta2 * v0 + (1 - beta2) * gg * gg, state.v, g)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - beta1 ** t
+    bc2 = 1 - beta2 ** t
+    new_params = jax.tree.map(
+        lambda p, mm, vv: (p.astype(jnp.float32)
+                           - server_lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+                           ).astype(p.dtype),
+        params, m, v)
+    return new_params, ServerOptState(m, v, step)

@@ -1,0 +1,16 @@
+"""Gradient compression operators (paper §II).
+
+All operators act on flat vectors or pytrees via ``tree_compress``; each
+returns ``(compressed_vector, meta)`` where ``compressed_vector`` is the dense
+representation of the compressed value (what the PS would reconstruct) and
+``meta`` carries bit-accounting for the benchmark harness.
+"""
+from repro.core.compression.sparsify import (  # noqa: F401
+    random_sparsify, topk_mask, topk_sparsify, randk_sparsify, rtopk_sparsify,
+    synchronous_mask_cycle)
+from repro.core.compression.quantize import (  # noqa: F401
+    qsgd, ternary, sign_compress, scaled_sign, blockwise_scaled_sign)
+from repro.core.compression.error_feedback import (  # noqa: F401
+    ef_compress, init_error_state, tree_ef_compress, tree_init_error)
+from repro.core.compression.coding import (  # noqa: F401
+    encode_positions, decode_positions, elias_gamma_bits, sparse_message_bits)

@@ -1,0 +1,60 @@
+"""Error accumulation / error feedback (paper §II.A.4, Alg. 3 & 6).
+
+    c_t = comp(x_t + e_t)          (eq. 20)
+    e_{t+1} = (x_t + e_t) - c_t    (eq. 21)
+
+Generic over any compressor ``comp(x) -> (compressed, meta)``; works on flat
+arrays or whole gradient pytrees (leaf-wise). The same wrapper implements the
+PS-side (downlink) EF of Alg. 3 lines 16-20 — it is the identical recursion
+applied to the aggregated message.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Compressor = Callable[[jnp.ndarray], Tuple[jnp.ndarray, Any]]
+
+
+def init_error_state(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.zeros_like(x, dtype=jnp.float32)
+
+
+def ef_compress(comp: Compressor, x: jnp.ndarray, e: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
+    """Returns (compressed, new_error, meta)."""
+    corrected = x.astype(jnp.float32) + e
+    c, meta = comp(corrected.astype(x.dtype))
+    e_new = corrected - c.astype(jnp.float32)
+    return c, e_new, meta
+
+
+def tree_init_error(tree: Any) -> Any:
+    return jax.tree.map(init_error_state, tree)
+
+
+def tree_ef_compress(comp: Compressor, tree: Any, e_tree: Any
+                     ) -> Tuple[Any, Any]:
+    """Leaf-wise EF over a gradient pytree. Returns (compressed_tree, new_e)."""
+    flat, treedef = jax.tree.flatten(tree)
+    e_flat = jax.tree.leaves(e_tree)
+    outs, errs = [], []
+    for x, e in zip(flat, e_flat):
+        c, e_new, _ = ef_compress(comp, x, e)
+        outs.append(c)
+        errs.append(e_new)
+    return jax.tree.unflatten(treedef, outs), jax.tree.unflatten(treedef, errs)
+
+
+def is_k_contraction(comp: Compressor, x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Check Def. 1 (eq. 22): E||x - comp(x)||^2 <= (1 - k/d) ||x||^2.
+
+    Returns the boolean for one realization (property tests average over
+    seeds for randomized compressors).
+    """
+    c, _ = comp(x)
+    lhs = jnp.sum((x.astype(jnp.float32) - c.astype(jnp.float32)) ** 2)
+    rhs = (1.0 - k / x.size) * jnp.sum(x.astype(jnp.float32) ** 2)
+    return lhs <= rhs + 1e-5 * jnp.maximum(rhs, 1.0)

@@ -1,0 +1,95 @@
+"""Quantization operators (paper §II.B).
+
+Every operator returns ``(dequantized_value, bits_per_element)`` — the dense
+reconstruction the PS would compute, plus the bit cost for the accounting
+benchmarks. Unbiased: qsgd, ternary. Biased (use with error feedback): sign,
+scaled_sign, blockwise_scaled_sign.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# QSGD — stochastic uniform quantization, eqs. (24)-(25) [30],[32]
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("levels",))
+def qsgd(key, u: jnp.ndarray, levels: int = 256) -> Tuple[jnp.ndarray, float]:
+    """L equal sub-intervals of [0,1]; round each |u_i|/||u|| stochastically
+    to a boundary of its sub-interval. Unbiased."""
+    uf = u.astype(jnp.float32)
+    norm = jnp.linalg.norm(uf.reshape(-1))
+    scaled = jnp.abs(uf) / jnp.maximum(norm, 1e-30)  # in [0,1]
+    x = scaled * levels
+    lower = jnp.floor(x)
+    frac = x - lower
+    up = jax.random.uniform(key, u.shape) < frac
+    q = (lower + up.astype(jnp.float32)) / levels
+    out = jnp.sign(uf) * q * norm
+    bits = math.log2(levels + 1) + 1  # level index + sign (norm amortized)
+    return out.astype(u.dtype), bits
+
+
+# ---------------------------------------------------------------------------
+# TernGrad — eqs. (26)-(28) [40]
+# ---------------------------------------------------------------------------
+@jax.jit
+def ternary(key, g: jnp.ndarray) -> Tuple[jnp.ndarray, float]:
+    gf = g.astype(jnp.float32)
+    gmax = jnp.max(jnp.abs(gf))
+    p = jnp.abs(gf) / jnp.maximum(gmax, 1e-30)
+    b = jax.random.uniform(key, g.shape) < p
+    out = gmax * jnp.sign(gf) * b.astype(jnp.float32)
+    return out.astype(g.dtype), math.log2(3)
+
+
+# ---------------------------------------------------------------------------
+# SignSGD — Alg. 5 [36]
+# ---------------------------------------------------------------------------
+@jax.jit
+def sign_compress(g: jnp.ndarray) -> Tuple[jnp.ndarray, float]:
+    return jnp.sign(g.astype(jnp.float32)).astype(g.dtype), 1.0
+
+
+# ---------------------------------------------------------------------------
+# Scaled sign — eq. (29) [38]; delta-approximate compressor (eq. 30)
+# ---------------------------------------------------------------------------
+@jax.jit
+def scaled_sign(g: jnp.ndarray) -> Tuple[jnp.ndarray, float]:
+    gf = g.astype(jnp.float32)
+    scale = jnp.mean(jnp.abs(gf))
+    return (scale * jnp.sign(gf)).astype(g.dtype), 1.0
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def blockwise_scaled_sign(g: jnp.ndarray, block: int = 4096
+                          ) -> Tuple[jnp.ndarray, float]:
+    """Block-wise scaled sign [39]: per-block L1 scale captures layer/block
+    magnitude variation, reducing quantization error."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    d = flat.size
+    n_blocks = -(-d // block)
+    pad = n_blocks * block - d
+    padded = jnp.pad(flat, (0, pad))
+    blocks = padded.reshape(n_blocks, block)
+    # mask padding out of the scale computation
+    valid = (jnp.arange(n_blocks * block) < d).reshape(n_blocks, block)
+    scale = (jnp.sum(jnp.abs(blocks) * valid, axis=1)
+             / jnp.maximum(jnp.sum(valid, axis=1), 1))
+    out = scale[:, None] * jnp.sign(blocks)
+    out = out.reshape(-1)[:d].reshape(g.shape)
+    return out.astype(g.dtype), 1.0 + 32.0 / block
+
+
+def delta_of_scaled_sign(g: jnp.ndarray) -> jnp.ndarray:
+    """Empirical delta such that ||Q(g)-g||^2 <= (1-delta)||g||^2 (eq. 30):
+    delta = ||g||_1^2 / (d * ||g||_2^2)."""
+    gf = g.astype(jnp.float32).reshape(-1)
+    l1 = jnp.sum(jnp.abs(gf))
+    l2sq = jnp.sum(gf * gf)
+    return l1 * l1 / (gf.size * jnp.maximum(l2sq, 1e-30))

@@ -1,0 +1,117 @@
+"""Sparsification operators (paper §II.A).
+
+All operators return ``(g_sparse, mask)`` with ``g_sparse = mask-selected
+values embedded densely`` — the dense stand-in for the sparse message (see
+DESIGN.md §9 on emulated sparse collectives). Bit accounting lives in
+``coding.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Random (unbiased) sparsification — Wangni et al. [18], eqs. (11)-(14)
+# ---------------------------------------------------------------------------
+def _variance_budget(lam: jnp.ndarray, absg: jnp.ndarray) -> jnp.ndarray:
+    """sum g_i^2 / p_i with p_i = min(lam*|g_i|, 1)."""
+    p = jnp.minimum(lam * absg, 1.0)
+    p = jnp.where(absg > 0, p, 1.0)  # zero coords contribute nothing
+    return jnp.sum(jnp.where(absg > 0, absg**2 / p, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("n_bisect",))
+def random_sparsify(key, g: jnp.ndarray, eps: float = 1.0,
+                    n_bisect: int = 40) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """P1 solution: p_i = min(lam*|g_i|, 1) with lam chosen by bisection so
+    that Var <= (1+eps) * ||g||^2 (eq. 13). Unbiased: E[out] = g."""
+    absg = jnp.abs(g.astype(jnp.float32))
+    target = (1.0 + eps) * jnp.sum(absg**2)
+
+    # Var(lam) is monotone decreasing; bracket lam in [lo, hi]
+    lo = 1.0 / (jnp.max(absg) + 1e-30)       # p_max = 1 -> most aggressive
+    hi = jnp.sum(absg) / (jnp.sum(absg**2) + 1e-30) * 4.0 + lo
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        v = _variance_budget(mid, absg)
+        # if variance still too high, need larger lam
+        return jax.lax.cond(v > target, lambda: (mid, hi), lambda: (lo, mid))
+
+    lo, hi = jax.lax.fori_loop(0, n_bisect, body, (lo, hi))
+    lam = hi  # guaranteed to satisfy the budget
+    p = jnp.where(absg > 0, jnp.minimum(lam * absg, 1.0), 0.0)
+    keep = jax.random.uniform(key, g.shape) < p
+    out = jnp.where(keep, g / jnp.maximum(p, 1e-30).astype(g.dtype), 0.0)
+    return out.astype(g.dtype), keep
+
+
+# ---------------------------------------------------------------------------
+# Top-K / Rand-K / R-top-K — eqs. (18)-(19), [23]
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_mask(g: jnp.ndarray, k: int) -> jnp.ndarray:
+    """S_top(|g|, K) as a boolean mask (eq. 18)."""
+    absg = jnp.abs(g.reshape(-1))
+    _, idx = jax.lax.top_k(absg, k)
+    mask = jnp.zeros(absg.shape, bool).at[idx].set(True)
+    return mask.reshape(g.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_sparsify(g: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    m = topk_mask(g, k)
+    return jnp.where(m, g, 0), m
+
+
+@functools.partial(jax.jit, static_argnames=("k", "unbiased"))
+def randk_sparsify(key, g: jnp.ndarray, k: int, unbiased: bool = False
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Uniformly random K-mask (eq. 19); optional d/K unbiasing scale [22]."""
+    d = g.size
+    idx = jax.random.choice(key, d, shape=(k,), replace=False)
+    mask = jnp.zeros((d,), bool).at[idx].set(True).reshape(g.shape)
+    out = jnp.where(mask, g, 0)
+    if unbiased:
+        out = out * (d / k)
+    return out.astype(g.dtype), mask
+
+
+@functools.partial(jax.jit, static_argnames=("r", "k"))
+def rtopk_sparsify(key, g: jnp.ndarray, r: int, k: int
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """R-top-K [23]: restrict to the top-R coordinates, keep K of them at
+    random (better compression, less bias than pure rand-K)."""
+    assert r >= k, "need R >= K"
+    absg = jnp.abs(g.reshape(-1))
+    _, top_idx = jax.lax.top_k(absg, r)
+    sel = jax.random.choice(key, r, shape=(k,), replace=False)
+    idx = top_idx[sel]
+    mask = jnp.zeros(absg.shape, bool).at[idx].set(True).reshape(g.shape)
+    return jnp.where(mask, g, 0), mask
+
+
+# ---------------------------------------------------------------------------
+# Synchronous sparse parameter averaging — eqs. (15)-(17)
+# ---------------------------------------------------------------------------
+def synchronous_mask_cycle(d: int, k: int, t: int) -> jnp.ndarray:
+    """Identical-across-devices mask M_t cycling through all coordinates.
+
+    Deterministic round-robin partition: coordinate i is sampled every
+    ceil(d/k) iterations, so the eq. (17) constraint holds with
+    tau_max = ceil(d/k).
+    """
+    period = -(-d // k)
+    start = (t % period) * k
+    idx = (start + jnp.arange(k)) % d
+    return jnp.zeros((d,), bool).at[idx].set(True)
+
+
+def sync_sparse_period(d: int, k: int) -> int:
+    """tau_max guaranteed by synchronous_mask_cycle."""
+    return -(-d // k)

@@ -1,0 +1,111 @@
+"""Hierarchical FL (paper §III.A, Alg. 9).
+
+Devices are grouped into L clusters around small-cell base stations (SBS);
+intra-cluster averaging runs every round, inter-cluster (via the macro BS)
+every H rounds. On the TPU mesh this maps to: intra-cluster = all-reduce over
+the intra-pod ``data`` axis, inter-cluster = all-reduce over the ``pod`` axis
+(DESIGN.md §3) — see ``launch/train.py`` for the pjit version. This module is
+the algorithm-level (simulation) implementation plus the latency model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class HFLConfig:
+    n_clusters: int = 7
+    inter_cluster_period: int = 4        # H in Alg. 9
+    fronthaul_speedup: float = 100.0     # MBS<->SBS vs MU<->SBS link speed
+    uplink_sparsity: float = 0.01        # MU->SBS (99% sparsification)
+    downlink_sparsity: float = 0.10      # SBS->MU
+    sbs_up_sparsity: float = 0.10        # SBS->MBS
+    sbs_down_sparsity: float = 0.10      # MBS->SBS
+    mbs_rate_penalty: float = 6.0        # MU<->MBS rate is this much worse
+                                         # than MU<->SBS (distance/path loss)
+
+
+def assign_clusters_hex(positions_xy: np.ndarray, centers_xy: np.ndarray
+                        ) -> np.ndarray:
+    """Nearest-SBS assignment (hexagonal layout in the chapter's example)."""
+    d = np.linalg.norm(positions_xy[:, None, :] - centers_xy[None, :, :], axis=-1)
+    return np.argmin(d, axis=1)
+
+
+def hex_centers(n_clusters: int = 7, pitch_m: float = 500.0) -> np.ndarray:
+    """Center cell + 6 neighbours (the chapter's 7-hex layout)."""
+    pts = [(0.0, 0.0)]
+    for k in range(n_clusters - 1):
+        ang = 2 * np.pi * k / 6
+        pts.append((pitch_m * np.cos(ang), pitch_m * np.sin(ang)))
+    return np.asarray(pts[:n_clusters])
+
+
+# ---------------------------------------------------------------------------
+# Aggregation steps (stacked-client layout, cluster ids as data)
+# ---------------------------------------------------------------------------
+def intra_cluster_average(client_models: PyTree, cluster_ids: jnp.ndarray,
+                          n_clusters: int) -> PyTree:
+    """Per-cluster mean; returns stacked (L, ...) cluster models (Alg. 9 l.9)."""
+    onehot = jax.nn.one_hot(cluster_ids, n_clusters, dtype=jnp.float32)  # (N,L)
+    counts = jnp.maximum(jnp.sum(onehot, axis=0), 1.0)  # (L,)
+
+    def leaf(x):
+        xf = x.astype(jnp.float32).reshape(x.shape[0], -1)
+        sums = onehot.T @ xf  # (L, D)
+        means = sums / counts[:, None]
+        return means.reshape((n_clusters,) + x.shape[1:]).astype(x.dtype)
+    return jax.tree.map(leaf, client_models)
+
+
+def inter_cluster_average(cluster_models: PyTree,
+                          cluster_sizes: Optional[jnp.ndarray] = None) -> PyTree:
+    """Alg. 9 line 13: global mean over cluster models, weighted by cluster
+    population (empty clusters carry zero weight — mixing their zero-models
+    in unweighted silently destroys the global model)."""
+    if cluster_sizes is None:
+        return jax.tree.map(lambda x: jnp.mean(x, axis=0), cluster_models)
+    w = cluster_sizes.astype(jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1.0)
+
+    def leaf(x):
+        wb = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(x.astype(jnp.float32) * wb, axis=0).astype(x.dtype)
+    return jax.tree.map(leaf, cluster_models)
+
+
+def broadcast_to_clients(cluster_models: PyTree, cluster_ids: jnp.ndarray) -> PyTree:
+    """Each client pulls its cluster's model."""
+    return jax.tree.map(lambda x: x[cluster_ids], cluster_models)
+
+
+# ---------------------------------------------------------------------------
+# Latency model (chapter's 5-7x speedup claim)
+# ---------------------------------------------------------------------------
+def hfl_round_latency(model_bits: float, mu_rate_bps: float, cfg: HFLConfig
+                      ) -> Tuple[float, float]:
+    """Returns (hfl_round_s, fl_round_s) for one global period.
+
+    HFL: H intra-cluster rounds (sparse MU<->SBS exchange over the *short*
+    SBS link) + one SBS<->MBS exchange over the fast fronthaul.
+    FL: H rounds of direct MU<->MBS exchange at the (slower) MU rate.
+    """
+    h = cfg.inter_cluster_period
+    up = model_bits * cfg.uplink_sparsity / mu_rate_bps
+    down = model_bits * cfg.downlink_sparsity / mu_rate_bps
+    fronthaul_rate = mu_rate_bps * cfg.fronthaul_speedup
+    sbs_up = model_bits * cfg.sbs_up_sparsity / fronthaul_rate
+    sbs_down = model_bits * cfg.sbs_down_sparsity / fronthaul_rate
+    hfl = h * (up + down) + (sbs_up + sbs_down)
+    # conventional FL: MU talks to the (farther, weaker-link) MBS directly
+    mbs_rate = mu_rate_bps / cfg.mbs_rate_penalty
+    fl = h * (model_bits * cfg.uplink_sparsity / mbs_rate
+              + model_bits * cfg.downlink_sparsity / mbs_rate)
+    return hfl, fl

@@ -1,0 +1,106 @@
+"""Decentralized consensus topology (paper §I.B, eqs. 7-8).
+
+Mixing matrices W built from graph Laplacians; convergence speed is governed
+by the spectral gap 1 - |lambda_2(W)|. The torus topology maps natively onto
+TPU ICI (DESIGN.md §3) and is what ``fl/decentralized.py`` uses with
+``lax.ppermute``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Adjacency builders
+# ---------------------------------------------------------------------------
+def ring(n: int) -> np.ndarray:
+    a = np.zeros((n, n))
+    for i in range(n):
+        a[i, (i + 1) % n] = a[i, (i - 1) % n] = 1
+    if n == 2:
+        a = np.minimum(a, 1)
+    np.fill_diagonal(a, 0)
+    return a
+
+
+def torus_2d(rows: int, cols: int) -> np.ndarray:
+    n = rows * cols
+    a = np.zeros((n, n))
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                j = ((r + dr) % rows) * cols + (c + dc) % cols
+                if j != i:
+                    a[i, j] = 1
+    return a
+
+
+def complete(n: int) -> np.ndarray:
+    a = np.ones((n, n))
+    np.fill_diagonal(a, 0)
+    return a
+
+
+def star(n: int) -> np.ndarray:
+    a = np.zeros((n, n))
+    a[0, 1:] = a[1:, 0] = 1
+    return a
+
+
+def erdos_renyi(seed: int, n: int, p: float) -> np.ndarray:
+    """Connected ER graph (retries with a ring overlay if disconnected)."""
+    rng = np.random.default_rng(seed)
+    a = (rng.random((n, n)) < p).astype(float)
+    a = np.triu(a, 1)
+    a = a + a.T
+    # guarantee connectivity by overlaying a ring
+    a = np.maximum(a, ring(n))
+    return a
+
+
+# ---------------------------------------------------------------------------
+# Mixing matrices
+# ---------------------------------------------------------------------------
+def laplacian_mixing(adj: np.ndarray) -> np.ndarray:
+    """Eq. (8): W = I - (D - A) / (d_max + 1). Symmetric, doubly stochastic."""
+    deg = adj.sum(axis=1)
+    d_max = deg.max()
+    lap = np.diag(deg) - adj
+    return np.eye(adj.shape[0]) - lap / (d_max + 1.0)
+
+
+def metropolis_hastings_mixing(adj: np.ndarray) -> np.ndarray:
+    """Degree-aware alternative: W_ij = 1/(1+max(d_i,d_j)) for edges."""
+    n = adj.shape[0]
+    deg = adj.sum(axis=1)
+    w = np.zeros((n, n))
+    for i in range(n):
+        for j in range(n):
+            if adj[i, j]:
+                w[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        w[i, i] = 1.0 - w[i].sum()
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics
+# ---------------------------------------------------------------------------
+def is_doubly_stochastic(w: np.ndarray, tol: float = 1e-8) -> bool:
+    return (np.allclose(w.sum(0), 1, atol=tol) and np.allclose(w.sum(1), 1, atol=tol)
+            and (w >= -tol).all())
+
+
+def spectral_gap(w: np.ndarray) -> float:
+    """1 - |lambda_2|; larger gap -> faster consensus."""
+    ev = np.sort(np.abs(np.linalg.eigvals(w)))[::-1]
+    return float(1.0 - ev[1]) if len(ev) > 1 else 1.0
+
+
+def consensus_rounds(w: np.ndarray, eps: float = 1e-3) -> float:
+    """Rounds for consensus error eps: ~ log(eps)/log(|lambda_2|)."""
+    ev = np.sort(np.abs(np.linalg.eigvals(w)))[::-1]
+    lam2 = ev[1] if len(ev) > 1 else 0.0
+    if lam2 <= 0:
+        return 1.0
+    return float(np.log(eps) / np.log(lam2))

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLMDataset  # noqa: F401
+from repro.data.partition import dirichlet_partition, shard_partition  # noqa: F401
+from repro.data.pipeline import FederatedLoader, batch_iterator  # noqa: F401

@@ -1,0 +1,1 @@
+"""FL runtime: vmapped clients, compressed aggregation, wireless simulation."""

@@ -1,0 +1,59 @@
+"""Client-side local computation (paper §II.C, Alg. 6/7 device side).
+
+``local_sgd`` runs H local SGD steps via ``lax.scan``; ``make_client_step``
+vmaps it over a stacked client axis. Model-agnostic: works with any
+``loss_fn(params, batch) -> (loss, metrics)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+LossFn = Callable[[PyTree, Dict[str, jnp.ndarray]], Tuple[jnp.ndarray, Dict]]
+
+
+def local_sgd(loss_fn: LossFn, params: PyTree, batches: Dict[str, jnp.ndarray],
+              lr: float, momentum: float = 0.0
+              ) -> Tuple[PyTree, PyTree, jnp.ndarray]:
+    """H local steps (eqs. 32-35). ``batches`` leaves have leading dim H.
+
+    Returns (delta = theta_H - theta_0, final params, mean loss).
+    """
+    grad_fn = jax.grad(lambda p, b: loss_fn(p, b)[0])
+    vel0 = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def step(carry, batch):
+        p, vel = carry
+        g = grad_fn(p, batch)
+        loss = loss_fn(p, batch)[0]
+        vel = jax.tree.map(lambda v, gg: momentum * v + gg.astype(jnp.float32), vel, g)
+        p = jax.tree.map(lambda pp, v: (pp.astype(jnp.float32) - lr * v).astype(pp.dtype),
+                         p, vel)
+        return (p, vel), loss
+
+    (p_final, _), losses = jax.lax.scan(step, (params, vel0), batches)
+    delta = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                         p_final, params)
+    return delta, p_final, jnp.mean(losses)
+
+
+def make_client_step(loss_fn: LossFn, lr: float, momentum: float = 0.0):
+    """vmap local_sgd over the leading client axis of ``batches``.
+
+    Params are broadcast (same global model for all clients, Alg. 7 line 4).
+    Returns f(params, stacked_batches) -> (stacked deltas, stacked losses).
+    """
+    def one(params, batches):
+        delta, _, loss = local_sgd(loss_fn, params, batches, lr, momentum)
+        return delta, loss
+    return jax.vmap(one, in_axes=(None, 0))
+
+
+def compute_gradient(loss_fn: LossFn, params: PyTree,
+                     batch: Dict[str, jnp.ndarray]) -> Tuple[PyTree, jnp.ndarray]:
+    """Single-step client (PSSGD / FedSGD)."""
+    (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+    return g, loss

@@ -1,0 +1,79 @@
+"""Decentralized learning (paper §I.B, Alg. 2).
+
+Two implementations of the consensus step (eq. 7):
+* ``gossip_round`` — dense W @ stacked-models (simulation scale, any graph);
+* ``ring_gossip_shard_map`` — ``lax.ppermute`` neighbor exchange over the
+  ``data`` mesh axis: the TPU-native form (ICI *is* a torus; DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+def consensus_step(client_params: PyTree, w: jnp.ndarray) -> PyTree:
+    """theta_i <- sum_j W_ij theta_j (eq. 7). client_params leaves: (N, ...)."""
+    def leaf(x):
+        flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
+        mixed = w.astype(jnp.float32) @ flat
+        return mixed.reshape(x.shape).astype(x.dtype)
+    return jax.tree.map(leaf, client_params)
+
+
+def gossip_round(client_params: PyTree, w: jnp.ndarray,
+                 stacked_batches: Dict[str, jnp.ndarray], loss_fn,
+                 lr: float) -> Tuple[PyTree, jnp.ndarray]:
+    """Alg. 2: consensus then local SGD step on each device."""
+    mixed = consensus_step(client_params, w)
+
+    def one(p, batch):
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
+        p = jax.tree.map(lambda pp, gg: (pp.astype(jnp.float32)
+                                         - lr * gg.astype(jnp.float32)).astype(pp.dtype),
+                         p, g)
+        return p, loss
+
+    new_params, losses = jax.vmap(one)(mixed, stacked_batches)
+    return new_params, jnp.mean(losses)
+
+
+# ---------------------------------------------------------------------------
+# TPU-native ring gossip via shard_map + ppermute
+# ---------------------------------------------------------------------------
+def ring_gossip_shard_map(mesh, axis: str = "data",
+                          self_weight: float = 1.0 / 3.0):
+    """Returns a pjit-able function mixing each shard's params with its two
+    ring neighbours over ``axis``: theta_i <- w*theta_i + w*theta_{i-1} +
+    w*theta_{i+1} (the ring Laplacian W of eq. 8 with d_max=2).
+
+    Input/output leaves carry a leading device axis sharded over ``axis``.
+    """
+    n = mesh.shape[axis]
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+
+    def mix_local(local: PyTree) -> PyTree:
+        def leaf(x):
+            left = jax.lax.ppermute(x, axis, fwd)
+            right = jax.lax.ppermute(x, axis, bwd)
+            w_n = (1.0 - self_weight) / 2.0
+            return (self_weight * x.astype(jnp.float32)
+                    + w_n * left.astype(jnp.float32)
+                    + w_n * right.astype(jnp.float32)).astype(x.dtype)
+        return jax.tree.map(leaf, local)
+
+    def apply(stacked: PyTree) -> PyTree:
+        spec = P(axis)
+        return jax.shard_map(
+            mix_local, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: spec, stacked),),
+            out_specs=jax.tree.map(lambda _: spec, stacked),
+        )(stacked)
+
+    return apply

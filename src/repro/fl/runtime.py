@@ -1,0 +1,202 @@
+"""Wireless FL simulation runtime (paper §III experiments).
+
+Host-side loop per round: sample the channel -> run the scheduling policy ->
+run the (jitted) FL round with the participation mask -> account wall-clock
+latency. This is the engine behind benchmarks for Fig. 1, Fig. 2, Table I.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scheduling, wireless
+from repro.core.hierarchy import (HFLConfig, hex_centers, assign_clusters_hex,
+                                  broadcast_to_clients, inter_cluster_average,
+                                  intra_cluster_average)
+from repro.fl import server as fl_server
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n_devices: int = 40
+    n_scheduled: int = 8
+    rounds: int = 100
+    local_steps: int = 1
+    lr: float = 0.05
+    policy: str = "random"  # random | round_robin | best_channel | latency |
+    #                         pf | age | bn2 | bc_bn2 | bn2_c | deadline
+    seed: int = 0
+    model_bits: float = 1e6          # uplink payload per round
+    comp_latency_s: float = 0.05     # per-device compute time (mean)
+    deadline_s: float = 5.0          # for the P4 policy
+    age_alpha: float = 1.0
+    server: str = "avg"
+    compressor: Optional[Callable] = None
+
+
+@dataclasses.dataclass
+class RoundLog:
+    round: int
+    latency_s: float
+    loss: float
+    n_scheduled: int
+    participation: np.ndarray
+
+
+def select_devices(cfg: SimConfig, t: int, rng: np.random.Generator,
+                   gains: np.ndarray, rates: np.ndarray, ages: np.ndarray,
+                   update_norms: np.ndarray, comp_lat: np.ndarray,
+                   wcfg: wireless.WirelessConfig) -> np.ndarray:
+    n, k = cfg.n_devices, cfg.n_scheduled
+    comm_lat = wireless.comm_latency(cfg.model_bits, rates)
+    if cfg.policy == "random":
+        return scheduling.random_schedule(rng, n, k)
+    if cfg.policy == "round_robin":
+        return scheduling.round_robin(t, n, k)
+    if cfg.policy == "best_channel":
+        return scheduling.best_channel(gains, k)
+    if cfg.policy == "latency":
+        return scheduling.latency_minimal(comm_lat, comp_lat, k)
+    if cfg.policy == "pf":
+        return scheduling.proportional_fair(gains, np.full(n, gains.mean()), k)
+    if cfg.policy == "bn2":
+        return scheduling.best_norm(update_norms, k)
+    if cfg.policy == "bc_bn2":
+        return scheduling.bc_bn2(gains, update_norms, min(2 * k, n), k)
+    if cfg.policy == "bn2_c":
+        return scheduling.bn2_c(update_norms, rates, int(cfg.model_bits / 32),
+                                cfg.deadline_s, k)
+    if cfg.policy == "age":
+        sub_bw = wcfg.bandwidth_hz / wcfg.n_subchannels
+        snr_mat = np.outer(gains, np.ones(wcfg.n_subchannels)) * \
+            rng.exponential(1.0, size=(n, wcfg.n_subchannels))
+        r_min = cfg.model_bits / cfg.deadline_s
+        mask, _ = scheduling.age_based_greedy(ages, snr_mat, r_min, sub_bw,
+                                              wcfg.n_subchannels, cfg.age_alpha)
+        return mask
+    if cfg.policy == "deadline":
+        return scheduling.deadline_greedy(comm_lat, comp_lat, cfg.deadline_s)
+    raise ValueError(f"unknown policy {cfg.policy}")
+
+
+def run_simulation(cfg: SimConfig, loss_fn, init_params: PyTree,
+                   sample_client_batches: Callable[[int, int], Dict[str, jnp.ndarray]],
+                   eval_fn: Optional[Callable[[PyTree], float]] = None,
+                   wcfg: Optional[wireless.WirelessConfig] = None
+                   ) -> List[RoundLog]:
+    """Run ``cfg.rounds`` rounds; returns per-round logs.
+
+    sample_client_batches(round, n_devices) -> stacked batches (N, H, ...).
+    """
+    wcfg = wcfg or wireless.WirelessConfig(n_devices=cfg.n_devices)
+    rng = np.random.default_rng(cfg.seed)
+    dist = wireless.sample_positions(rng, wcfg)
+    gains_large = wireless.path_gain(dist, wcfg)
+    ages = np.zeros(cfg.n_devices)
+    update_norms = np.ones(cfg.n_devices)
+
+    state = fl_server.init_fl_state(
+        init_params, cfg.n_devices, use_ef=cfg.compressor is not None,
+        server=cfg.server)
+    round_fn = jax.jit(functools.partial(
+        fl_server.fl_round, loss_fn=loss_fn, lr=cfg.lr,
+        compressor=cfg.compressor, server=cfg.server))
+
+    logs: List[RoundLog] = []
+    clock = 0.0
+    for t in range(cfg.rounds):
+        fading = wireless.sample_fading(rng, cfg.n_devices)
+        snr_lin = wireless.snr(dist, fading, wcfg)
+        rates = wireless.shannon_rate(snr_lin, wcfg.bandwidth_hz / cfg.n_scheduled)
+        comp_lat = rng.exponential(cfg.comp_latency_s, cfg.n_devices)
+
+        mask = select_devices(cfg, t, rng, snr_lin, rates, ages, update_norms,
+                              comp_lat, wcfg)
+        ages = scheduling.update_ages(ages, mask)
+
+        batches = sample_client_batches(t, cfg.n_devices)
+        state, metrics = round_fn(state, batches,
+                                  participation=jnp.asarray(mask, jnp.float32))
+
+        # wall-clock: synchronous round = slowest scheduled device
+        comm_lat = wireless.comm_latency(cfg.model_bits, rates)
+        if mask.any():
+            clock += float(np.max((comm_lat + comp_lat)[mask]))
+        loss = float(metrics["loss"])
+        if eval_fn is not None:
+            loss = eval_fn(state.params)
+        # update-aware policies observe last-round delta norms (proxy: loss)
+        update_norms = 0.9 * update_norms + 0.1 * rng.exponential(1.0, cfg.n_devices)
+        logs.append(RoundLog(t, clock, loss, int(mask.sum()), mask))
+    return logs
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical FL simulation (Alg. 9)
+# ---------------------------------------------------------------------------
+def run_hfl(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
+            sample_client_batches: Callable[[int, int], Dict[str, jnp.ndarray]],
+            eval_fn: Optional[Callable[[PyTree], float]] = None
+            ) -> List[RoundLog]:
+    """HFL: intra-cluster averaging every round, inter-cluster every H."""
+    rng = np.random.default_rng(cfg.seed)
+    centers = hex_centers(hcfg.n_clusters)
+    # uniform positions in the covering disk
+    theta = rng.random(cfg.n_devices) * 2 * np.pi
+    r = 750.0 * np.sqrt(rng.random(cfg.n_devices))
+    pos = np.stack([r * np.cos(theta), r * np.sin(theta)], -1)
+    cluster_ids_np = assign_clusters_hex(pos, centers)
+    cluster_ids = jnp.asarray(cluster_ids_np)
+    cluster_sizes = jnp.asarray(np.bincount(cluster_ids_np,
+                                            minlength=hcfg.n_clusters))
+
+    # per-client model replicas (cluster consensus keeps them loosely synced)
+    client_params = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (cfg.n_devices,) + p.shape), init_params)
+
+    from repro.fl.client import local_sgd
+
+    @jax.jit
+    def hfl_round(client_params, batches):
+        def one(p, b):
+            delta, p_new, loss = local_sgd(loss_fn, p, b, cfg.lr)
+            return p_new, loss
+        new_params, losses = jax.vmap(one)(client_params, batches)
+        cluster_models = intra_cluster_average(new_params, cluster_ids,
+                                               hcfg.n_clusters)
+        return cluster_models, new_params, jnp.mean(losses)
+
+    logs: List[RoundLog] = []
+    clock = 0.0
+    mu_rate = 1e7
+    for t in range(cfg.rounds):
+        batches = sample_client_batches(t, cfg.n_devices)
+        cluster_models, client_params, loss = hfl_round(client_params, batches)
+        if (t + 1) % hcfg.inter_cluster_period == 0:
+            global_model = inter_cluster_average(cluster_models, cluster_sizes)
+            cluster_models = jax.tree.map(
+                lambda g: jnp.broadcast_to(g[None], (hcfg.n_clusters,) + g.shape),
+                global_model)
+        client_params = broadcast_to_clients(cluster_models, cluster_ids)
+        hfl_lat, _ = hfl_round_latency_step(cfg, hcfg, mu_rate, t)
+        clock += hfl_lat
+        lv = float(loss) if eval_fn is None else eval_fn(
+            inter_cluster_average(cluster_models, cluster_sizes))
+        logs.append(RoundLog(t, clock, lv, cfg.n_devices,
+                             np.ones(cfg.n_devices, bool)))
+    return logs
+
+
+def hfl_round_latency_step(cfg: SimConfig, hcfg: HFLConfig, mu_rate: float,
+                           t: int):
+    from repro.core.hierarchy import hfl_round_latency
+    hfl_per_period, fl_per_period = hfl_round_latency(cfg.model_bits, mu_rate, hcfg)
+    return hfl_per_period / hcfg.inter_cluster_period, \
+        fl_per_period / hcfg.inter_cluster_period

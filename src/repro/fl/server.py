@@ -1,0 +1,134 @@
+"""Server-side round logic (paper Algs. 1, 3, 6, 7).
+
+``fl_round`` composes the full Alg. 6 pipeline:
+  broadcast -> H local steps -> client EF-compress(delta) -> masked aggregate
+  -> optional downlink EF-compress -> server optimizer (avg | slowmo | adam).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation as agg
+from repro.core.compression import error_feedback as ef
+from repro.fl.client import make_client_step
+
+PyTree = Any
+Compressor = Callable[[jnp.ndarray], Tuple[jnp.ndarray, Any]]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FLState:
+    params: PyTree
+    client_error: Optional[PyTree]    # stacked (N, ...) EF state, or None
+    server_error: Optional[PyTree]    # downlink EF state, or None
+    server_opt: Any                   # SlowMoState | ServerOptState | None
+    round: int = 0
+
+
+def init_fl_state(params: PyTree, n_clients: int, *, use_ef: bool = False,
+                  double_ef: bool = False, server: str = "avg") -> FLState:
+    client_error = None
+    if use_ef:
+        client_error = jax.tree.map(
+            lambda p: jnp.zeros((n_clients,) + p.shape, jnp.float32), params)
+    server_error = ef.tree_init_error(params) if double_ef else None
+    if server == "slowmo":
+        opt = agg.init_slowmo(params)
+    elif server in ("adam", "yogi"):
+        opt = agg.init_server_opt(params)
+    else:
+        opt = None
+    return FLState(params, client_error, server_error, opt, 0)
+
+
+def fl_round(state: FLState, stacked_batches: Dict[str, jnp.ndarray],
+             loss_fn, *, lr: float, participation: Optional[jnp.ndarray] = None,
+             compressor: Optional[Compressor] = None, server: str = "avg",
+             server_lr: float = 1.0, slowmo_beta: float = 0.5,
+             momentum: float = 0.0) -> Tuple[FLState, Dict[str, jnp.ndarray]]:
+    """One FL round. stacked_batches leaves: (N, H, ...)."""
+    client_step = make_client_step(loss_fn, lr, momentum)
+    deltas, losses = client_step(state.params, stacked_batches)
+
+    # --- client-side compression with error feedback (Alg. 6 lines 8-11) ---
+    # the compressor is vmapped over the client axis: each device compresses
+    # its *own* delta (per-client top-k masks, per-client scales).
+    client_error = state.client_error
+    if compressor is not None:
+        comp_one = lambda x: compressor(x)[0]  # noqa: E731
+        if client_error is not None:
+            flat_d, treedef = jax.tree.flatten(deltas)
+            flat_e = jax.tree.leaves(client_error)
+            cs, es = [], []
+            for d, e in zip(flat_d, flat_e):
+                corrected = d.astype(jnp.float32) + e
+                c = jax.vmap(comp_one)(corrected)
+                cs.append(c)
+                es.append(corrected - c)
+            deltas = jax.tree.unflatten(treedef, cs)
+            client_error = jax.tree.unflatten(treedef, es)
+        else:
+            deltas = jax.tree.map(lambda d: jax.vmap(comp_one)(d), deltas)
+
+    mean_delta = agg.fedavg(deltas, participation)
+
+    # --- downlink (PS-side) EF compression (Alg. 6 lines 15-17) ---
+    server_error = state.server_error
+    if compressor is not None and server_error is not None:
+        mean_delta, server_error = ef.tree_ef_compress(
+            compressor, mean_delta, server_error)
+
+    # --- server update ---
+    opt = state.server_opt
+    if server == "slowmo":
+        stacked = jax.tree.map(lambda d: d[None], mean_delta)
+        new_params, opt = agg.slowmo(state.params, stacked, opt,
+                                     inner_lr=lr, alpha=server_lr, beta=slowmo_beta)
+    elif server in ("adam", "yogi"):
+        stacked = jax.tree.map(lambda d: d[None], mean_delta)
+        new_params, opt = agg.fedadam(state.params, stacked, opt,
+                                      server_lr=server_lr, yogi=(server == "yogi"))
+    else:  # plain averaging: theta += mean_delta
+        new_params = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) + server_lr * d).astype(p.dtype),
+            state.params, mean_delta)
+
+    metrics = {"loss": jnp.mean(losses),
+               "delta_norm": _global_norm(mean_delta)}
+    return FLState(new_params, client_error, server_error, opt,
+                   state.round + 1), metrics
+
+
+def _neg(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda x: -x, tree)
+
+
+def _global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# PSSGD (Alg. 1): one synchronous gradient-averaging step
+# ---------------------------------------------------------------------------
+def pssgd_round(params: PyTree, stacked_batches: Dict[str, jnp.ndarray],
+                loss_fn, *, lr: float,
+                compressor: Optional[Compressor] = None
+                ) -> Tuple[PyTree, jnp.ndarray]:
+    """theta <- theta - lr * mean_i g_i (eq. 6), optional compression."""
+    def one(p, batch):
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
+        return g, loss
+    grads, losses = jax.vmap(one, in_axes=(None, 0))(params, stacked_batches)
+    if compressor is not None:
+        grads = jax.tree.map(lambda g: compressor(g)[0], grads)
+    mean_g = agg.average_gradients(grads)
+    new_params = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, mean_g)
+    return new_params, jnp.mean(losses)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compression hot spots (DESIGN.md §7).
+
+The chapter's per-round compression runs over every gradient element
+(O(d), d up to 4e11 at llama3-405b scale) — that is the kernel-worthy layer.
+Kernels are TPU-targeted (pl.pallas_call + explicit BlockSpec VMEM tiling)
+and validated in interpret mode on CPU against the pure-jnp oracles in ref.py.
+"""
+from repro.kernels.ops import (  # noqa: F401
+    block_topk, qsgd_quantize, sign_ef_compress)

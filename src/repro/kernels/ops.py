@@ -1,0 +1,75 @@
+"""Jit'd public wrappers for the Pallas compression kernels.
+
+Handle flattening/padding of arbitrary gradient arrays into the (rows, cols)
+tile layout, and expose ``interpret=`` for CPU validation (default: interpret
+on non-TPU backends).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qsgd import qsgd_pallas
+from repro.kernels.sign_ef import sign_ef_pallas
+from repro.kernels.topk_mask import block_topk_pallas
+
+_COLS = 1024
+_ROWS_ALIGN = 8
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_tiles(x: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
+    """Flatten + zero-pad to (rows, _COLS) with rows % 8 == 0."""
+    flat = x.reshape(-1)
+    n = flat.size
+    per_tile = _COLS * _ROWS_ALIGN
+    pad = (-n) % per_tile
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, _COLS), n
+
+
+def _from_tiles(tiles: jnp.ndarray, n: int, shape, dtype) -> jnp.ndarray:
+    return tiles.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k_frac", "interpret"))
+def block_topk(x: jnp.ndarray, k_frac: float = 0.01,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """Keep ~k_frac of entries per 1024-element block (phi in eq. 10)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    tiles, n = _to_tiles(x)
+    k = max(1, int(k_frac * _COLS))
+    out = block_topk_pallas(tiles, k, interpret=interpret)
+    return _from_tiles(out, n, x.shape, x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "interpret"))
+def qsgd_quantize(key, x: jnp.ndarray, levels: int = 256,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Unbiased stochastic uniform quantization of x (eq. 24-25)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    tiles, n = _to_tiles(x)
+    u = jax.random.uniform(key, tiles.shape, jnp.float32)
+    norm = jnp.linalg.norm(x.astype(jnp.float32).reshape(-1)).reshape(1, 1)
+    out = qsgd_pallas(tiles, u, norm, levels, interpret=interpret)
+    return _from_tiles(out, n, x.shape, x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sign_ef_compress(x: jnp.ndarray, e: jnp.ndarray,
+                     interpret: bool | None = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused c = blockscale*sign(x+e), e' = (x+e) - c. e must be fp32 and
+    x-shaped. Returns (c, e') with x's shape, fp32."""
+    interpret = _default_interpret() if interpret is None else interpret
+    tiles_x, n = _to_tiles(x)
+    tiles_e, _ = _to_tiles(e)
+    c, e_new = sign_ef_pallas(tiles_x, tiles_e, interpret=interpret)
+    return (_from_tiles(c, n, x.shape, jnp.float32),
+            _from_tiles(e_new, n, x.shape, jnp.float32))

@@ -1,0 +1,177 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes; record memory/cost/collective analyses for the roofline report.
+
+MUST be run as a fresh process (sets XLA device-count flags before jax init):
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import json
+import time
+import traceback
+
+import jax
+from numpy import prod as np_prod
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.launch.hlo_analysis import collective_stats, hlo_compute_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_case
+from repro.launch.steps import TrainPolicy
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "experiments", "artifacts")
+
+# TPU v5e hardware constants (roofline targets)
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+
+
+def policy_from_name(name: str, total_batch_seq=None) -> TrainPolicy:
+    table = {
+        "baseline": TrainPolicy(mode="pssgd", compression="none"),
+        "bf16": TrainPolicy(mode="pssgd", compression="bf16"),
+        "int8_ef": TrainPolicy(mode="pssgd", compression="int8",
+                               error_feedback=True),
+        "sign_ef": TrainPolicy(mode="pssgd", compression="sign",
+                               error_feedback=True),
+        "localsgd_h4": TrainPolicy(mode="localsgd", compression="none",
+                                   local_steps=4),
+        "localsgd_int8": TrainPolicy(mode="localsgd", compression="int8",
+                                     error_feedback=True, local_steps=4),
+        "fsdp": TrainPolicy(mode="fsdp", compression="none",
+                            opt_state_dtype="bfloat16"),
+    }
+    return table[name]
+
+
+def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
+             policy_name: str = "baseline", verbose: bool = True,
+             mesh_shape: str | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if mesh_shape:  # perf-phase exploration (e.g. "256x1" DP-heavy)
+        dims = tuple(int(x) for x in mesh_shape.split("x"))
+        mesh = jax.make_mesh(dims, ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    policy = policy_from_name(policy_name)
+    # llama3-405b cannot replicate params over the data axis -> FSDP mode
+    if shape.kind == "train" and arch == "llama3-405b" and policy.mode == "pssgd" \
+            and policy_name == "baseline":
+        policy = policy_from_name("fsdp")
+        policy_name = "fsdp(auto:405b)"
+
+    record = {
+        "arch": arch, "shape": shape_name, "policy": policy_name,
+        "mesh": mesh_shape or ("2x16x16" if multi_pod else "16x16"),
+        "n_devices": int(np_prod(mesh.devices.shape)),
+        "model_params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "status": "ok",
+    }
+    try:
+        t0 = time.time()
+        with mesh:
+            fn, args, shardings = build_case(cfg, shape, mesh, policy)
+            jitted = jax.jit(fn, in_shardings=shardings)
+            lowered = jitted.lower(*args)
+            record["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            record["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        }
+        cost = compiled.cost_analysis()
+        record["cost"] = {k: cost.get(k) for k in
+                          ("flops", "bytes accessed", "optimal_seconds")
+                          if k in cost}
+        hlo = compiled.as_text()
+        record["collectives"] = collective_stats(hlo)
+        record["parsed"] = hlo_compute_stats(hlo)  # loop-multiplied (see
+        # hlo_analysis.py: XLA-CPU cost_analysis counts scan bodies once)
+        record["hlo_bytes"] = len(hlo)
+        _save_hlo(record, hlo)
+        if verbose:
+            print(f"[{arch} x {shape_name} x {record['mesh']} {policy_name}] "
+                  f"lower {record['lower_s']}s compile {record['compile_s']}s "
+                  f"flops={record['cost'].get('flops', 0):.3e} "
+                  f"coll_bytes={sum(v['bytes'] for v in record['collectives'].values()):.3e}")
+    except Exception as e:  # noqa: BLE001 - record failures as data
+        record["status"] = "fail"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[{arch} x {shape_name}] FAIL {record['error'][:200]}")
+    return record
+
+
+def _case_name(record: dict) -> str:
+    return (f"{record['arch']}__{record['shape']}__{record['mesh']}"
+            f"__{record['policy'].replace('/', '_')}")
+
+
+def _save_hlo(record: dict, hlo: str, out_dir: str = ARTIFACT_DIR) -> None:
+    import gzip
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, _case_name(record) + ".hlo.gz")
+    with gzip.open(path, "wt") as f:
+        f.write(hlo)
+
+
+def save_record(record: dict, out_dir: str = ARTIFACT_DIR) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, _case_name(record) + ".json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--policy", default="baseline")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override mesh, e.g. 256x1 (data x model)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+
+    cases = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cases.append((arch, shape))
+    else:
+        assert args.arch and args.shape
+        cases.append((args.arch, args.shape))
+
+    n_fail = 0
+    for arch, shape in cases:
+        rec = run_case(arch, shape, multi_pod=args.multi_pod,
+                       policy_name=args.policy, mesh_shape=args.mesh_shape)
+        save_record(rec, args.out)
+        n_fail += rec["status"] != "ok"
+    print(f"done: {len(cases) - n_fail}/{len(cases)} ok")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,233 @@
+"""Collective-byte accounting from compiled HLO text (DESIGN.md §8).
+
+cost_analysis() has no collective bytes, so we parse the optimized HLO:
+* every all-reduce / all-gather / reduce-scatter / all-to-all /
+  collective-permute instruction contributes its wire bytes;
+* instructions inside while-loop bodies (lax.scan over layers / chunks) are
+  multiplied by the loop trip count, read from the loop's
+  ``backend_config={"known_trip_count":{"n":...}}`` (nested loops compose).
+
+Wire-byte model per participating device (ring algorithms, group size n):
+  all-reduce:     2 * |result| * (n-1)/n
+  all-gather:     |result| * (n-1)/n
+  reduce-scatter: |result| * (n-1)          (operand = n * result)
+  all-to-all:     |result| * (n-1)/n
+  collective-permute: |result|
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"= (?P<lhs>.*?)\b(?P<kind>all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start)?\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?body=%?(?P<body>[\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if line and not line[0].isspace() and line.startswith(("%", "ENTRY")):
+            name = line.replace("ENTRY", "").strip().split(" ")[0].split("(")[0]
+            cur = name.lstrip("%")
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _loop_multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """Effective execution multiplier per computation (nested loops compose)."""
+    trip: Dict[str, int] = {}
+    parent: Dict[str, str] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if not m:
+                continue
+            body = m.group("body")
+            t = _TRIP_RE.search(line)
+            trip[body] = int(t.group(1)) if t else 1
+            parent[body] = cname
+
+    mult: Dict[str, float] = {}
+
+    def eff(name: str, depth: int = 0) -> float:
+        if depth > 20:
+            return 1.0
+        if name in mult:
+            return mult[name]
+        m = trip.get(name, 1.0)
+        p = parent.get(name)
+        out = m * (eff(p, depth + 1) if p else 1.0)
+        mult[name] = out
+        return out
+
+    for name in comps:
+        eff(name)
+    return mult
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def collective_stats(hlo: str) -> Dict[str, Dict[str, float]]:
+    """{op_kind: {count, bytes}} with loop multipliers applied."""
+    comps = _split_computations(hlo)
+    mults = _loop_multipliers(comps)
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0.0, "bytes": 0.0})
+    for cname, lines in comps.items():
+        mult = mults.get(cname, 1.0)
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m:
+                continue
+            kind = m.group("kind")
+            res_bytes = _shape_bytes(m.group("lhs"))
+            n = _group_size(line)
+            if kind == "all-reduce":
+                wire = 2.0 * res_bytes * (n - 1) / max(n, 1)
+            elif kind == "all-gather":
+                wire = res_bytes * (n - 1) / max(n, 1)
+            elif kind == "reduce-scatter":
+                wire = res_bytes * (n - 1)
+            elif kind == "all-to-all":
+                wire = res_bytes * (n - 1) / max(n, 1)
+            else:
+                wire = res_bytes
+            stats[kind]["count"] += mult
+            stats[kind]["bytes"] += wire * mult
+    return dict(stats)
+
+
+def total_collective_bytes(hlo: str) -> float:
+    return sum(v["bytes"] for v in collective_stats(hlo).values())
+
+
+# ---------------------------------------------------------------------------
+# FLOPs / HBM-bytes accounting with loop multipliers (XLA-CPU cost_analysis
+# counts while bodies ONCE — discovered & validated in EXPERIMENTS.md §Perf).
+# ---------------------------------------------------------------------------
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%(?P<name>[\w\.\-]+)\s*=\s*"
+                       r"(?P<type>[^=]*?)\s+(?P<op>[\w\-]+)\((?P<args>[^)]*)\)")
+_DIMS_RE = re.compile(r"\w+\[([\d,]*)\]")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+# HBM-traffic op set for the TPU target: dots/fusions/copies/collectives/
+# scatter-gather touch HBM; bare elementwise chains (add/mul/convert/...)
+# appear unfused in CPU HLO but fuse on TPU, so they are NOT counted —
+# their traffic is approximated by the fusion/copy call sites around them.
+_BYTES_OPS = {"fusion", "dot", "convolution", "copy", "all-reduce",
+              "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute", "dynamic-update-slice",
+              "scatter", "gather", "reduce", "sort", "rng", "custom-call"}
+
+
+def _first_dims(type_str: str):
+    m = _DIMS_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(1).split(",") if d]
+
+
+def hlo_compute_stats(hlo: str) -> Dict[str, float]:
+    """{"flops", "hbm_bytes"} per device, loop-multiplied.
+
+    flops: 2 * numel(result) * prod(lhs contracting dims) per dot (+ rough
+    conv estimate). hbm_bytes: result+operand bytes of fusion/dot/collective/
+    copy-level instructions (fusion internals are VMEM-resident on the TPU
+    target, so call-site accounting is the right HBM model).
+    """
+    comps = _split_computations(hlo)
+    mults = _loop_multipliers(comps)
+
+    # computations whose cost is accounted at their call site
+    called = set()
+    for lines in comps.values():
+        for line in lines:
+            for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", line):
+                called.add(m.group(1))
+
+    flops = 0.0
+    hbm = 0.0
+    for cname, lines in comps.items():
+        if cname in called:
+            continue
+        mult = mults.get(cname, 1.0)
+        shapes: Dict[str, str] = {}
+        parsed = []
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            shapes[m.group("name")] = m.group("type")
+            parsed.append((m, line))
+        for m, line in parsed:
+            op = m.group("op")
+            tstr = m.group("type")
+            if op == "dot":
+                res_dims = _first_dims(tstr) or []
+                numel = 1
+                for d in res_dims:
+                    numel *= d
+                lhs_name = m.group("args").split(",")[0].strip().lstrip("%")
+                lhs_dims = _first_dims(shapes.get(lhs_name, "")) or []
+                cm = _LHS_CONTRACT_RE.search(line)
+                contract = 1
+                if cm and lhs_dims:
+                    for i in [int(x) for x in cm.group(1).split(",") if x]:
+                        if i < len(lhs_dims):
+                            contract *= lhs_dims[i]
+                flops += 2.0 * numel * contract * mult
+            elif op == "convolution":
+                res_dims = _first_dims(tstr) or []
+                numel = 1
+                for d in res_dims:
+                    numel *= d
+                flops += 16.0 * numel * mult  # depthwise K=4 fp32 rough
+            if op in _BYTES_OPS:
+                b = _shape_bytes(tstr)
+                for arg in m.group("args").split(","):
+                    an = arg.strip().lstrip("%")
+                    if an in shapes:
+                        b += _shape_bytes(shapes[an])
+                hbm += b * mult
+    return {"flops": flops, "hbm_bytes": hbm}

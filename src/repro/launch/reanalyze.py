@@ -1,0 +1,37 @@
+"""Re-derive parsed FLOPs/bytes/collectives for artifacts from saved HLO
+(no recompilation). Run after changing hlo_analysis accounting rules:
+    PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+import glob
+import gzip
+import json
+import os
+
+from repro.launch.hlo_analysis import collective_stats, hlo_compute_stats
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "experiments", "artifacts")
+
+
+def main() -> None:
+    updated = missing = 0
+    for jpath in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        hpath = jpath.replace(".json", ".hlo.gz")
+        if not os.path.exists(hpath):
+            missing += 1
+            continue
+        with open(jpath) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        hlo = gzip.open(hpath, "rt").read()
+        rec["parsed"] = hlo_compute_stats(hlo)
+        rec["collectives"] = collective_stats(hlo)
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        updated += 1
+    print(f"updated {updated}, missing hlo for {missing}")
+
+
+if __name__ == "__main__":
+    main()

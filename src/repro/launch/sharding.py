@@ -1,0 +1,181 @@
+"""Divisibility-aware sharding rules (DESIGN.md §6).
+
+Every param leaf gets a PartitionSpec from a name-keyed rule table:
+* ``tp``   — the tensor-parallel dim, sharded over ``model``;
+* ``fsdp`` — the fully-sharded dim, sharded over the data axes (only in
+  fsdp mode — the paper-faithful FL baseline replicates params over data,
+  because each "client" holds the full model).
+
+Dims are only sharded when divisible by the axis size (gemma 8 heads,
+whisper's odd 51865 vocab etc. fall back to replication on that dim).
+Stacked-layer leading axes are never sharded (lax.scan runs over them).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.mesh import data_axes
+
+PyTree = Any
+
+# name -> (tp_dim, fsdp_dim), negative indices into the *unstacked* trailing
+# dims. None = do not shard that role.
+_RULES: Dict[str, Tuple[Optional[int], Optional[int]]] = {
+    "embed": (-2, -1),        # (V, d)
+    "lm_head": (-1, -2),      # (d, V)
+    "pos_embed": (None, None),
+    "wq": (-1, -2), "wk": (-1, -2), "wv": (-1, -2), "wo": (-2, -1),
+    "w_gate": (-1, -2), "w_up": (-1, -2), "w_down": (-2, -1),
+    "b_up": (-1, None), "b_down": (None, None),
+    "router": (None, None),
+    "shared_gate": (-1, -2), "shared_up": (-1, -2), "shared_down": (-2, -1),
+    # mamba
+    "in_proj": (-1, -2), "conv_w": (-1, None), "conv_b": (-1, None),
+    "x_proj": (-2, -1), "dt_proj": (-1, -2), "dt_bias": (-1, None),
+    "A_log": (-2, None), "D": (-1, None), "out_proj": (-2, -1),
+    # rg-lru
+    "in_x": (-1, -2), "in_gate": (-1, -2), "w_a": (-1, -2), "w_i": (-1, -2),
+    "b_a": (-1, None), "b_i": (-1, None), "Lambda": (-1, None),
+    # norms / scalars
+    "scale": (None, None), "bias": (None, None),
+    "gate_attn": (None, None), "gate_mlp": (None, None),
+}
+
+# MoE expert stacks: leaf names match w_gate/w_up/w_down but with a leading
+# expert dim in the trailing-3 position -> tp on the expert axis instead.
+_MOE_EXPERT_NAMES = {"w_gate": (-3, -2), "w_up": (-3, -2), "w_down": (-3, -1)}
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    if isinstance(last, jax.tree_util.DictKey):
+        return str(last.key)
+    if isinstance(last, jax.tree_util.GetAttrKey):
+        return str(last.name)
+    return str(getattr(last, "idx", last))
+
+
+def _in_moe_subtree(path) -> bool:
+    names = [
+        str(p.key) if isinstance(p, jax.tree_util.DictKey) else "" for p in path
+    ]
+    return "mlp" in names  # expert stacks live under blocks/mlp with 3 trailing dims
+
+
+def param_spec(path, shape: Tuple[int, ...], cfg: ModelConfig, mesh, *,
+               fsdp: bool, extra_leading: int = 0) -> P:
+    """PartitionSpec for one param leaf.
+
+    ``extra_leading``: number of known stacked axes beyond the rule's trailing
+    dims that are NOT layer stacks (e.g. the client axis in localsgd mode is
+    handled separately, not here).
+    """
+    name = _leaf_name(path)
+    ndim = len(shape)
+    rule = _RULES.get(name)
+    # distinguish expert stacks: w_gate under an moe mlp has trailing 3 dims
+    if name in _MOE_EXPERT_NAMES and cfg.n_experts and _in_moe_subtree(path):
+        # unstacked expert leaf is 3-D (E, d, f); with layer stack 4-D
+        if ndim >= 3:
+            rule = _MOE_EXPERT_NAMES[name]
+    # attention head-boundary rule: sharding q/k/v/o across model is only
+    # clean when whole heads land on each shard — otherwise XLA splits
+    # head_dim and reshards activations every layer (huge n=2 all-reduces).
+    msize_ = mesh.shape["model"]
+    if name in ("wq", "wo") and cfg.n_heads and cfg.n_heads % msize_ != 0:
+        rule = (None, rule[1] if rule else None)
+    if name in ("wk", "wv") and cfg.n_kv_heads and cfg.n_kv_heads % msize_ != 0:
+        rule = (None, rule[1] if rule else None)
+    if rule is None:
+        return P()
+    tp_dim, fsdp_dim = rule
+    spec = [None] * ndim
+    msize = mesh.shape["model"]
+
+    def place(dim: Optional[int], axis) -> None:
+        if dim is None:
+            return
+        idx = ndim + dim  # negative from end
+        if idx < 0 or idx >= ndim:
+            return
+        size = shape[idx]
+        axis_size = (np.prod([mesh.shape[a] for a in axis]) if isinstance(axis, tuple)
+                     else mesh.shape[axis])
+        if size % axis_size == 0 and spec[idx] is None:
+            spec[idx] = axis
+
+    place(tp_dim, "model")
+    if fsdp:
+        place(fsdp_dim, data_axes(mesh))
+    return P(*spec)
+
+
+def param_shardings(cfg: ModelConfig, param_tree: PyTree, mesh, *,
+                    fsdp: bool = False) -> PyTree:
+    """NamedSharding tree matching ``param_tree`` (arrays or SDS)."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(param_tree)
+    out = [NamedSharding(mesh, param_spec(p, leaf.shape, cfg, mesh, fsdp=fsdp))
+           for p, leaf in leaves]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def stacked_client_shardings(cfg: ModelConfig, param_tree: PyTree, mesh) -> PyTree:
+    """localsgd mode: leading client axis sharded over the data axes; the
+    per-client param keeps its TP sharding."""
+    dp = data_axes(mesh)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(param_tree)
+    out = []
+    for p, leaf in leaves:
+        inner = param_spec(p, leaf.shape[1:], cfg, mesh, fsdp=False)
+        out.append(NamedSharding(mesh, P(dp, *inner)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(batch_tree: PyTree, mesh) -> PyTree:
+    """Shard dim 0 (batch) over the data axes; replicate if indivisible."""
+    dp = data_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def leaf(x):
+        if x.ndim >= 1 and x.shape[0] % n == 0 and x.shape[0] > 0:
+            return NamedSharding(mesh, P(dp, *([None] * (x.ndim - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(leaf, batch_tree)
+
+
+def cache_shardings(cfg: ModelConfig, cache_tree: PyTree, mesh,
+                    batch: int) -> PyTree:
+    """Decode caches: shard the batch dim over data axes when divisible;
+    kv-head dims over model when divisible. Cache layouts put batch at dim 1
+    (dim 0 is the stacked layer axis) except hybrid 'rest' entries (dim 0)."""
+    dp = data_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in dp]))
+    msize = mesh.shape["model"]
+    # feature dims eligible for model sharding (NOT head_dim — splitting it
+    # forces expensive SPMD reshards inside attention)
+    feature_sizes = {s for s in (cfg.n_kv_heads, cfg.d_inner, cfg.lru_width)
+                     if s and s % msize == 0}
+
+    def leaf(x):
+        spec = [None] * x.ndim
+        for i, s in enumerate(x.shape):
+            if s == batch and batch % n == 0:
+                spec[i] = dp
+                break
+        for i in range(x.ndim - 1, 0, -1):
+            if spec[i] is None and x.shape[i] in feature_sizes:
+                spec[i] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(leaf, cache_tree)
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,99 @@
+"""ShapeDtypeStruct input builders for every (arch x shape) case.
+
+No allocation: params/opt/EF come from ``jax.eval_shape`` over the real init
+functions; batches/caches are SDS stand-ins (weak-type-correct, shardable).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+
+from repro.configs.base import (LONG_CONTEXT_WINDOW, ModelConfig, SHAPES,
+                                ShapeSpec)
+from repro.launch import sharding as shard_rules
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import data_axes
+from repro.models import transformer as tf
+
+PyTree = Any
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, SDS]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": SDS((b, s), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = SDS((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        out["vision_embeds"] = SDS((b, cfg.n_vision_tokens, cfg.vision_dim),
+                                   jnp.dtype(cfg.dtype))
+    if cfg.family == "audio":
+        out["audio_embeds"] = SDS((b, cfg.n_audio_frames, cfg.d_model),
+                                  jnp.dtype(cfg.dtype))
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b = shape.global_batch
+    cache = jax.eval_shape(
+        lambda: tf.init_decode_cache(cfg, b, shape.seq_len,
+                                     sliding=shape.sliding_window_decode))
+    out = {"cache": cache,
+           "token": SDS((b, 1), jnp.int32),
+           "pos": SDS((), jnp.int32)}
+    return out
+
+
+def train_case(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               policy: steps_mod.TrainPolicy):
+    """Returns (step_fn, args_sds tuple, in_shardings tuple)."""
+    init = steps_mod.make_init_fn(cfg, policy, mesh)
+    state_sds = jax.eval_shape(init, jax.random.PRNGKey(0))
+    state_sh = steps_mod.state_shardings(cfg, policy, mesh, state_sds)
+    batch_sds = batch_specs(cfg, shape)
+    batch_sh = shard_rules.batch_shardings(batch_sds, mesh)
+    step_fn = steps_mod.make_train_step(cfg, policy, mesh)
+    return step_fn, (state_sds, batch_sds), (state_sh, batch_sh)
+
+
+def prefill_case(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    if cfg.n_experts:
+        from repro.models.moe import set_expert_parallel_mesh
+        set_expert_parallel_mesh(mesh)
+    params_sds = jax.eval_shape(lambda k: tf.init_params(cfg, k),
+                                jax.random.PRNGKey(0))
+    params_sh = shard_rules.param_shardings(cfg, params_sds, mesh, fsdp=False)
+    batch_sds = batch_specs(cfg, shape)
+    batch_sh = shard_rules.batch_shardings(batch_sds, mesh)
+    step_fn = steps_mod.make_prefill_step(cfg)
+    return step_fn, (params_sds, batch_sds), (params_sh, batch_sh)
+
+
+def decode_case(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    if cfg.n_experts:
+        from repro.models.moe import set_expert_parallel_mesh
+        set_expert_parallel_mesh(mesh)
+    params_sds = jax.eval_shape(lambda k: tf.init_params(cfg, k),
+                                jax.random.PRNGKey(0))
+    params_sh = shard_rules.param_shardings(cfg, params_sds, mesh, fsdp=False)
+    d = decode_specs(cfg, shape)
+    cache_sh = shard_rules.cache_shardings(cfg, d["cache"], mesh,
+                                           shape.global_batch)
+    tok_sh = shard_rules.batch_shardings({"token": d["token"]}, mesh)["token"]
+    pos_sh = shard_rules.replicated(mesh)
+    step_fn = steps_mod.make_decode_step(
+        cfg, circular=shape.sliding_window_decode)
+    args = (params_sds, d["cache"], d["token"], d["pos"])
+    shardings = (params_sh, cache_sh, tok_sh, pos_sh)
+    return step_fn, args, shardings
+
+
+def build_case(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               policy: steps_mod.TrainPolicy):
+    if shape.kind == "train":
+        return train_case(cfg, shape, mesh, policy)
+    if shape.kind == "prefill":
+        return prefill_case(cfg, shape, mesh)
+    return decode_case(cfg, shape, mesh)

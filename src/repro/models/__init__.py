@@ -1,0 +1,1 @@
+"""Model substrate: pure-JAX functional models, lax.scan over stacked layers."""

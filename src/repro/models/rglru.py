@@ -1,0 +1,93 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrent block: x -> {linear -> conv1d -> RG-LRU} * {linear -> GeLU} -> linear.
+RG-LRU:
+    r_t = sigmoid(x_t W_a + b_a)              (recurrence gate)
+    i_t = sigmoid(x_t W_x + b_x)              (input gate)
+    log a_t = -c * softplus(Lambda) * r_t     (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+Computed with the shared chunked associative scan.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.scan_utils import (causal_depthwise_conv,
+                                     chunked_linear_recurrence, conv_step)
+
+Params = Dict[str, jnp.ndarray]
+
+RGLRU_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig, dtype) -> Params:
+    d, w = cfg.d_model, cfg.lru_width
+    keys = jax.random.split(key, 7)
+    # Lambda init so that a ~ Uniform(0.9, 0.999)^c at r=1
+    lam = jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / RGLRU_C))
+    return {
+        "in_x": dense_init(keys[0], (d, w), dtype),
+        "in_gate": dense_init(keys[1], (d, w), dtype),
+        "conv_w": dense_init(keys[2], (cfg.d_conv, w), dtype, scale=cfg.d_conv ** -0.5),
+        "conv_b": jnp.zeros((w,), dtype=dtype),
+        "w_a": dense_init(keys[3], (w, w), dtype),
+        "b_a": jnp.zeros((w,), dtype=dtype),
+        "w_i": dense_init(keys[4], (w, w), dtype),
+        "b_i": jnp.zeros((w,), dtype=dtype),
+        "Lambda": lam.astype(dtype),
+        "out_proj": dense_init(keys[5], (w, d), dtype),
+    }
+
+
+def _gates(p: Params, xc: jnp.ndarray):
+    r = jax.nn.sigmoid((xc @ p["w_a"] + p["b_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xc @ p["w_i"] + p["b_i"]).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["Lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, mult * i * xc.astype(jnp.float32)
+
+
+def rglru_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                  chunk: int = 256, state: Tuple | None = None,
+                  return_state: bool = False):
+    """x: (B,S,d) -> (B,S,d). Optional state = (conv_state, h)."""
+    bsz = x.shape[0]
+    gate = jax.nn.gelu((x @ p["in_gate"]).astype(jnp.float32), approximate=True)
+    xb = x @ p["in_x"]
+    xc = causal_depthwise_conv(xb, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, xc)
+    h0 = (state[1] if state is not None
+          else jnp.zeros((bsz, cfg.lru_width), dtype=jnp.float32))
+    h_all, h_last = chunked_linear_recurrence(a, b, h0, chunk=chunk)
+    y = (h_all * gate).astype(x.dtype)
+    out = y @ p["out_proj"]
+    if return_state:
+        conv_state = xb[:, -(cfg.d_conv - 1):, :]
+        return out, (conv_state, h_last)
+    return out
+
+
+def rglru_decode_step(p: Params, x: jnp.ndarray, state: Tuple, cfg: ModelConfig):
+    """x: (B,1,d); state = (conv_state (B,K-1,w), h (B,w))."""
+    conv_state, h = state
+    x0 = x[:, 0]
+    gate = jax.nn.gelu((x0 @ p["in_gate"]).astype(jnp.float32), approximate=True)
+    xb = x0 @ p["in_x"]
+    conv_state, xc = conv_step(conv_state.astype(xb.dtype), xb, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, xc)
+    h = a * h + b
+    y = (h * gate).astype(x.dtype)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, (conv_state, h)
+
+
+def init_rglru_state(batch: int, cfg: ModelConfig, dtype) -> Tuple:
+    conv_state = jnp.zeros((batch, cfg.d_conv - 1, cfg.lru_width), dtype=dtype)
+    h = jnp.zeros((batch, cfg.lru_width), dtype=jnp.float32)
+    return conv_state, h

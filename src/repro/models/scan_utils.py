@@ -1,0 +1,91 @@
+"""Chunked associative linear recurrences for SSM / RG-LRU layers.
+
+h_t = a_t * h_{t-1} + b_t  (elementwise), computed as an outer ``lax.scan``
+over sequence chunks (bounds live memory to O(chunk * state)) with a parallel
+``jax.lax.associative_scan`` inside each chunk — the TPU-native replacement
+for the fused CUDA selective-scan kernel (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _combine(left, right):
+    a1, b1 = left
+    a2, b2 = right
+    return a1 * a2, a2 * b1 + b2
+
+
+def chunked_linear_recurrence(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray,
+                              chunk: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run h_t = a_t*h_{t-1} + b_t along axis 1.
+
+    a, b: (B, S, ...state dims...); h0: (B, ...state dims...).
+    Returns (h_all (B,S,...), h_last (B,...)).
+    """
+    bsz, s = a.shape[0], a.shape[1]
+    state_shape = a.shape[2:]
+    if s <= chunk:
+        return _recurrence_block(a, b, h0)
+
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    n_chunks = s // chunk
+    a_c = a.reshape((bsz, n_chunks, chunk) + state_shape).transpose(
+        (1, 0, 2) + tuple(range(3, 3 + len(state_shape))))
+    b_c = b.reshape((bsz, n_chunks, chunk) + state_shape).transpose(
+        (1, 0, 2) + tuple(range(3, 3 + len(state_shape))))
+
+    def body(h, ab):
+        ac, bc = ab
+        h_all, h_last = _recurrence_block(ac, bc, h)
+        return h_last, h_all
+
+    h_last, h_chunks = jax.lax.scan(body, h0, (a_c, b_c))
+    h_all = h_chunks.transpose((1, 0, 2) + tuple(range(3, 3 + len(state_shape))))
+    h_all = h_all.reshape((bsz, s) + state_shape)
+    return h_all, h_last
+
+
+def _recurrence_block(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Associative scan within one chunk, folding in carry h0."""
+    # scan with implicit zero init
+    a_cum, s = jax.lax.associative_scan(_combine, (a, b), axis=1)
+    # contribution of the carry: P_t * h0, P_t = prod_{i<=t} a_i == a_cum
+    h_all = a_cum * h0[:, None] + s
+    return h_all, h_all[:, -1]
+
+
+def causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None
+                          ) -> jnp.ndarray:
+    """Causal depthwise conv over time. x: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, w[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    if b is not None:
+        out = out + b
+    return out
+
+
+def conv_step(conv_state: jnp.ndarray, x_new: jnp.ndarray, w: jnp.ndarray,
+              b: jnp.ndarray | None = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step of the causal depthwise conv.
+
+    conv_state: (B, K-1, C) previous inputs; x_new: (B, C).
+    Returns (new_conv_state, y (B, C)).
+    """
+    k = w.shape[0]
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    if b is not None:
+        y = y + b
+    new_state = window[:, 1:] if k > 1 else conv_state
+    return new_state, y

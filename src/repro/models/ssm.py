@@ -1,0 +1,111 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b) — pure JAX, chunked scan.
+
+State-space recurrence (per channel c, state n):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = <C_t, h_t> + D * x_t
+with input-dependent (selective) dt, B, C.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.scan_utils import (causal_depthwise_conv,
+                                     chunked_linear_recurrence, conv_step)
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype) -> Params:
+    d, di, n, dtr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank_eff
+    keys = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(keys[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(keys[1], (cfg.d_conv, di), dtype, scale=cfg.d_conv ** -0.5),
+        "conv_b": jnp.zeros((di,), dtype=dtype),
+        "x_proj": dense_init(keys[2], (di, dtr + 2 * n), dtype),
+        "dt_proj": dense_init(keys[3], (dtr, di), dtype, scale=dtr ** -0.5),
+        "dt_bias": jnp.full((di,), -4.6, dtype=dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(a_init).astype(dtype),
+        "D": jnp.ones((di,), dtype=dtype),
+        "out_proj": dense_init(keys[4], (di, d), dtype),
+    }
+
+
+def _selective_terms(p: Params, xc: jnp.ndarray, cfg: ModelConfig):
+    """Input-dependent dt/B/C from the conv'd activation xc (B,S,di)."""
+    n, dtr = cfg.ssm_state, cfg.dt_rank_eff
+    proj = xc @ p["x_proj"]  # (B,S,dtr+2n)
+    dt_in, b_in, c_in = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"].astype(jnp.float32))  # (B,S,di)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di,n)
+    # discretize
+    a_bar = jnp.exp(dt[..., None] * a)  # (B,S,di,n)
+    bx = (dt * xc)[..., None] * b_in[..., None, :]  # (B,S,di,n)
+    return a_bar, bx, c_in
+
+
+def mamba_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                  chunk: int = 256, state: Tuple | None = None,
+                  return_state: bool = False):
+    """x: (B,S,d). Optional incoming state (conv_state, ssm_state) for
+    chunked prefill continuation."""
+    bsz, s, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = x @ p["in_proj"]
+    x_ssm, z = jnp.split(xz, 2, axis=-1)
+    xc = causal_depthwise_conv(x_ssm, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc).astype(jnp.float32)
+
+    a_bar, bx, c_in = _selective_terms(p, xc, cfg)
+    # NOTE(§Perf refuted hypothesis): casting the (B,S,d_inner,N) scan
+    # tensors to bf16 did NOT move the measured memory term (29.1 -> 29.9 s)
+    # — the backward of associative_scan materializes fp32 cotangents either
+    # way. The real fix is a fused Pallas scan keeping per-chunk state in
+    # VMEM (design in DESIGN.md §7 notes); fp32 kept for precision.
+    h0 = (state[1] if state is not None
+          else jnp.zeros((bsz, di, n), dtype=jnp.float32))
+    h_all, h_last = chunked_linear_recurrence(a_bar, bx, h0, chunk=chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, c_in.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32) * xc
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+    if return_state:
+        conv_state = x_ssm[:, -(cfg.d_conv - 1):, :]
+        return out, (conv_state, h_last)
+    return out
+
+
+def mamba_decode_step(p: Params, x: jnp.ndarray, state: Tuple, cfg: ModelConfig):
+    """x: (B,1,d); state = (conv_state (B,K-1,di), ssm_state (B,di,n))."""
+    conv_state, h = state
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = x[:, 0] @ p["in_proj"]
+    x_ssm, z = jnp.split(xz, 2, axis=-1)  # (B,di)
+    conv_state, xc = conv_step(conv_state.astype(x_ssm.dtype), x_ssm, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc).astype(jnp.float32)  # (B,di)
+
+    dtr = cfg.dt_rank_eff
+    proj = xc @ p["x_proj"]
+    dt_in, b_in, c_in = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a_bar = jnp.exp(dt[..., None] * a)  # (B,di,n)
+    bx = (dt * xc)[..., None] * b_in[:, None, :]  # (B,di,n)
+    h = a_bar * h + bx
+    y = jnp.einsum("bdn,bn->bd", h, c_in) + p["D"].astype(jnp.float32) * xc
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, (conv_state, h)
+
+
+def init_mamba_state(batch: int, cfg: ModelConfig, dtype) -> Tuple:
+    conv_state = jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype=dtype)
+    ssm_state = jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), dtype=jnp.float32)
+    return conv_state, ssm_state

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    adamw, init_opt_state, momentum_sgd, sgd, apply_updates, OptState)
+from repro.optim.schedules import cosine_schedule, wsd_schedule  # noqa: F401

@@ -1,0 +1,84 @@
+"""Minimal dependency-free optimizers (SGD / momentum / AdamW).
+
+State dtype is configurable: the production dry-run uses bf16 moments
+(DESIGN.md §9 memory note for llama3-405b); smoke tests use fp32.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Optional[PyTree]  # first moment / velocity (None for plain sgd)
+    v: Optional[PyTree]  # second moment (adam only)
+
+
+def init_opt_state(params: PyTree, kind: str = "adamw",
+                   state_dtype=jnp.float32) -> OptState:
+    def zeros(p):
+        return jnp.zeros(p.shape, state_dtype)
+    step = jnp.zeros((), jnp.int32)
+    if kind == "sgd":
+        return OptState(step, None, None)
+    if kind == "momentum":
+        return OptState(step, jax.tree.map(zeros, params), None)
+    if kind == "adamw":
+        return OptState(step, jax.tree.map(zeros, params),
+                        jax.tree.map(zeros, params))
+    raise ValueError(kind)
+
+
+def sgd(params: PyTree, grads: PyTree, state: OptState, lr) -> tuple[PyTree, OptState]:
+    new = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    return new, OptState(state.step + 1, None, None)
+
+
+def momentum_sgd(params: PyTree, grads: PyTree, state: OptState, lr,
+                 beta: float = 0.9) -> tuple[PyTree, OptState]:
+    m = jax.tree.map(lambda m0, g: (beta * m0.astype(jnp.float32)
+                                    + g.astype(jnp.float32)).astype(m0.dtype),
+                     state.m, grads)
+    new = jax.tree.map(
+        lambda p, mm: (p.astype(jnp.float32) - lr * mm.astype(jnp.float32)).astype(p.dtype),
+        params, m)
+    return new, OptState(state.step + 1, m, None)
+
+
+def adamw(params: PyTree, grads: PyTree, state: OptState, lr,
+          beta1: float = 0.9, beta2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> tuple[PyTree, OptState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+
+    def upd(p, g, m0, v0):
+        gf = g.astype(jnp.float32)
+        m = beta1 * m0.astype(jnp.float32) + (1 - beta1) * gf
+        v = beta2 * v0.astype(jnp.float32) + (1 - beta2) * gf * gf
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (u + weight_decay * pf)
+        return pf.astype(p.dtype), m.astype(m0.dtype), v.astype(v0.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    return new_p, OptState(step, new_m, new_v)
+
+
+def apply_updates(kind: str):
+    return {"sgd": sgd, "momentum": momentum_sgd, "adamw": adamw}[kind]

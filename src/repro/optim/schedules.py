@@ -1,0 +1,35 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd_schedule(step, base_lr: float, warmup: int, stable: int, decay: int,
+                 min_frac: float = 0.01):
+    """Warmup -> flat -> exponential-ish decay tail (MiniCPM WSD)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    in_decay = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0)
+    dec = base_lr * jnp.exp(jnp.log(min_frac) * in_decay)
+    out = jnp.where(step < warmup, warm,
+                    jnp.where(step < warmup + stable, base_lr, dec))
+    return out
+
+
+def get_schedule(name: str, base_lr: float, total_steps: int):
+    if name == "wsd":
+        warm = max(1, total_steps // 100)
+        decay = max(1, total_steps // 10)
+        stable = max(1, total_steps - warm - decay)
+        return lambda s: wsd_schedule(s, base_lr, warm, stable, decay)
+    return lambda s: cosine_schedule(s, base_lr, max(1, total_steps // 100),
+                                     total_steps)

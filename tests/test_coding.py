@@ -1,0 +1,46 @@
+"""Sparse position coding (paper §II.A.5, Alg. 4)."""
+import numpy as np
+import pytest
+
+from repro.core.compression.coding import (decode_positions, elias_gamma_bits,
+                                           encode_positions, naive_sparse_bits,
+                                           sparse_message_bits)
+
+
+def test_paper_example_roundtrip():
+    """The d=24, phi=1/8 example from the chapter: indices {1, 5, 17}."""
+    idx = [1, 5, 17]
+    bits, bs = encode_positions(idx, 24)
+    assert bs == 8
+    assert decode_positions(bits, 24, bs) == idx
+
+
+@pytest.mark.parametrize("d,nnz,seed", [(64, 4, 0), (1024, 10, 1),
+                                        (4096, 41, 2), (100, 99, 3),
+                                        (128, 1, 4)])
+def test_roundtrip_random(d, nnz, seed):
+    rng = np.random.default_rng(seed)
+    idx = sorted(rng.choice(d, nnz, replace=False).tolist())
+    bits, bs = encode_positions(idx, d)
+    assert decode_positions(bits, d, bs) == idx
+
+
+def test_bitstring_length_matches_analytic():
+    rng = np.random.default_rng(0)
+    d, nnz = 4096, 32
+    idx = sorted(rng.choice(d, nnz, replace=False).tolist())
+    bits, bs = encode_positions(idx, d)
+    expected = sparse_message_bits(d, nnz, value_bits=0)
+    assert abs(len(bits) - expected) <= 1
+
+
+def test_block_coding_beats_naive_at_low_phi():
+    d = 1 << 20
+    for nnz in (100, 1000, 10_000):
+        assert sparse_message_bits(d, nnz) < naive_sparse_bits(d, nnz)
+
+
+def test_elias_bits():
+    assert elias_gamma_bits([1]) == 1
+    assert elias_gamma_bits([2]) == 3
+    assert elias_gamma_bits([4, 4]) == 10

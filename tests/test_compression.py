@@ -1,0 +1,92 @@
+"""Sparsification operators (paper §II.A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import (random_sparsify, randk_sparsify,
+                                    rtopk_sparsify, topk_mask, topk_sparsify,
+                                    synchronous_mask_cycle)
+from repro.core.compression.sparsify import sync_sparse_period
+
+
+def test_topk_selects_largest(key):
+    g = jax.random.normal(key, (1000,))
+    out, mask = topk_sparsify(g, 50)
+    assert int(mask.sum()) == 50
+    kept = jnp.abs(g)[mask]
+    dropped = jnp.abs(g)[~mask]
+    assert float(kept.min()) >= float(dropped.max())
+    np.testing.assert_array_equal(np.asarray(out != 0), np.asarray(mask))
+
+
+def test_topk_mask_2d(key):
+    g = jax.random.normal(key, (32, 64))
+    m = topk_mask(g, 100)
+    assert m.shape == g.shape
+    assert int(m.sum()) == 100
+
+
+def test_randk_count_and_unbiased_scaling(key):
+    g = jax.random.normal(key, (512,))
+    out, mask = randk_sparsify(key, g, 64, unbiased=True)
+    assert int(mask.sum()) == 64
+    np.testing.assert_allclose(np.asarray(out[mask]),
+                               np.asarray(g[mask] * (512 / 64)), rtol=1e-6)
+
+
+def test_randk_unbiased_in_expectation(key):
+    g = jax.random.normal(key, (128,))
+    outs = [randk_sparsify(jax.random.PRNGKey(i), g, 32, unbiased=True)[0]
+            for i in range(800)]
+    mean = jnp.stack(outs).mean(0)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(g), atol=0.25)
+
+
+def test_rtopk_subset_of_top_r(key):
+    g = jax.random.normal(key, (256,))
+    out, mask = rtopk_sparsify(key, g, r=64, k=16)
+    assert int(mask.sum()) == 16
+    top_r = topk_mask(g, 64)
+    assert bool(jnp.all(top_r[mask]))  # every kept coord is in the top-R
+
+
+def test_random_sparsify_unbiased(key):
+    g = jnp.asarray([3.0, -2.0, 1.0, 0.5, -0.1, 0.0, 2.2, -1.7])
+    outs = jnp.stack([random_sparsify(jax.random.PRNGKey(i), g, eps=1.0)[0]
+                      for i in range(3000)])
+    np.testing.assert_allclose(np.asarray(outs.mean(0)), np.asarray(g),
+                               atol=0.15)
+
+
+def test_random_sparsify_variance_budget(key):
+    g = jax.random.normal(key, (300,))
+    eps = 0.5
+    outs = jnp.stack([random_sparsify(jax.random.PRNGKey(i), g, eps=eps)[0]
+                      for i in range(2000)])
+    second_moment = float(jnp.mean(jnp.sum(outs**2, -1)))
+    budget = (1 + eps) * float(jnp.sum(g**2))
+    assert second_moment <= budget * 1.1  # statistical slack
+
+
+def test_random_sparsify_sparsifies(key):
+    g = jax.random.normal(key, (1000,))
+    _, keep = random_sparsify(key, g, eps=2.0)
+    assert int(keep.sum()) < 1000  # actually drops something
+
+
+def test_sync_mask_covers_all_coordinates():
+    d, k = 100, 16
+    period = sync_sparse_period(d, k)
+    covered = np.zeros(d, bool)
+    for t in range(period):
+        covered |= np.asarray(synchronous_mask_cycle(d, k, t))
+    assert covered.all()
+    # eq. (17): within tau_max = period every coordinate is sampled
+    assert period == -(-d // k)
+
+
+def test_sync_mask_identical_across_devices():
+    m1 = synchronous_mask_cycle(64, 8, t=3)
+    m2 = synchronous_mask_cycle(64, 8, t=3)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))

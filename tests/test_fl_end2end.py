@@ -1,0 +1,120 @@
+"""Integration: FL converges on a learnable problem with every major
+configuration of the paper's toolbox."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import qsgd, scaled_sign, topk_sparsify
+from repro.core.hierarchy import HFLConfig
+from repro.core.topology import laplacian_mixing, ring, torus_2d
+from repro.fl import runtime as rt
+from repro.fl import server as fls
+from repro.fl.decentralized import consensus_step, gossip_round
+
+D = 24
+
+
+def _make_problem():
+    w_star = jax.random.normal(jax.random.PRNGKey(42), (D,))
+
+    def make_batches(t, n, h=2, b=8):
+        rng = np.random.default_rng(t)
+        x = rng.normal(size=(n, h, b, D)).astype(np.float32)
+        y = x @ np.asarray(w_star) + 0.01 * rng.normal(size=(n, h, b))
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y.astype(np.float32))}
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    return {"w": jnp.zeros(D)}, loss_fn, make_batches, w_star
+
+
+@pytest.mark.parametrize("compressor,server", [
+    (None, "avg"),
+    (lambda g: topk_sparsify(g, max(1, g.size // 8)), "avg"),
+    (scaled_sign, "avg"),
+    (lambda g: qsgd(jax.random.PRNGKey(0), g, 16), "avg"),
+    (None, "slowmo"),
+    (None, "adam"),
+])
+def test_fl_converges(compressor, server):
+    params0, loss_fn, make_batches, _ = _make_problem()
+    cfg = rt.SimConfig(n_devices=8, n_scheduled=4, rounds=40, lr=0.1,
+                       policy="random", compressor=compressor, server=server)
+    logs = rt.run_simulation(cfg, loss_fn, params0, make_batches)
+    assert logs[-1].loss < logs[0].loss * 0.3, (logs[0].loss, logs[-1].loss)
+
+
+def test_pssgd_round():
+    params0, loss_fn, make_batches, w_star = _make_problem()
+    params = params0
+    for t in range(60):
+        b = make_batches(t, 8)
+        b1 = jax.tree.map(lambda v: v[:, 0], b)
+        params, loss = fls.pssgd_round(params, b1, loss_fn, lr=0.1)
+    assert float(jnp.linalg.norm(params["w"] - w_star)) < 0.5
+
+
+def test_double_ef_round():
+    """Alg. 3 uplink+downlink EF: still converges."""
+    params0, loss_fn, make_batches, _ = _make_problem()
+    comp = lambda g: topk_sparsify(g, max(1, g.size // 8))  # noqa: E731
+    state = fls.init_fl_state(params0, 8, use_ef=True, double_ef=True)
+    round_fn = jax.jit(functools.partial(
+        fls.fl_round, loss_fn=loss_fn, lr=0.1, compressor=comp))
+    first = last = None
+    for t in range(40):
+        state, m = round_fn(state, make_batches(t, 8))
+        if first is None:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    assert last < first * 0.3
+
+
+def test_decentralized_matches_centralized_limit():
+    """Gossip with a complete graph == centralized averaging each round."""
+    params0, loss_fn, make_batches, w_star = _make_problem()
+    n = 8
+    w_ring = jnp.asarray(laplacian_mixing(ring(n)))
+    cp = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (n,) + p.shape),
+                      params0)
+    for t in range(60):
+        b = jax.tree.map(lambda v: v[:, 0], make_batches(t, n))
+        cp, loss = gossip_round(cp, w_ring, b, loss_fn, 0.1)
+    # all replicas near w* and near each other (consensus)
+    errs = jnp.linalg.norm(cp["w"] - w_star[None], axis=1)
+    assert float(errs.max()) < 0.8
+    spread = float(jnp.linalg.norm(cp["w"] - cp["w"].mean(0)[None], axis=1).max())
+    assert spread < 0.2
+
+
+def test_consensus_step_preserves_mean():
+    n = 9
+    w = jnp.asarray(laplacian_mixing(torus_2d(3, 3)))
+    cp = {"w": jax.random.normal(jax.random.PRNGKey(0), (n, D))}
+    mixed = consensus_step(cp, w)
+    np.testing.assert_allclose(np.asarray(mixed["w"].mean(0)),
+                               np.asarray(cp["w"].mean(0)), atol=1e-5)
+
+
+def test_hfl_converges_and_tracks_fl():
+    params0, loss_fn, make_batches, _ = _make_problem()
+    cfg = rt.SimConfig(n_devices=12, rounds=30, lr=0.1)
+    logs = rt.run_hfl(cfg, HFLConfig(n_clusters=3, inter_cluster_period=3),
+                      loss_fn, params0, make_batches)
+    assert logs[-1].loss < logs[0].loss * 0.3
+
+
+def test_scheduling_policies_all_run():
+    params0, loss_fn, make_batches, _ = _make_problem()
+    for pol in ("random", "round_robin", "best_channel", "latency", "pf",
+                "bn2", "bc_bn2", "bn2_c", "age", "deadline"):
+        cfg = rt.SimConfig(n_devices=6, n_scheduled=3, rounds=3, lr=0.1,
+                           policy=pol)
+        logs = rt.run_simulation(cfg, loss_fn, params0, make_batches)
+        assert len(logs) == 3
+        assert logs[-1].latency_s > 0

@@ -1,0 +1,49 @@
+"""HLO collective-byte parser."""
+import textwrap
+
+from repro.launch.hlo_analysis import (_loop_multipliers, _split_computations,
+                                       collective_stats,
+                                       total_collective_bytes)
+
+HLO = textwrap.dedent("""\
+    HloModule jit_step, num_partitions=16
+
+    %body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %ar = f32[8,8]{1,0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], to_apply=%add
+      ROOT %t = tuple(%i, %ar)
+    }
+
+    %cond (p: (s32[], f32[8,8])) -> pred[] {
+      %c = s32[] constant(12)
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+      %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+      %ag = f32[64,8]{1,0} all-gather(%a), channel_id=2, replica_groups=[32,8]<=[256], dimensions={0}
+      %a2a = (s8[4,8]{1,0}, s8[4,8]{1,0}) all-to-all(%b, %c), channel_id=3, replica_groups={{0,1}}
+      ROOT %r = f32[8,8] add(%x, %y)
+    }
+""")
+
+
+def test_split_and_multipliers():
+    comps = _split_computations(HLO)
+    assert set(comps) == {"body", "cond", "main"}
+    mults = _loop_multipliers(comps)
+    assert mults["body"] == 12
+
+
+def test_collective_stats():
+    stats = collective_stats(HLO)
+    # all-reduce inside the loop: 12 executions
+    assert stats["all-reduce"]["count"] == 12
+    ar_bytes = 2 * (8 * 8 * 4) * (15 / 16) * 12
+    assert abs(stats["all-reduce"]["bytes"] - ar_bytes) < 1e-6
+    # all-gather result 64*8*4 bytes, group 8
+    ag = 64 * 8 * 4 * (7 / 8)
+    assert abs(stats["all-gather"]["bytes"] - ag) < 1e-6
+    # all-to-all s8 tuple: 2 * 4*8 bytes, group 2
+    a2a = 2 * 4 * 8 * (1 / 2)
+    assert abs(stats["all-to-all"]["bytes"] - a2a) < 1e-6
+    assert total_collective_bytes(HLO) > 0

@@ -1,0 +1,94 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import block_topk, qsgd_quantize, sign_ef_compress
+from repro.kernels import ref
+from repro.kernels.qsgd import qsgd_pallas
+from repro.kernels.sign_ef import sign_ef_pallas
+from repro.kernels.topk_mask import block_topk_pallas
+
+SHAPES_2D = [(8, 128), (8, 1024), (16, 256), (64, 128)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("k", [1, 8, 32])
+def test_topk_kernel_matches_oracle(shape, dtype, k):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape).astype(dtype)
+    got = block_topk_pallas(x, k, interpret=True)
+    want = ref.block_topk_threshold_ref(x.astype(jnp.float32), k).astype(dtype)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=1e-2)
+
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+@pytest.mark.parametrize("k", [4, 16])
+def test_topk_kernel_close_to_exact_topk(shape, k):
+    """Bisection-threshold selection ~= exact sort-based top-k."""
+    x = jax.random.normal(jax.random.PRNGKey(1), shape)
+    got = block_topk_pallas(x, k, interpret=True)
+    exact = ref.block_topk_ref(x, k)
+    inter = np.sum((np.asarray(got) != 0) & (np.asarray(exact) != 0))
+    assert inter >= 0.9 * k * shape[0]  # >=90% mask overlap
+
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("levels", [4, 256])
+def test_qsgd_kernel_matches_oracle(shape, dtype, levels):
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, shape).astype(dtype)
+    u = jax.random.uniform(jax.random.PRNGKey(3), shape, jnp.float32)
+    norm = jnp.linalg.norm(x.astype(jnp.float32).reshape(-1)).reshape(1, 1)
+    got = qsgd_pallas(x, u, norm, levels, interpret=True)
+    want = ref.qsgd_ref(x, u, norm[0, 0], levels)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-2, atol=1e-3)
+
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sign_ef_kernel_matches_oracle(shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(4), shape).astype(dtype)
+    e = jax.random.normal(jax.random.PRNGKey(5), shape, jnp.float32)
+    c, e2 = sign_ef_pallas(x, e, interpret=True)
+    cw, ew = ref.sign_ef_ref(x, e)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(cw), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(e2), np.asarray(ew), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_sign_ef_identity_property():
+    """c + e' == x + e (the EF invariant survives the fusion)."""
+    x = jax.random.normal(jax.random.PRNGKey(6), (16, 256))
+    e = jax.random.normal(jax.random.PRNGKey(7), (16, 256))
+    c, e2 = sign_ef_pallas(x, e, interpret=True)
+    np.testing.assert_allclose(np.asarray(c + e2), np.asarray(x + e),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --- public wrappers: arbitrary shapes (padding path) ---
+@pytest.mark.parametrize("shape", [(100,), (3, 777), (5, 7, 11)])
+def test_wrappers_arbitrary_shapes(shape):
+    x = jax.random.normal(jax.random.PRNGKey(8), shape)
+    out = block_topk(x, 0.05, interpret=True)
+    assert out.shape == x.shape
+    q = qsgd_quantize(jax.random.PRNGKey(9), x, interpret=True)
+    assert q.shape == x.shape
+    c, e2 = sign_ef_compress(x, jnp.zeros(shape), interpret=True)
+    np.testing.assert_allclose(np.asarray(c + e2), np.asarray(x), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_qsgd_wrapper_unbiased_statistically():
+    x = jax.random.normal(jax.random.PRNGKey(10), (64,))
+    qs = jnp.stack([qsgd_quantize(jax.random.PRNGKey(i), x, levels=8,
+                                  interpret=True) for i in range(300)])
+    np.testing.assert_allclose(np.asarray(qs.mean(0)), np.asarray(x),
+                               atol=0.25)

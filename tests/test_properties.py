@@ -1,0 +1,97 @@
+"""Hypothesis property tests for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as topo
+from repro.core.collectives import pack_bits, unpack_bits
+from repro.core.compression import (ef_compress, randk_sparsify, scaled_sign,
+                                    topk_sparsify)
+from repro.core.compression.coding import decode_positions, encode_positions
+from repro.core.compression.error_feedback import is_k_contraction
+
+FLOATS = st.floats(-1e3, 1e3, allow_nan=False, width=32)
+
+
+@given(st.lists(FLOATS, min_size=8, max_size=200), st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_topk_is_k_contraction(vals, k):
+    """Def. 1 (eq. 22): top-k satisfies the k-contraction property exactly."""
+    x = jnp.asarray(vals, jnp.float32)
+    k = min(k, x.size)
+    assert bool(is_k_contraction(lambda v: topk_sparsify(v, k), x, k))
+
+
+@given(st.integers(0, 10_000), st.integers(8, 128), st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_randk_contraction_in_expectation(seed, d, k):
+    """Rand-k contracts in expectation (eq. 22 holds on average) [22]."""
+    k = min(k, d)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    errs = []
+    for i in range(30):
+        c, _ = randk_sparsify(jax.random.PRNGKey(seed + i), x, k)
+        errs.append(float(jnp.sum((x - c) ** 2)))
+    bound = (1 - k / d) * float(jnp.sum(x**2))
+    assert np.mean(errs) <= bound * 1.35  # statistical slack
+
+
+@given(st.lists(FLOATS, min_size=4, max_size=100))
+@settings(max_examples=60, deadline=None)
+def test_scaled_sign_never_expands(vals):
+    """delta-approximate compressors satisfy ||Q(x)-x|| <= ||x|| (eq. 30)."""
+    x = jnp.asarray(vals, jnp.float32)
+    c, _ = scaled_sign(x)
+    assert float(jnp.sum((c - x) ** 2)) <= float(jnp.sum(x**2)) + 1e-3
+
+
+@given(st.lists(FLOATS, min_size=8, max_size=64),
+       st.lists(FLOATS, min_size=8, max_size=64), st.integers(1, 4))
+@settings(max_examples=50, deadline=None)
+def test_ef_identity_holds_for_any_input(xs, es, k):
+    n = min(len(xs), len(es))
+    x = jnp.asarray(xs[:n], jnp.float32)
+    e = jnp.asarray(es[:n], jnp.float32)
+    c, e2, _ = ef_compress(lambda v: topk_sparsify(v, min(k, n)), x, e)
+    np.testing.assert_allclose(np.asarray(c + e2), np.asarray(x + e),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(2, 64), st.data())
+@settings(max_examples=50, deadline=None)
+def test_coding_roundtrip(d, data):
+    nnz = data.draw(st.integers(1, d))
+    idx = sorted(data.draw(
+        st.lists(st.integers(0, d - 1), min_size=nnz, max_size=nnz,
+                 unique=True)))
+    bits, bs = encode_positions(idx, d)
+    assert decode_positions(bits, d, bs) == idx
+
+
+@given(st.integers(1, 32), st.integers(0, 2**32 - 1))
+@settings(max_examples=50, deadline=None)
+def test_pack_unpack_bits_roundtrip(rows8, seed):
+    bits = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.5, (rows8 * 8, 3))
+    packed = pack_bits(bits)
+    assert packed.shape == (rows8, 3)
+    np.testing.assert_array_equal(np.asarray(unpack_bits(packed)),
+                                  np.asarray(bits))
+
+
+@given(st.integers(3, 12), st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_er_mixing_always_doubly_stochastic(n, seed):
+    w = topo.laplacian_mixing(topo.erdos_renyi(seed, n, 0.4))
+    assert topo.is_doubly_stochastic(w)
+
+
+@given(st.lists(FLOATS, min_size=16, max_size=128))
+@settings(max_examples=40, deadline=None)
+def test_ef_error_bounded_by_input(vals):
+    """One EF step: ||e'|| <= ||x + e|| (contraction keeps error bounded)."""
+    x = jnp.asarray(vals, jnp.float32)
+    e = jnp.zeros_like(x)
+    _, e2, _ = ef_compress(lambda v: topk_sparsify(v, max(1, x.size // 4)),
+                           x, e)
+    assert float(jnp.linalg.norm(e2)) <= float(jnp.linalg.norm(x)) + 1e-4

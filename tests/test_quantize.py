@@ -1,0 +1,79 @@
+"""Quantization operators (paper §II.B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import (qsgd, scaled_sign, sign_compress, ternary,
+                                    blockwise_scaled_sign)
+from repro.core.compression.quantize import delta_of_scaled_sign
+
+
+def test_qsgd_unbiased(key):
+    u = jax.random.normal(key, (64,))
+    outs = jnp.stack([qsgd(jax.random.PRNGKey(i), u, levels=4)[0]
+                      for i in range(4000)])
+    np.testing.assert_allclose(np.asarray(outs.mean(0)), np.asarray(u),
+                               atol=0.12)
+
+
+def test_qsgd_quantization_grid(key):
+    u = jax.random.normal(key, (256,))
+    levels = 8
+    q, bits = qsgd(key, u, levels=levels)
+    norm = float(jnp.linalg.norm(u))
+    lv = np.asarray(jnp.abs(q)) / norm * levels
+    np.testing.assert_allclose(lv, np.round(lv), atol=1e-4)
+    assert bits < 32
+
+
+def test_ternary_values_and_unbiasedness(key):
+    g = jax.random.normal(key, (64,))
+    gmax = float(jnp.max(jnp.abs(g)))
+    q, _ = ternary(key, g)
+    vals = np.unique(np.round(np.asarray(q) / gmax, 6))
+    assert set(vals).issubset({-1.0, 0.0, 1.0})
+    outs = jnp.stack([ternary(jax.random.PRNGKey(i), g)[0] for i in range(4000)])
+    np.testing.assert_allclose(np.asarray(outs.mean(0)), np.asarray(g), atol=0.1)
+
+
+def test_sign_is_pm_one(key):
+    g = jax.random.normal(key, (100,))
+    s, bits = sign_compress(g)
+    assert bits == 1.0
+    assert set(np.unique(np.asarray(s))).issubset({-1.0, 0.0, 1.0})
+
+
+def test_scaled_sign_l1_scale(key):
+    g = jax.random.normal(key, (100,))
+    c, _ = scaled_sign(g)
+    expect = float(jnp.mean(jnp.abs(g)))
+    np.testing.assert_allclose(np.abs(np.asarray(c)), expect, rtol=1e-6)
+
+
+def test_scaled_sign_is_delta_approximate(key):
+    """eq. (30): ||Q(x)-x||^2 <= (1-delta)||x||^2 with delta = l1^2/(d*l2^2)."""
+    for i in range(20):
+        g = jax.random.normal(jax.random.PRNGKey(i), (257,))
+        c, _ = scaled_sign(g)
+        lhs = float(jnp.sum((c - g) ** 2))
+        delta = float(delta_of_scaled_sign(g))
+        rhs = (1 - delta) * float(jnp.sum(g**2))
+        assert lhs <= rhs + 1e-4
+
+
+def test_blockwise_beats_global_scaled_sign(key):
+    # heterogeneous block magnitudes (the case [39] targets)
+    g = jnp.concatenate([jax.random.normal(key, (4096,)) * 10.0,
+                         jax.random.normal(jax.random.PRNGKey(1), (4096,)) * 0.1])
+    cb, _ = blockwise_scaled_sign(g, block=4096)
+    cg, _ = scaled_sign(g)
+    err_b = float(jnp.sum((cb - g) ** 2))
+    err_g = float(jnp.sum((cg - g) ** 2))
+    assert err_b < err_g
+
+
+def test_blockwise_padding_path(key):
+    g = jax.random.normal(key, (1000,))  # not a multiple of block
+    c, _ = blockwise_scaled_sign(g, block=256)
+    assert c.shape == g.shape
+    assert not jnp.isnan(c).any()

@@ -1,0 +1,42 @@
+"""Decentralized topology + mixing matrices (paper §I.B, eqs. 7-8)."""
+import numpy as np
+import pytest
+
+from repro.core import topology as topo
+
+
+@pytest.mark.parametrize("adj_fn", [
+    lambda: topo.ring(8), lambda: topo.torus_2d(3, 4),
+    lambda: topo.complete(6), lambda: topo.star(7),
+    lambda: topo.erdos_renyi(0, 10, 0.3)])
+def test_laplacian_mixing_doubly_stochastic(adj_fn):
+    w = topo.laplacian_mixing(adj_fn())
+    assert topo.is_doubly_stochastic(w)
+
+
+def test_metropolis_hastings_doubly_stochastic():
+    w = topo.metropolis_hastings_mixing(topo.erdos_renyi(1, 12, 0.4))
+    assert topo.is_doubly_stochastic(w)
+
+
+def test_spectral_gap_ordering():
+    """Denser connectivity -> larger gap -> faster consensus."""
+    g_ring = topo.spectral_gap(topo.laplacian_mixing(topo.ring(16)))
+    g_torus = topo.spectral_gap(topo.laplacian_mixing(topo.torus_2d(4, 4)))
+    g_full = topo.spectral_gap(topo.laplacian_mixing(topo.complete(16)))
+    assert g_ring < g_torus < g_full + 1e-9
+
+
+def test_consensus_rounds_decreasing_in_gap():
+    r_ring = topo.consensus_rounds(topo.laplacian_mixing(topo.ring(16)))
+    r_full = topo.consensus_rounds(topo.laplacian_mixing(topo.complete(16)))
+    assert r_full < r_ring
+
+
+def test_consensus_converges_numerically():
+    w = topo.laplacian_mixing(topo.torus_2d(4, 4))
+    x = np.random.default_rng(0).normal(size=(16, 5))
+    target = x.mean(0)
+    for _ in range(200):
+        x = w @ x
+    np.testing.assert_allclose(x, np.tile(target, (16, 1)), atol=1e-6)

@@ -1,0 +1,69 @@
+"""Wireless channel model + update-success analytics (paper §III, eqs. 47-56)."""
+import numpy as np
+import pytest
+
+from repro.core import wireless as w
+
+
+def test_path_gain_monotone_in_distance():
+    cfg = w.WirelessConfig()
+    d = np.array([10.0, 100.0, 400.0])
+    g = w.path_gain(d, cfg)
+    assert (np.diff(g) < 0).all()
+
+
+def test_snr_and_rate(rng):
+    cfg = w.WirelessConfig(n_devices=50)
+    dist = w.sample_positions(rng, cfg)
+    fading = w.sample_fading(rng, 50)
+    s = w.snr(dist, fading, cfg)
+    assert (s > 0).all()
+    r = w.shannon_rate(s, cfg.bandwidth_hz)
+    assert (r > 0).all()
+    # rate monotone in SNR
+    order = np.argsort(s)
+    assert (np.diff(r[order]) >= 0).all()
+
+
+def test_comm_latency():
+    lat = w.comm_latency(1e6, np.array([1e6, 2e6]))
+    np.testing.assert_allclose(lat, [1.0, 0.5])
+
+
+def test_subchannel_rate_increases_with_allocation(rng):
+    cfg = w.WirelessConfig()
+    snr = np.array([100.0])
+    r1 = w.subchannel_rate(snr, cfg, 1)
+    r4 = w.subchannel_rate(snr, cfg, 4)
+    assert r4 > r1
+
+
+def test_interference_functional_monotone():
+    v1 = w.interference_functional(1.0, 4.0)
+    v2 = w.interference_functional(10.0, 4.0)
+    assert 0 < v1 < v2
+
+
+def test_update_success_ordering():
+    """PF >= RS per-round success; RR conditional success > RS (eq. 50/53/55)."""
+    k, n, gamma, alpha = 4, 20, 1.0, 4.0
+    v = w.interference_functional(gamma, alpha)
+    u_rs = w.update_success_rs(k, n, v)
+    u_rr = w.update_success_rr(v)
+    u_pf = w.update_success_pf(k, n, gamma, alpha)
+    assert 0 < u_rs < u_rr <= 1
+    assert u_pf >= u_rs * 0.9  # PF at least comparable to RS
+
+
+def test_rounds_required_monotone():
+    assert w.rounds_required(0.9) < w.rounds_required(0.1)
+    assert w.rounds_required_rr(0.5, k=4, n=20) > w.rounds_required(0.5)
+
+
+def test_high_vs_low_threshold_regime():
+    """In the low-threshold regime policies converge (chapter's observation)."""
+    k, n, alpha = 4, 20, 4.0
+    v_low = w.interference_functional(10 ** (-25 / 10), alpha)
+    u_rs_low = w.update_success_rs(k, n, v_low)
+    u_rr_low = w.update_success_rr(v_low) * (k / n)  # duty-cycled
+    assert abs(u_rs_low - u_rr_low) / u_rs_low < 0.5
