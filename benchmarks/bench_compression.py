@@ -10,7 +10,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit, make_lm_problem
+from benchmarks.common import bench_rounds, emit, make_lm_problem
 from repro.core.compression import (qsgd, randk_sparsify, scaled_sign,
                                     ternary, topk_sparsify)
 from repro.core.compression.coding import (naive_sparse_bits,
@@ -46,10 +46,11 @@ COMPRESSORS = {
 
 
 def main() -> None:
+    rounds = bench_rounds(ROUNDS)
     t0 = time.perf_counter()
     for name, comp in COMPRESSORS.items():
         params, loss_fn, sample, eval_fn = make_lm_problem(n_clients=8)
-        cfg = rt.SimConfig(n_devices=8, n_scheduled=8, rounds=ROUNDS, lr=1.0,
+        cfg = rt.SimConfig(n_devices=8, n_scheduled=8, rounds=rounds, lr=1.0,
                            local_steps=4, policy="random", compressor=comp)
         logs = rt.run_simulation(cfg, loss_fn, params, sample, eval_fn=eval_fn)
         bpp = bits_per_param(name)
@@ -62,7 +63,7 @@ def main() -> None:
         nnz = int(D_REF * phi)
         gain = naive_sparse_bits(D_REF, nnz) / sparse_message_bits(D_REF, nnz)
         emit(f"coding.alg4_vs_naive_phi{phi}", 0.0, f"{gain:.2f}x")
-    us = (time.perf_counter() - t0) / (len(COMPRESSORS) * ROUNDS) * 1e6
+    us = (time.perf_counter() - t0) / (len(COMPRESSORS) * rounds) * 1e6
     emit("compression.us_per_round", us, "timing")
 
 

@@ -5,31 +5,102 @@ round) but plateaus at a worse model because near-BS devices dominate the
 averages (biased updates on non-iid data); random scheduling wins in final
 loss. Derived column: final-loss ratio channel-aware/random (>1 reproduces
 the figure) and the latency advantage.
+
+Also benchmarks the simulation engine itself: the whole run as one compiled
+``lax.scan`` call vs the per-round host-dispatch loop (the seed behaviour),
+reported as rounds/second.
 """
 from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, make_lm_problem
+import jax
+
+from benchmarks.common import (bench_rounds, emit, make_linear_problem,
+                               make_lm_problem)
 from repro.fl import runtime as rt
 
 ROUNDS = 100
 
 
-def run_policy(policy: str, alpha: float = 0.1):
+def _cfg(policy: str, rounds: int) -> rt.SimConfig:
+    return rt.SimConfig(n_devices=20, n_scheduled=4, rounds=rounds, lr=1.0,
+                        policy=policy, local_steps=4, model_bits=1e6)
+
+
+def run_policy(policy: str, rounds: int, alpha: float = 0.1):
     params, loss_fn, sample, eval_fn = make_lm_problem(n_clients=20,
                                                        alpha=alpha)
-    cfg = rt.SimConfig(n_devices=20, n_scheduled=4, rounds=ROUNDS, lr=1.0,
-                       policy=policy, local_steps=4, model_bits=1e6)
-    logs = rt.run_simulation(cfg, loss_fn, params, sample, eval_fn=eval_fn)
-    return logs
+    return rt.run_simulation(_cfg(policy, rounds), loss_fn, params, sample,
+                             eval_fn=eval_fn)
+
+
+def _timed(fn) -> float:
+    """Warm-up call (compiles), then one timed steady-state call."""
+    fn()
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _sliced_sampler(batches, rounds):
+    """Materialize per-round views once so timed host loops pay only
+    dispatch, not per-round slicing."""
+    views = [jax.tree.map(lambda x: x[t], batches) for t in range(rounds)]
+    return lambda t, n: views[t]
+
+
+def bench_engine(rounds: int) -> None:
+    """us/round of the simulation engine: one compiled ``lax.scan`` call vs
+    the per-round host-dispatch loop (the seed behaviour), on the acceptance
+    config (100 rounds x 40 devices) and on the Fig. 1 LM problem. The
+    linear problem's per-round FLOPs are negligible, so that comparison
+    isolates simulation overhead (dispatch, channel, scheduling)."""
+    # --- engine overhead: 40 devices, light model -------------------------
+    params0, lin_loss, make_batches, _ = make_linear_problem()
+    cfg = rt.SimConfig(n_devices=40, n_scheduled=8, rounds=rounds, lr=0.1,
+                       policy="random")
+    wcfg = rt.wireless.WirelessConfig(n_devices=cfg.n_devices)
+    batches = rt.stack_batches(make_batches, rounds, cfg.n_devices)
+    sliced = _sliced_sampler(batches, rounds)
+
+    scan_s = _timed(lambda: rt.run_simulation_scan(
+        cfg, lin_loss, params0, batches, wcfg=wcfg))
+    host_s = _timed(lambda: rt.run_simulation(
+        cfg, lin_loss, params0, sliced, wcfg=wcfg, engine="host"))
+
+    emit("engine.host_us_per_round", host_s / rounds * 1e6,
+         f"{rounds / host_s:.1f}rounds/s")
+    emit("engine.scan_us_per_round", scan_s / rounds * 1e6,
+         f"{rounds / scan_s:.1f}rounds/s")
+    emit("engine.scan_speedup_vs_host", 0.0, f"{host_s / scan_s:.1f}x")
+
+    # --- end-to-end on the Fig. 1 LM problem (model compute included) -----
+    params, loss_fn, sample, eval_fn = make_lm_problem(n_clients=20, alpha=0.1)
+    lm_cfg = _cfg("random", rounds)
+    lm_batches = rt.stack_batches(sample, rounds, lm_cfg.n_devices)
+    lm_sliced = _sliced_sampler(lm_batches, rounds)
+    lm_wcfg = rt.wireless.WirelessConfig(n_devices=lm_cfg.n_devices)
+
+    lm_scan_s = _timed(lambda: rt.run_simulation_scan(
+        lm_cfg, loss_fn, params, lm_batches, eval_batch=eval_fn.eval_batch,
+        wcfg=lm_wcfg))
+    lm_host_s = _timed(lambda: rt.run_simulation(
+        lm_cfg, loss_fn, params, lm_sliced, eval_fn=eval_fn, wcfg=lm_wcfg,
+        engine="host"))
+
+    emit("engine.lm_e2e_scan_us_per_round", lm_scan_s / rounds * 1e6,
+         f"{rounds / lm_scan_s:.1f}rounds/s")
+    emit("engine.lm_e2e_speedup_vs_host", 0.0,
+         f"{lm_host_s / lm_scan_s:.1f}x")
 
 
 def main() -> None:
+    rounds = bench_rounds(ROUNDS)
     t0 = time.perf_counter()
-    logs_rand = run_policy("random")
-    logs_chan = run_policy("latency")
-    us = (time.perf_counter() - t0) / (2 * ROUNDS) * 1e6
+    logs_rand = run_policy("random", rounds)
+    logs_chan = run_policy("latency", rounds)
+    us = (time.perf_counter() - t0) / (2 * rounds) * 1e6
     final_rand = logs_rand[-1].loss
     final_chan = logs_chan[-1].loss
     lat_rand = logs_rand[-1].latency_s
@@ -39,9 +110,10 @@ def main() -> None:
     emit("fig1.loss_ratio_chan_over_rand", us, f"{final_chan / final_rand:.3f}")
     emit("fig1.latency_speedup_chan", us, f"{lat_rand / lat_chan:.2f}x")
     # early phase: channel-aware should be at least as good per unit time
-    mid = ROUNDS // 4
+    mid = rounds // 4
     emit("fig1.midpoint_loss_chan_minus_rand", us,
          f"{logs_chan[mid].loss - logs_rand[mid].loss:+.4f}")
+    bench_engine(rounds)
 
 
 if __name__ == "__main__":

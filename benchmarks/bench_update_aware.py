@@ -1,11 +1,14 @@
 """Fig. 2 reproduction: update-aware scheduling policies BC / BN2 / BC-BN2 /
 BN2-C [62]. Derived: final eval loss per policy (combined channel+update
-policies should be best, per the chapter)."""
+policies should be best, per the chapter).
+
+All four policies run through ``runtime.run_sweep`` on one pre-sampled batch
+stack — each policy is a single compiled call."""
 from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, make_lm_problem
+from benchmarks.common import bench_rounds, emit, make_lm_problem
 from repro.fl import runtime as rt
 
 ROUNDS = 80
@@ -13,16 +16,17 @@ POLICIES = ("best_channel", "bn2", "bc_bn2", "bn2_c")
 
 
 def main() -> None:
-    results = {}
+    rounds = bench_rounds(ROUNDS)
     t0 = time.perf_counter()
-    for pol in POLICIES:
-        params, loss_fn, sample, eval_fn = make_lm_problem(n_clients=16,
-                                                           alpha=0.1)
-        cfg = rt.SimConfig(n_devices=16, n_scheduled=2, rounds=ROUNDS, lr=1.0,
-                           policy=pol, local_steps=4, model_bits=1e6)
-        logs = rt.run_simulation(cfg, loss_fn, params, sample, eval_fn=eval_fn)
-        results[pol] = logs[-1].loss
-    us = (time.perf_counter() - t0) / (len(POLICIES) * ROUNDS) * 1e6
+    params, loss_fn, sample, eval_fn = make_lm_problem(n_clients=16, alpha=0.1)
+    cfg = rt.SimConfig(n_devices=16, n_scheduled=2, rounds=rounds, lr=1.0,
+                       local_steps=4, model_bits=1e6)
+    batches = rt.stack_batches(sample, rounds, cfg.n_devices)
+    sweep = rt.run_sweep(cfg, loss_fn, params, batches, seeds=[cfg.seed],
+                         policies=list(POLICIES),
+                         eval_batch=eval_fn.eval_batch)
+    results = {pol: float(sweep[pol].loss[0, -1]) for pol in POLICIES}
+    us = (time.perf_counter() - t0) / (len(POLICIES) * rounds) * 1e6
     for pol, loss in results.items():
         emit(f"fig2.{pol}_final_loss", us, f"{loss:.4f}")
     best = min(results, key=results.get)

@@ -7,6 +7,7 @@ NN model, SGD) scaled to CPU. Every benchmark prints
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import Callable, Dict, Tuple
 
@@ -17,6 +18,15 @@ import numpy as np
 from repro.data import SyntheticLMDataset, dirichlet_partition
 
 ROWS = []
+
+# --fast (benchmarks/run.py): cap round counts for smoke runs
+FAST = False
+FAST_ROUNDS = 8
+
+
+def bench_rounds(n: int) -> int:
+    """Round budget helper: full ``n`` normally, a small cap under --fast."""
+    return min(n, FAST_ROUNDS) if FAST else n
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
@@ -33,6 +43,38 @@ def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Tiny linear problem: negligible per-round FLOPs, for isolating simulation-
+# engine overhead (bench_scheduling) and for engine parity tests.
+# ---------------------------------------------------------------------------
+def make_linear_problem(d: int = 32, h: int = 2, b: int = 8):
+    """Returns (init_params, loss_fn, make_batches, w_star) for noisy linear
+    regression toward a fixed w*; batches follow the engine's
+    (n_devices, H, batch, d) convention. loss_fn/make_batches are cached so
+    repeated callers (tests, benchmarks) share one loss_fn identity and hit
+    the compiled-engine cache instead of re-tracing; params are a fresh copy
+    per call (a shared mutable init would leak state between callers)."""
+    params, loss_fn, make_batches, w_star = _linear_problem_cached(d, h, b)
+    return jax.tree.map(jnp.array, params), loss_fn, make_batches, w_star
+
+
+@functools.lru_cache(maxsize=None)
+def _linear_problem_cached(d: int, h: int, b: int):
+    w_star = jax.random.normal(jax.random.PRNGKey(42), (d,))
+
+    def make_batches(t, n):
+        rng = np.random.default_rng(t)
+        x = rng.normal(size=(n, h, b, d)).astype(np.float32)
+        y = x @ np.asarray(w_star) + 0.01 * rng.normal(size=(n, h, b))
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y.astype(np.float32))}
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    return {"w": jnp.zeros(d)}, loss_fn, make_batches, w_star
 
 
 # ---------------------------------------------------------------------------
@@ -80,5 +122,9 @@ def make_lm_problem(n_clients: int, alpha: float = 0.3, seed: int = 0):
 
     def eval_fn(p) -> float:
         return float(loss_fn(p, eval_batch)[0])
+
+    # lets the compiled simulation engine evaluate inside the scan
+    # (fl/runtime.py run_simulation's eval contract)
+    eval_fn.eval_batch = eval_batch
 
     return params, loss_fn, sample_batches, eval_fn

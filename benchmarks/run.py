@@ -1,17 +1,23 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (plus the roofline table when
-dry-run artifacts exist). Run: ``PYTHONPATH=src python -m benchmarks.run``.
+dry-run artifacts exist) and writes ``BENCH_engine.json`` (name ->
+us_per_call) so the perf trajectory is machine-trackable across PRs.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run [--fast] [--out PATH]``.
+``--fast`` caps simulated round counts for smoke use.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 import traceback
 
 from benchmarks import (bench_compression, bench_hfl, bench_kernels,
                         bench_rs_rr_pf, bench_scheduling, bench_update_aware)
-from benchmarks import roofline
+from benchmarks import common, roofline
 
 MODULES = [
     ("scheduling(fig1)", bench_scheduling),
@@ -23,7 +29,32 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def write_json(path: str) -> None:
+    table = {}
+    for row in common.ROWS:
+        name, us, _ = row.split(",", 2)
+        # derived-only rows emit us_per_call=0; they carry no timing signal
+        if float(us) > 0:
+            table[name] = float(us)
+    with open(path, "w") as f:
+        json.dump(table, f, indent=2, sort_keys=True)
+    print(f"# wrote {path} ({len(table)} entries)", file=sys.stderr)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="cap simulated rounds for a quick smoke run")
+    ap.add_argument("--out", default=None,
+                    help="machine-readable output path (name -> us_per_call);"
+                         " defaults to BENCH_engine.json, or"
+                         " BENCH_engine_fast.json under --fast so smoke runs"
+                         " never clobber the tracked numbers")
+    args = ap.parse_args(argv)
+    common.FAST = args.fast
+    if args.out is None:
+        args.out = "BENCH_engine_fast.json" if args.fast else "BENCH_engine.json"
+
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in MODULES:
@@ -35,6 +66,12 @@ def main() -> None:
             print(f"{name},0,FAILED:{type(e).__name__}:{e}")
             traceback.print_exc()
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+    if failures:
+        print(f"# {failures} module(s) failed; not writing {args.out} "
+              "(partial table would clobber tracked numbers)", file=sys.stderr)
+    else:
+        write_json(args.out)
 
     try:
         print("\n=== roofline (from dry-run artifacts) ===")

@@ -2,31 +2,40 @@
 non-iid federated problem, reporting loss-vs-wall-clock (the chapter's core
 message: schedule for *learning* progress, not just channel throughput).
 
+All policies run through the compiled simulation engine: the batch stack is
+sampled once, then ``runtime.run_sweep`` executes each policy's entire
+60-round run as one ``lax.scan`` call.
+
 Run:  PYTHONPATH=src:. python examples/wireless_scheduling_sim.py
 """
 import numpy as np
 
 from benchmarks.common import make_lm_problem
+from repro.core.scheduling import policy_names
 from repro.fl import runtime as rt
 
-POLICIES = ["random", "round_robin", "best_channel", "latency", "pf", "age",
-            "bn2", "bc_bn2", "bn2_c", "deadline"]
+ROUNDS = 60
 
 
 def main() -> None:
+    params, loss_fn, sample, eval_fn = make_lm_problem(n_clients=20,
+                                                       alpha=0.1)
+    cfg = rt.SimConfig(n_devices=20, n_scheduled=4, rounds=ROUNDS, lr=1.0,
+                       local_steps=4, model_bits=1e6)
+    batches = rt.stack_batches(sample, ROUNDS, cfg.n_devices)
+    sweep = rt.run_sweep(cfg, loss_fn, params, batches, seeds=[cfg.seed],
+                         policies=list(policy_names()),
+                         eval_batch=eval_fn.eval_batch)
+
     print(f"{'policy':14s} {'final loss':>10s} {'wall-clock':>11s} "
           f"{'avg sched':>9s}")
     results = {}
-    for pol in POLICIES:
-        params, loss_fn, sample, eval_fn = make_lm_problem(n_clients=20,
-                                                           alpha=0.1)
-        cfg = rt.SimConfig(n_devices=20, n_scheduled=4, rounds=60, lr=1.0,
-                           local_steps=4, policy=pol, model_bits=1e6)
-        logs = rt.run_simulation(cfg, loss_fn, params, sample, eval_fn=eval_fn)
-        sched = np.mean([lg.n_scheduled for lg in logs])
-        results[pol] = logs[-1].loss
-        print(f"{pol:14s} {logs[-1].loss:10.4f} {logs[-1].latency_s:10.1f}s "
-              f"{sched:9.1f}")
+    for pol, logs in sweep.items():
+        final_loss = float(logs.loss[0, -1])
+        wall = float(logs.latency_s[0, -1])
+        sched = float(np.mean(logs.n_scheduled[0]))
+        results[pol] = final_loss
+        print(f"{pol:14s} {final_loss:10.4f} {wall:10.1f}s {sched:9.1f}")
     best = min(results, key=results.get)
     print(f"\nbest final loss: {best} ({results[best]:.4f})")
 

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.compat import axis_size
+
 PyTree = Any
 
 _POW2 = jnp.asarray([1, 2, 4, 8, 16, 32, 64, 128], dtype=jnp.uint8)
@@ -57,7 +59,7 @@ def _pad_dim0(x: jnp.ndarray, multiple: int) -> Tuple[jnp.ndarray, int]:
 
 def _a2a_chunks(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     """x: (n*c, ...) -> received (n, c, ...) — the reduce-scatter wire phase."""
-    n = lax.axis_size(axis)
+    n = axis_size(axis)
     chunks = x.reshape(n, x.shape[0] // n, *x.shape[1:])
     return lax.all_to_all(chunks, axis, split_axis=0, concat_axis=0, tiled=False)
 
@@ -73,7 +75,7 @@ def compressed_allreduce_leaf(
 
     Returns (g_hat identical on all shards of ``axis``, new error state).
     """
-    n = lax.axis_size(axis)
+    n = axis_size(axis)
     gf = g.astype(jnp.float32)
     if method == "none" or g.size < min_size:
         if e is not None:

@@ -1,0 +1,47 @@
+"""Version compatibility shims for the installed JAX.
+
+``jax.shard_map`` (top-level, with ``axis_names``/``check_vma`` kwargs) only
+exists on newer JAX releases; on the pinned 0.4.x line the supported entry
+point is ``jax.experimental.shard_map.shard_map`` with ``auto``/``check_rep``.
+``shard_map`` below presents the new-style signature and dispatches to
+whichever implementation the runtime provides.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Set
+
+import jax
+from jax import lax
+
+__all__ = ["axis_size", "shard_map"]
+
+
+def axis_size(axis) -> int:
+    """``lax.axis_size`` where available, else the ``psum(1, axis)`` idiom
+    (concrete for a literal operand, so reshapes stay static)."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis)
+    return lax.psum(1, axis)
+
+
+def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
+              axis_names: Optional[Set[str]] = None,
+              check_vma: bool = True) -> Callable:
+    """New-style ``jax.shard_map`` signature on any supported JAX.
+
+    ``axis_names`` restricts which mesh axes are manually mapped (the rest
+    stay XLA-automatic); ``check_vma`` toggles replication checking.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs,
+                  "check_vma": check_vma}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)

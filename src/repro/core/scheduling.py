@@ -1,15 +1,25 @@
 """Device selection / scheduling policies (paper §III).
 
-Host-side per-round logic (numpy): every policy maps round state — channel
-gains, ages, update norms, latencies — to the scheduled device set. The
-returned 0/1 participation masks feed the jitted aggregation steps.
+Two layers:
+
+* **numpy reference policies** (top half) — host-side per-round logic: every
+  policy maps round state — channel gains, ages, update norms, latencies — to
+  the scheduled device set. The returned 0/1 participation masks feed the
+  jitted aggregation steps.
+* **jnp policy registry** (bottom half) — pure-``jnp`` twins operating on a
+  :class:`RoundState` and returning fixed-shape boolean masks, so a policy is
+  a *static* argument of the compiled simulation engine
+  (``fl/runtime.py``): ``get_policy(name)(pcfg, state) -> (N,) bool``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 
 def _mask(n: int, idx: np.ndarray) -> np.ndarray:
@@ -192,3 +202,197 @@ def deadline_greedy(comm_latency: np.ndarray, comp_latency: np.ndarray,
         chosen.append(best)
         pool.remove(best)
     return _mask(n, np.array(chosen, dtype=int))
+
+
+# ===========================================================================
+# jnp policy registry (device-resident simulation engine)
+# ===========================================================================
+class RoundState(NamedTuple):
+    """Per-round traced inputs every jnp policy sees (fl/runtime.py builds
+    one inside the ``lax.scan`` body each round)."""
+    t: jnp.ndarray             # scalar int32 round index
+    key: jax.Array             # PRNG key for stochastic policies
+    snr_lin: jnp.ndarray       # (N,) instantaneous linear SNR ("gains")
+    avg_snr: jnp.ndarray       # (N,) per-device time-averaged SNR (EMA)
+    rates: jnp.ndarray         # (N,) Shannon rate, bits/s
+    comm_lat: jnp.ndarray      # (N,) upload latency, s
+    comp_lat: jnp.ndarray      # (N,) compute latency, s
+    ages: jnp.ndarray          # (N,) rounds since last scheduled
+    update_norms: jnp.ndarray  # (N,) observed update-norm proxies
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    """Static (hashable) policy parameters — part of the engine cache key."""
+    n_devices: int
+    n_scheduled: int
+    model_bits: float = 1e6
+    deadline_s: float = 5.0
+    age_alpha: float = 1.0
+    sub_bw: float = 1e6          # bandwidth_hz / n_subchannels
+    n_subchannels: int = 20
+
+
+PolicyFn = Callable[[PolicyConfig, RoundState], jnp.ndarray]
+
+
+def _topk_mask_jax(score: jnp.ndarray, k: int) -> jnp.ndarray:
+    idx = jnp.argsort(-score)[:k]
+    return jnp.zeros(score.shape[0], bool).at[idx].set(True)
+
+
+def _random_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
+    perm = jax.random.permutation(st.key, pcfg.n_devices)
+    return jnp.zeros(pcfg.n_devices, bool).at[perm[:pcfg.n_scheduled]].set(True)
+
+
+def _round_robin_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
+    n, k = pcfg.n_devices, pcfg.n_scheduled
+    n_groups = max(1, n // k)
+    g = st.t % n_groups
+    i = jnp.arange(n)
+    return (i >= g * k) & (i < (g + 1) * k)
+
+
+def _best_channel_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
+    return _topk_mask_jax(st.snr_lin, pcfg.n_scheduled)
+
+
+def _latency_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
+    return _topk_mask_jax(-(st.comm_lat + st.comp_lat), pcfg.n_scheduled)
+
+
+def _pf_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
+    """Proportional fair (§III.2): top-K of instantaneous over per-device
+    *time-averaged* SNR. The engine carries the EMA across rounds — the
+    legacy host path's scalar-mean proxy degenerated to best-channel."""
+    ratio = st.snr_lin / jnp.maximum(st.avg_snr, 1e-12)
+    return _topk_mask_jax(ratio, pcfg.n_scheduled)
+
+
+def _bn2_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
+    return _topk_mask_jax(st.update_norms, pcfg.n_scheduled)
+
+
+def _bc_bn2_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
+    k_c = min(2 * pcfg.n_scheduled, pcfg.n_devices)
+    pre = _topk_mask_jax(st.snr_lin, k_c)
+    eff = jnp.where(pre, st.update_norms, -jnp.inf)
+    return _topk_mask_jax(eff, pcfg.n_scheduled)
+
+
+def _bn2_c_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
+    d_params = max(int(pcfg.model_bits / 32), 1)
+    bits_per_param = jnp.maximum(
+        st.rates * pcfg.deadline_s / d_params, 1e-3)
+    fidelity = 1.0 - 2.0 ** (-jnp.minimum(bits_per_param, 32.0))
+    return _topk_mask_jax(st.update_norms * fidelity, pcfg.n_scheduled)
+
+
+def _deadline_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
+    """Nishio-Yonetani greedy (P4, eqs. 57-58), fixed trip count.
+
+    Devices upload one-by-one; appending candidate i to the current schedule
+    yields round time max(t_upload, L_comp_i) + L_comm_i, so the host
+    greedy's full re-evaluation reduces to an incremental argmin."""
+    n = pcfg.n_devices
+
+    def body(_, carry):
+        chosen, t_cur, done = carry
+        cand_t = jnp.maximum(t_cur, st.comp_lat) + st.comm_lat
+        cand_t = jnp.where(chosen, jnp.inf, cand_t)
+        best = jnp.argmin(cand_t)
+        ok = (~done) & (cand_t[best] <= pcfg.deadline_s)
+        chosen = jnp.where(ok, chosen.at[best].set(True), chosen)
+        t_cur = jnp.where(ok, cand_t[best], t_cur)
+        return chosen, t_cur, done | ~ok
+
+    chosen, _, _ = lax.fori_loop(
+        0, n, body, (jnp.zeros(n, bool), jnp.float32(0.0), jnp.bool_(False)))
+    return chosen
+
+
+def _f_alpha_jax(x: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    if alpha == 1.0:
+        return jnp.log1p(x)
+    return (x ** (1.0 - alpha)) / (1.0 - alpha)
+
+
+def age_greedy_jax(ages: jnp.ndarray, snr_mat: jnp.ndarray, r_min: float,
+                   sub_bw: float, alpha: float = 1.0) -> jnp.ndarray:
+    """Two-phase greedy of [58] for P2/P3 (jnp twin of
+    :func:`age_based_greedy`; subchannel count comes from ``snr_mat``'s
+    second axis), vectorized with a fixed trip count (each iteration
+    schedules one device using >= 1 subchannel, so W iterations suffice)."""
+    n, w = snr_mat.shape
+    j = jnp.arange(1, w + 1, dtype=jnp.float32)
+
+    def body(_, carry):
+        available, scheduled, done = carry
+        n_avail = jnp.sum(available)
+        # P3 per device: #subchannels (best-first, equal power) to clear R_min
+        snr_av = jnp.where(available[None, :], snr_mat, -jnp.inf)
+        s_sorted = -jnp.sort(-snr_av, axis=1)
+        s_sorted = jnp.where(jnp.isfinite(s_sorted), s_sorted, 0.0)
+        csum = jnp.cumsum(s_sorted, axis=1)
+        rate_j = j * sub_bw * jnp.log2(1.0 + csum / (j * j))
+        feasible_j = (rate_j >= r_min) & (j <= n_avail)
+        need = jnp.min(jnp.where(feasible_j, j, w + 1.0), axis=1)
+        # greedy winner: max f_alpha(age+1)/need over unscheduled feasible
+        ratio = _f_alpha_jax(ages + 1.0, alpha) / need
+        eligible = (~scheduled) & (need <= n_avail)
+        ratio = jnp.where(eligible, ratio, -jnp.inf)
+        best = jnp.argmax(ratio)
+        ok = (~done) & jnp.isfinite(ratio[best])
+        # winner takes its best `need[best]` available subchannels
+        rank = jnp.argsort(jnp.argsort(-jnp.where(available, snr_mat[best],
+                                                  -jnp.inf)))
+        take = ok & (rank < need[best])
+        available = available & ~take
+        scheduled = jnp.where(ok, scheduled.at[best].set(True), scheduled)
+        return available, scheduled, done | ~ok
+
+    _, scheduled, _ = lax.fori_loop(
+        0, w, body,
+        (jnp.ones(w, bool), jnp.zeros(n, bool), jnp.bool_(False)))
+    return scheduled
+
+
+def _age_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
+    n, w = pcfg.n_devices, pcfg.n_subchannels
+    snr_mat = st.snr_lin[:, None] * jax.random.exponential(st.key, (n, w))
+    return age_greedy_jax(st.ages, snr_mat, pcfg.model_bits / pcfg.deadline_s,
+                          pcfg.sub_bw, pcfg.age_alpha)
+
+
+_POLICIES: Dict[str, PolicyFn] = {
+    "random": _random_jax,
+    "round_robin": _round_robin_jax,
+    "best_channel": _best_channel_jax,
+    "latency": _latency_jax,
+    "pf": _pf_jax,
+    "bn2": _bn2_jax,
+    "bc_bn2": _bc_bn2_jax,
+    "bn2_c": _bn2_c_jax,
+    "deadline": _deadline_jax,
+    "age": _age_jax,
+}
+
+
+def get_policy(name: str) -> PolicyFn:
+    """Registry lookup: policy name -> pure-jnp mask function (static arg of
+    the compiled engine)."""
+    try:
+        return _POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {name!r}; known: {sorted(_POLICIES)}") from None
+
+
+def policy_names() -> Tuple[str, ...]:
+    return tuple(_POLICIES)
+
+
+def update_ages_jax(ages: jnp.ndarray, scheduled: jnp.ndarray) -> jnp.ndarray:
+    """Age recursion: 0 if scheduled else age+1."""
+    return jnp.where(scheduled, 0.0, ages + 1.0)

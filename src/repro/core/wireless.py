@@ -13,8 +13,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -134,3 +136,78 @@ def rounds_required_rr(u_scheduled: float, k: int, n: int) -> float:
     """Eq. (54): RR pays the N/K scheduling duty cycle on top of the
     per-scheduled-round success probability."""
     return (n / k) * rounds_required(u_scheduled)
+
+
+# ---------------------------------------------------------------------------
+# jnp twin of the channel layer (device-resident simulation engine)
+#
+# Same physics as the numpy functions above, but driven by jax.random keys
+# and traceable scalars so an entire multi-round simulation compiles into one
+# XLA program (fl/runtime.py) and channel configs can be vmapped in sweeps.
+# Static integers (n_devices, n_subchannels) stay on WirelessConfig; the
+# traced continuous parameters live in ChannelParams.
+# ---------------------------------------------------------------------------
+class ChannelParams(NamedTuple):
+    """Traceable (vmappable) twin of WirelessConfig's continuous fields."""
+    cell_radius_m: jnp.ndarray
+    bandwidth_hz: jnp.ndarray
+    noise_dbw_per_hz: jnp.ndarray
+    tx_power_dbm: jnp.ndarray
+    path_loss_exponent: jnp.ndarray
+    ref_loss_db: jnp.ndarray
+
+
+def channel_params(cfg: WirelessConfig) -> ChannelParams:
+    return ChannelParams(
+        cell_radius_m=jnp.float32(cfg.cell_radius_m),
+        bandwidth_hz=jnp.float32(cfg.bandwidth_hz),
+        noise_dbw_per_hz=jnp.float32(cfg.noise_dbw_per_hz),
+        tx_power_dbm=jnp.float32(cfg.tx_power_dbm),
+        path_loss_exponent=jnp.float32(cfg.path_loss_exponent),
+        ref_loss_db=jnp.float32(cfg.ref_loss_db),
+    )
+
+
+def stack_channel_params(cfgs) -> ChannelParams:
+    """Stack several WirelessConfigs into one ChannelParams with a leading
+    variant axis (the vmap axis of ``runtime.run_sweep``)."""
+    ps = [channel_params(c) for c in cfgs]
+    return ChannelParams(*(jnp.stack([getattr(p, f) for p in ps])
+                           for f in ChannelParams._fields))
+
+
+def sample_positions_jax(key: jax.Array, cp: ChannelParams,
+                         n_devices: int) -> jnp.ndarray:
+    """Uniform in the disk of radius R (distances to the BS at origin)."""
+    r = cp.cell_radius_m * jnp.sqrt(jax.random.uniform(key, (n_devices,)))
+    return jnp.maximum(r, 1.0)
+
+
+def path_gain_jax(dist_m: jnp.ndarray, cp: ChannelParams) -> jnp.ndarray:
+    loss_db = cp.ref_loss_db + 10.0 * cp.path_loss_exponent * jnp.log10(dist_m)
+    return 10.0 ** (-loss_db / 10.0)
+
+
+def sample_fading_jax(key: jax.Array, n: int) -> jnp.ndarray:
+    """Rayleigh block fading power |h|^2 ~ Exp(1), i.i.d. per round."""
+    return jax.random.exponential(key, (n,))
+
+
+def snr_jax(dist_m: jnp.ndarray, fading: jnp.ndarray, cp: ChannelParams,
+            bandwidth_hz: jnp.ndarray | float | None = None) -> jnp.ndarray:
+    bw = bandwidth_hz if bandwidth_hz is not None else cp.bandwidth_hz
+    p = 10.0 ** ((cp.tx_power_dbm - 30.0) / 10.0)
+    n0 = 10.0 ** (cp.noise_dbw_per_hz / 10.0) * bw
+    return p * path_gain_jax(dist_m, cp) * fading / n0
+
+
+def shannon_rate_jax(snr_lin: jnp.ndarray,
+                     bandwidth_hz: jnp.ndarray | float) -> jnp.ndarray:
+    """bits/s (eq. 40 up to the orthogonal-subchannel split)."""
+    return bandwidth_hz * jnp.log2(1.0 + snr_lin)
+
+
+def comm_latency_jax(bits: jnp.ndarray | float,
+                     rate_bps: jnp.ndarray) -> jnp.ndarray:
+    """L_comm = d / R (paper §III)."""
+    return bits / jnp.maximum(rate_bps, 1e-9)

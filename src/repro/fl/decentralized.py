@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import shard_map
+
 PyTree = Any
 
 
@@ -70,7 +72,7 @@ def ring_gossip_shard_map(mesh, axis: str = "data",
 
     def apply(stacked: PyTree) -> PyTree:
         spec = P(axis)
-        return jax.shard_map(
+        return shard_map(
             mix_local, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: spec, stacked),),
             out_specs=jax.tree.map(lambda _: spec, stacked),

@@ -1,26 +1,58 @@
-"""Wireless FL simulation runtime (paper §III experiments).
+"""Device-resident wireless FL simulation engine (paper §III experiments).
 
-Host-side loop per round: sample the channel -> run the scheduling policy ->
-run the (jitted) FL round with the participation mask -> account wall-clock
-latency. This is the engine behind benchmarks for Fig. 1, Fig. 2, Table I.
+Architecture
+------------
+An entire multi-round simulation compiles into **one XLA program**:
+
+* the channel layer is ``jnp`` (``core/wireless.py`` jnp twins) driven by
+  ``jax.random`` keys — continuous channel parameters travel as a traced
+  :class:`~repro.core.wireless.ChannelParams`, so they can be vmapped;
+* the scheduling policy is a pure-``jnp`` function from the registry
+  ``scheduling.get_policy(name)`` — the *name* is static, so there is no
+  Python branch in the compiled program;
+* ``run_simulation_scan`` wraps one round as a ``lax.scan`` body whose carry
+  is ``(FLState, wall_clock, ages, update_norms, avg_snr)`` — the last being
+  the per-device time-averaged-SNR EMA behind true proportional-fair;
+  latency accounting (synchronous round = max over scheduled devices) and
+  the age recursion live *inside* the scan; per-round logs come back
+  stacked;
+* ``run_sweep`` vmaps the scanned engine over seed x channel-config variants
+  (policies iterate in Python — they are static arguments) in **one**
+  compiled call per policy;
+* compiled engines are cached per static config (``_ENGINE_CACHE``, bounded
+  FIFO) so repeated calls never re-trace; on the single-run path the initial
+  params are donated (they alias the returned final params, letting XLA run
+  the scan in-place on the parameter buffers).
+
+``run_simulation`` / ``run_hfl`` keep the legacy host-loop signature as thin
+wrappers: ``engine="host"`` (or a host-only ``eval_fn`` with no attached
+``eval_batch``) falls back to a per-round dispatch loop built from the *same*
+round step, which is also the baseline the benchmarks compare against.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, List, Optional
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.core import scheduling, wireless
 from repro.core.hierarchy import (HFLConfig, hex_centers, assign_clusters_hex,
                                   broadcast_to_clients, inter_cluster_average,
                                   intra_cluster_average)
 from repro.fl import server as fl_server
+from repro.fl.client import local_sgd
 
 PyTree = Any
+
+# trace-time side effect counter: bumped once per engine (re)trace, so tests
+# and benchmarks can assert the no-retrace property of the engine cache.
+ENGINE_STATS = {"traces": 0}
 
 
 @dataclasses.dataclass
@@ -30,8 +62,7 @@ class SimConfig:
     rounds: int = 100
     local_steps: int = 1
     lr: float = 0.05
-    policy: str = "random"  # random | round_robin | best_channel | latency |
-    #                         pf | age | bn2 | bc_bn2 | bn2_c | deadline
+    policy: str = "random"  # see scheduling.policy_names()
     seed: int = 0
     model_bits: float = 1e6          # uplink payload per round
     comp_latency_s: float = 0.05     # per-device compute time (mean)
@@ -50,105 +81,337 @@ class RoundLog:
     participation: np.ndarray
 
 
-def select_devices(cfg: SimConfig, t: int, rng: np.random.Generator,
-                   gains: np.ndarray, rates: np.ndarray, ages: np.ndarray,
-                   update_norms: np.ndarray, comp_lat: np.ndarray,
-                   wcfg: wireless.WirelessConfig) -> np.ndarray:
-    n, k = cfg.n_devices, cfg.n_scheduled
-    comm_lat = wireless.comm_latency(cfg.model_bits, rates)
-    if cfg.policy == "random":
-        return scheduling.random_schedule(rng, n, k)
-    if cfg.policy == "round_robin":
-        return scheduling.round_robin(t, n, k)
-    if cfg.policy == "best_channel":
-        return scheduling.best_channel(gains, k)
-    if cfg.policy == "latency":
-        return scheduling.latency_minimal(comm_lat, comp_lat, k)
-    if cfg.policy == "pf":
-        return scheduling.proportional_fair(gains, np.full(n, gains.mean()), k)
-    if cfg.policy == "bn2":
-        return scheduling.best_norm(update_norms, k)
-    if cfg.policy == "bc_bn2":
-        return scheduling.bc_bn2(gains, update_norms, min(2 * k, n), k)
-    if cfg.policy == "bn2_c":
-        return scheduling.bn2_c(update_norms, rates, int(cfg.model_bits / 32),
-                                cfg.deadline_s, k)
-    if cfg.policy == "age":
-        sub_bw = wcfg.bandwidth_hz / wcfg.n_subchannels
-        snr_mat = np.outer(gains, np.ones(wcfg.n_subchannels)) * \
-            rng.exponential(1.0, size=(n, wcfg.n_subchannels))
-        r_min = cfg.model_bits / cfg.deadline_s
-        mask, _ = scheduling.age_based_greedy(ages, snr_mat, r_min, sub_bw,
-                                              wcfg.n_subchannels, cfg.age_alpha)
-        return mask
-    if cfg.policy == "deadline":
-        return scheduling.deadline_greedy(comm_lat, comp_lat, cfg.deadline_s)
-    raise ValueError(f"unknown policy {cfg.policy}")
+@dataclasses.dataclass
+class SimLogs:
+    """Stacked per-round logs. Arrays carry a leading ``(rounds,)`` axis —
+    or ``(variants, rounds)`` when produced by :func:`run_sweep`."""
+    loss: np.ndarray
+    latency_s: np.ndarray
+    n_scheduled: np.ndarray
+    participation: np.ndarray  # (..., rounds, n_devices) bool
+
+    def to_round_logs(self) -> List[RoundLog]:
+        if self.loss.ndim != 1:
+            raise ValueError("to_round_logs needs unbatched (rounds,) logs")
+        return [RoundLog(t, float(self.latency_s[t]), float(self.loss[t]),
+                         int(self.n_scheduled[t]), self.participation[t])
+                for t in range(self.loss.shape[0])]
+
+
+def stack_batches(sample_client_batches: Callable[[int, int], Dict[str, jnp.ndarray]],
+                  rounds: int, n_devices: int) -> PyTree:
+    """Pre-sample every round's client batches; leaves get a leading
+    ``(rounds,)`` axis (the xs of the scan)."""
+    per_round = [sample_client_batches(t, n_devices) for t in range(rounds)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_round)
+
+
+def _policy_cfg(cfg: SimConfig, wcfg: wireless.WirelessConfig
+                ) -> scheduling.PolicyConfig:
+    return scheduling.PolicyConfig(
+        n_devices=cfg.n_devices, n_scheduled=cfg.n_scheduled,
+        model_bits=cfg.model_bits, deadline_s=cfg.deadline_s,
+        age_alpha=cfg.age_alpha,
+        sub_bw=wcfg.bandwidth_hz / wcfg.n_subchannels,
+        n_subchannels=wcfg.n_subchannels)
+
+
+def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
+                  has_eval: bool):
+    """Shared round logic for both engines. Returns
+    ``(init_carry, make_step, engine)``; ``engine`` is the full scanned run.
+    """
+    n = cfg.n_devices
+    pcfg = _policy_cfg(cfg, wcfg)
+    policy_fn = scheduling.get_policy(cfg.policy)
+    round_fn = functools.partial(
+        fl_server.fl_round, loss_fn=loss_fn, lr=cfg.lr,
+        compressor=cfg.compressor, server=cfg.server)
+
+    def init_carry(init_params):
+        state0 = fl_server.init_fl_state(
+            init_params, n, use_ef=cfg.compressor is not None,
+            server=cfg.server)
+        state0 = dataclasses.replace(state0, round=jnp.int32(0))
+        return (state0, jnp.float32(0.0), jnp.zeros(n, jnp.float32),
+                jnp.ones(n, jnp.float32), jnp.zeros(n, jnp.float32))
+
+    def make_step(chan: wireless.ChannelParams, dist: jnp.ndarray,
+                  k_rounds: jax.Array, eval_batch):
+        def step(carry, xs):
+            state, clock, ages, norms, avg_snr = carry
+            t, batches = xs
+            kt = jax.random.fold_in(k_rounds, t)
+            kf, kc, kp, kn = jax.random.split(kt, 4)
+
+            fading = wireless.sample_fading_jax(kf, n)
+            snr_lin = wireless.snr_jax(dist, fading, chan)
+            rates = wireless.shannon_rate_jax(
+                snr_lin, chan.bandwidth_hz / cfg.n_scheduled)
+            comp_lat = cfg.comp_latency_s * jax.random.exponential(kc, (n,))
+            comm_lat = wireless.comm_latency_jax(cfg.model_bits, rates)
+            # per-device time-averaged SNR (PF's denominator), seeded with
+            # the first observation
+            avg_snr = jnp.where(t == 0, snr_lin,
+                                0.9 * avg_snr + 0.1 * snr_lin)
+
+            rstate = scheduling.RoundState(
+                t=t, key=kp, snr_lin=snr_lin, avg_snr=avg_snr, rates=rates,
+                comm_lat=comm_lat, comp_lat=comp_lat, ages=ages,
+                update_norms=norms)
+            mask = policy_fn(pcfg, rstate)
+            ages = scheduling.update_ages_jax(ages, mask)
+
+            state, metrics = round_fn(
+                state, batches, participation=mask.astype(jnp.float32))
+
+            # wall-clock: synchronous round = slowest scheduled device
+            total = comm_lat + comp_lat
+            lat = jnp.where(jnp.any(mask),
+                            jnp.max(jnp.where(mask, total, -jnp.inf)),
+                            jnp.float32(0.0))
+            clock = clock + lat
+
+            loss = metrics["loss"]
+            if has_eval:
+                loss = loss_fn(state.params, eval_batch)[0]
+            # update-aware policies observe last-round delta norms (proxy)
+            norms = 0.9 * norms + 0.1 * jax.random.exponential(kn, (n,))
+            return (state, clock, ages, norms, avg_snr), (loss, clock,
+                                                          mask, jnp.sum(mask))
+        return step
+
+    def engine(key, chan, init_params, batches_all, eval_batch):
+        ENGINE_STATS["traces"] += 1  # python side effect: runs at trace only
+        k_pos, k_rounds = jax.random.split(key)
+        dist = wireless.sample_positions_jax(k_pos, chan, n)
+        step = make_step(chan, dist, k_rounds, eval_batch)
+        ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
+        (state, *_), (losses, clocks, masks, nsched) = lax.scan(
+            step, init_carry(init_params), (ts, batches_all))
+        return state.params, (losses, clocks, masks, nsched)
+
+    return init_carry, make_step, engine
+
+
+def _engine_key(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
+                has_eval: bool, tag: str) -> Tuple:
+    # continuous channel params are traced (ChannelParams); everything the
+    # trace specializes on must appear here.
+    return (tag, cfg.policy, cfg.rounds, cfg.n_devices, cfg.n_scheduled,
+            cfg.lr, cfg.model_bits, cfg.comp_latency_s, cfg.deadline_s,
+            cfg.age_alpha, cfg.server, cfg.compressor,
+            wcfg.n_subchannels, wcfg.bandwidth_hz, loss_fn, has_eval)
+
+
+_ENGINE_CACHE: Dict[Tuple, Callable] = {}
+_ENGINE_CACHE_MAX = 64  # engines keyed partly on loss_fn identity; bound the
+#                         retained compiled programs (FIFO eviction)
+
+
+def _cached(cache: Dict[Tuple, Callable], key: Tuple,
+            make: Callable[[], Callable]) -> Callable:
+    """Bounded-FIFO memoization for compiled engines/steps."""
+    fn = cache.get(key)
+    if fn is None:
+        while len(cache) >= _ENGINE_CACHE_MAX:
+            cache.pop(next(iter(cache)))
+        fn = cache[key] = make()
+    return fn
+
+
+def _get_engine(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
+                has_eval: bool, *, vmapped: bool = False) -> Callable:
+    def make():
+        _, _, engine = _make_sim_fns(cfg, wcfg, loss_fn, has_eval)
+        if vmapped:
+            # broadcast init_params can't alias the per-variant outputs, so
+            # there is nothing useful to donate on the sweep path.
+            return jax.jit(jax.vmap(engine, in_axes=(0, 0, None, None, None)))
+        # init_params aliases the returned final params exactly; the
+        # wrappers below pass a fresh copy, so donating it is safe and
+        # lets XLA run the whole scan in-place on the parameter buffers.
+        return jax.jit(engine, donate_argnums=(2,))
+
+    return _cached(_ENGINE_CACHE,
+                   _engine_key(cfg, wcfg, loss_fn, has_eval,
+                               "sweep" if vmapped else "single"), make)
+
+
+def _get_host_step(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
+                   has_eval: bool) -> Callable:
+    """Jitted per-round step with the run-specific values (channel params,
+    positions, round key, eval batch) as *arguments*, so the compiled step
+    is shared across runs of the same static config (no per-call retrace)."""
+    def make():
+        _, make_step, _ = _make_sim_fns(cfg, wcfg, loss_fn, has_eval)
+
+        def host_step(chan, dist, k_rounds, eval_batch, carry, xs):
+            return make_step(chan, dist, k_rounds, eval_batch)(carry, xs)
+
+        return jax.jit(host_step)
+
+    return _cached(_ENGINE_CACHE,
+                   _engine_key(cfg, wcfg, loss_fn, has_eval, "host-step"),
+                   make)
+
+
+def run_simulation_scan(cfg: SimConfig, loss_fn, init_params: PyTree,
+                        batches: PyTree, *,
+                        eval_batch: Optional[Dict[str, jnp.ndarray]] = None,
+                        wcfg: Optional[wireless.WirelessConfig] = None
+                        ) -> Tuple[PyTree, SimLogs]:
+    """Run ``cfg.rounds`` rounds as a single compiled ``lax.scan`` call.
+
+    ``batches``: pytree with leading ``(rounds, n_devices, H, ...)`` leaves
+    (see :func:`stack_batches`). Returns (final params, stacked logs).
+    """
+    wcfg = wcfg or wireless.WirelessConfig(n_devices=cfg.n_devices)
+    engine = _get_engine(cfg, wcfg, loss_fn, eval_batch is not None)
+    key = jax.random.PRNGKey(cfg.seed)
+    chan = wireless.channel_params(wcfg)
+    init_copy = jax.tree.map(jnp.array, init_params)  # donated to the engine
+    params, (losses, clocks, masks, nsched) = engine(
+        key, chan, init_copy, batches, eval_batch)
+    losses, clocks, masks, nsched = jax.device_get(
+        (losses, clocks, masks, nsched))
+    return params, SimLogs(loss=losses, latency_s=clocks,
+                           n_scheduled=nsched, participation=masks)
 
 
 def run_simulation(cfg: SimConfig, loss_fn, init_params: PyTree,
                    sample_client_batches: Callable[[int, int], Dict[str, jnp.ndarray]],
                    eval_fn: Optional[Callable[[PyTree], float]] = None,
-                   wcfg: Optional[wireless.WirelessConfig] = None
-                   ) -> List[RoundLog]:
-    """Run ``cfg.rounds`` rounds; returns per-round logs.
+                   wcfg: Optional[wireless.WirelessConfig] = None,
+                   engine: Optional[str] = None) -> List[RoundLog]:
+    """Legacy entry point: returns per-round ``RoundLog``s.
 
-    sample_client_batches(round, n_devices) -> stacked batches (N, H, ...).
+    ``engine=None`` (default) auto-selects: the compiled scan engine when
+    possible, else the host loop. ``engine="scan"`` / ``"host"`` force a
+    path (forcing "scan" with an opaque ``eval_fn`` raises). Note the scan
+    engine pre-materializes all rounds' batches on device (O(rounds)
+    memory); use ``engine="host"`` for memory-constrained very long runs —
+    it samples lazily round-by-round like the seed loop.
+
+    Eval contract: attaching an ``eval_batch`` attribute to ``eval_fn``
+    opts into in-program evaluation — the logged loss becomes
+    ``loss_fn(params, eval_batch)`` and the callable itself is **not**
+    invoked, so only attach it when ``eval_fn(p)`` computes exactly that
+    (as ``benchmarks.common.make_lm_problem`` does). An opaque host-side
+    ``eval_fn`` (no attribute) is honored as-is and runs on the host loop.
     """
+    if engine not in (None, "scan", "host"):
+        raise ValueError(f"unknown engine {engine!r}; use 'scan' or 'host'")
+    if cfg.rounds == 0:
+        return []
     wcfg = wcfg or wireless.WirelessConfig(n_devices=cfg.n_devices)
-    rng = np.random.default_rng(cfg.seed)
-    dist = wireless.sample_positions(rng, wcfg)
-    gains_large = wireless.path_gain(dist, wcfg)
-    ages = np.zeros(cfg.n_devices)
-    update_norms = np.ones(cfg.n_devices)
+    eval_batch = getattr(eval_fn, "eval_batch", None) if eval_fn else None
+    opaque_eval = eval_fn is not None and eval_batch is None
+    if engine == "scan" and opaque_eval:
+        raise ValueError(
+            "engine='scan' needs an in-program eval: attach eval_fn."
+            "eval_batch (logged loss becomes loss_fn(params, eval_batch)) "
+            "or drop engine= to let the host loop serve the opaque eval_fn")
+    if engine == "host" or opaque_eval:
+        return _run_simulation_host(cfg, loss_fn, init_params,
+                                    sample_client_batches, eval_fn,
+                                    eval_batch, wcfg)
+    batches = stack_batches(sample_client_batches, cfg.rounds, cfg.n_devices)
+    _, logs = run_simulation_scan(cfg, loss_fn, init_params, batches,
+                                  eval_batch=eval_batch, wcfg=wcfg)
+    return logs.to_round_logs()
 
-    state = fl_server.init_fl_state(
-        init_params, cfg.n_devices, use_ef=cfg.compressor is not None,
-        server=cfg.server)
-    round_fn = jax.jit(functools.partial(
-        fl_server.fl_round, loss_fn=loss_fn, lr=cfg.lr,
-        compressor=cfg.compressor, server=cfg.server))
 
+def _run_simulation_host(cfg: SimConfig, loss_fn, init_params: PyTree,
+                         sample_client_batches, eval_fn, eval_batch,
+                         wcfg: wireless.WirelessConfig) -> List[RoundLog]:
+    """Round-by-round dispatch loop over the *same* step function the scan
+    engine uses (parity baseline + host-side eval_fn support)."""
+    has_eval = eval_batch is not None
+    init_carry, _, _ = _make_sim_fns(cfg, wcfg, loss_fn, has_eval)
+    step = _get_host_step(cfg, wcfg, loss_fn, has_eval)
+    key = jax.random.PRNGKey(cfg.seed)
+    k_pos, k_rounds = jax.random.split(key)
+    chan = wireless.channel_params(wcfg)
+    dist = wireless.sample_positions_jax(k_pos, chan, cfg.n_devices)
+
+    carry = init_carry(init_params)
     logs: List[RoundLog] = []
-    clock = 0.0
     for t in range(cfg.rounds):
-        fading = wireless.sample_fading(rng, cfg.n_devices)
-        snr_lin = wireless.snr(dist, fading, wcfg)
-        rates = wireless.shannon_rate(snr_lin, wcfg.bandwidth_hz / cfg.n_scheduled)
-        comp_lat = rng.exponential(cfg.comp_latency_s, cfg.n_devices)
-
-        mask = select_devices(cfg, t, rng, snr_lin, rates, ages, update_norms,
-                              comp_lat, wcfg)
-        ages = scheduling.update_ages(ages, mask)
-
-        batches = sample_client_batches(t, cfg.n_devices)
-        state, metrics = round_fn(state, batches,
-                                  participation=jnp.asarray(mask, jnp.float32))
-
-        # wall-clock: synchronous round = slowest scheduled device
-        comm_lat = wireless.comm_latency(cfg.model_bits, rates)
-        if mask.any():
-            clock += float(np.max((comm_lat + comp_lat)[mask]))
-        loss = float(metrics["loss"])
-        if eval_fn is not None:
-            loss = eval_fn(state.params)
-        # update-aware policies observe last-round delta norms (proxy: loss)
-        update_norms = 0.9 * update_norms + 0.1 * rng.exponential(1.0, cfg.n_devices)
-        logs.append(RoundLog(t, clock, loss, int(mask.sum()), mask))
+        bt = sample_client_batches(t, cfg.n_devices)
+        carry, (loss, clock, mask, nsched) = step(
+            chan, dist, k_rounds, eval_batch, carry, (jnp.int32(t), bt))
+        mask_np = np.asarray(mask)
+        lv = float(loss)
+        if eval_fn is not None and not has_eval:
+            lv = eval_fn(carry[0].params)
+        logs.append(RoundLog(t, float(clock), lv, int(nsched), mask_np))
     return logs
 
 
 # ---------------------------------------------------------------------------
-# Hierarchical FL simulation (Alg. 9)
+# Fleet-scale sweeps: one vmapped call over seed x channel-config variants
 # ---------------------------------------------------------------------------
-def run_hfl(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
-            sample_client_batches: Callable[[int, int], Dict[str, jnp.ndarray]],
-            eval_fn: Optional[Callable[[PyTree], float]] = None
-            ) -> List[RoundLog]:
-    """HFL: intra-cluster averaging every round, inter-cluster every H."""
+def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
+              seeds: Sequence[int],
+              wcfgs: Optional[Sequence[wireless.WirelessConfig]] = None,
+              policies: Optional[Sequence[str]] = None,
+              eval_batch: Optional[Dict[str, jnp.ndarray]] = None
+              ) -> Dict[str, SimLogs]:
+    """Sweep policies x seeds x channel configs.
+
+    Policies iterate in Python (static engine arguments); the seed x config
+    grid runs as **one** vmapped+compiled call per policy. Returns
+    ``{policy: SimLogs}`` with ``(len(seeds)*len(wcfgs), rounds, ...)``
+    arrays, variants ordered ``itertools.product(seeds, wcfgs)``.
+
+    All ``wcfgs`` must share the static fields (``n_devices``,
+    ``n_subchannels``; additionally ``bandwidth_hz`` when sweeping the
+    ``age`` policy, whose per-subchannel bandwidth is a static argument of
+    the compiled engine); the remaining continuous fields (power, radius,
+    path loss, noise...) vary per variant through ``ChannelParams``.
+    """
+    wcfgs = list(wcfgs) if wcfgs else [
+        wireless.WirelessConfig(n_devices=cfg.n_devices)]
+    policies = list(policies) if policies else [cfg.policy]
+    statics = (wcfgs[0].n_devices, wcfgs[0].n_subchannels)
+    for w in wcfgs:
+        if (w.n_devices, w.n_subchannels) != statics:
+            raise ValueError("sweep wcfgs must share static fields "
+                             "(n_devices, n_subchannels)")
+        if "age" in policies and w.bandwidth_hz != wcfgs[0].bandwidth_hz:
+            raise ValueError(
+                "sweep wcfgs must share static bandwidth_hz for the 'age' "
+                "policy (its sub-band bandwidth compiles in statically)")
+
+    grid = list(itertools.product(seeds, wcfgs))
+    if not grid:
+        raise ValueError("run_sweep needs at least one (seed, wcfg) variant")
+    keys = jnp.stack([jax.random.PRNGKey(s) for s, _ in grid])
+    chans = wireless.stack_channel_params([w for _, w in grid])
+    results: Dict[str, SimLogs] = {}
+    for pol in policies:
+        cfg_p = dataclasses.replace(cfg, policy=pol)
+        engine = _get_engine(cfg_p, wcfgs[0], loss_fn,
+                             eval_batch is not None, vmapped=True)
+        _, (losses, clocks, masks, nsched) = engine(
+            keys, chans, init_params, batches, eval_batch)
+        losses, clocks, masks, nsched = jax.device_get(
+            (losses, clocks, masks, nsched))
+        results[pol] = SimLogs(loss=losses, latency_s=clocks,
+                               n_scheduled=nsched, participation=masks)
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical FL simulation (Alg. 9) — scanned engine
+# ---------------------------------------------------------------------------
+_HFL_MU_RATE_BPS = 1e7  # MU<->SBS link rate for the latency model (Table I)
+
+
+def _hfl_setup(cfg: SimConfig, hcfg: HFLConfig):
     rng = np.random.default_rng(cfg.seed)
     centers = hex_centers(hcfg.n_clusters)
-    # uniform positions in the covering disk
     theta = rng.random(cfg.n_devices) * 2 * np.pi
     r = 750.0 * np.sqrt(rng.random(cfg.n_devices))
     pos = np.stack([r * np.cos(theta), r * np.sin(theta)], -1)
@@ -156,17 +419,98 @@ def run_hfl(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
     cluster_ids = jnp.asarray(cluster_ids_np)
     cluster_sizes = jnp.asarray(np.bincount(cluster_ids_np,
                                             minlength=hcfg.n_clusters))
+    return cluster_ids, cluster_sizes
 
-    # per-client model replicas (cluster consensus keeps them loosely synced)
+
+def _make_hfl_engine(cfg: SimConfig, hcfg: HFLConfig, loss_fn, has_eval: bool):
+    h = hcfg.inter_cluster_period
+
+    def engine(cluster_ids, cluster_sizes, client_params0, batches_all,
+               eval_batch):
+        ENGINE_STATS["traces"] += 1
+
+        def local_one(p, b):
+            _, p_new, loss = local_sgd(loss_fn, p, b, cfg.lr)
+            return p_new, loss
+
+        def sync(cm):
+            g = inter_cluster_average(cm, cluster_sizes)
+            return jax.tree.map(
+                lambda gg: jnp.broadcast_to(
+                    gg[None], (hcfg.n_clusters,) + gg.shape), g)
+
+        def step(client_params, xs):
+            t, batches = xs
+            new_params, losses = jax.vmap(local_one)(client_params, batches)
+            cluster_models = intra_cluster_average(new_params, cluster_ids,
+                                                   hcfg.n_clusters)
+            cluster_models = lax.cond((t + 1) % h == 0, sync,
+                                      lambda cm: cm, cluster_models)
+            client_params = broadcast_to_clients(cluster_models, cluster_ids)
+            loss = jnp.mean(losses)
+            if has_eval:
+                loss = loss_fn(inter_cluster_average(cluster_models,
+                                                     cluster_sizes),
+                               eval_batch)[0]
+            return client_params, loss
+
+        ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
+        client_params, losses = lax.scan(step, client_params0,
+                                         (ts, batches_all))
+        return client_params, losses
+
+    return engine
+
+
+_HFL_CACHE: Dict[Tuple, Callable] = {}
+
+
+def run_hfl(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
+            sample_client_batches: Callable[[int, int], Dict[str, jnp.ndarray]],
+            eval_fn: Optional[Callable[[PyTree], float]] = None
+            ) -> List[RoundLog]:
+    """HFL (intra-cluster averaging every round, inter-cluster every H) as a
+    single scanned program. Same eval contract as :func:`run_simulation`."""
+    if cfg.rounds == 0:
+        return []
+    eval_batch = getattr(eval_fn, "eval_batch", None) if eval_fn else None
+    if eval_fn is not None and eval_batch is None:
+        return _run_hfl_host(cfg, hcfg, loss_fn, init_params,
+                             sample_client_batches, eval_fn)
+
+    cluster_ids, cluster_sizes = _hfl_setup(cfg, hcfg)
+    client_params0 = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (cfg.n_devices,) + p.shape),
+        init_params)
+    batches = stack_batches(sample_client_batches, cfg.rounds, cfg.n_devices)
+
+    key = (cfg.rounds, cfg.n_devices, cfg.lr, hcfg.n_clusters,
+           hcfg.inter_cluster_period, loss_fn, eval_batch is not None)
+    engine = _cached(_HFL_CACHE, key,
+                     lambda: jax.jit(_make_hfl_engine(
+                         cfg, hcfg, loss_fn, eval_batch is not None)))
+    _, losses = engine(cluster_ids, cluster_sizes, client_params0, batches,
+                       eval_batch)
+    losses = jax.device_get(losses)
+
+    hfl_lat, _ = hfl_round_latency_step(cfg, hcfg, _HFL_MU_RATE_BPS, 0)
+    return [RoundLog(t, hfl_lat * (t + 1), float(losses[t]), cfg.n_devices,
+                     np.ones(cfg.n_devices, bool))
+            for t in range(cfg.rounds)]
+
+
+def _run_hfl_host(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
+                  sample_client_batches, eval_fn) -> List[RoundLog]:
+    """Legacy per-round HFL loop (host-side eval_fn support)."""
+    cluster_ids, cluster_sizes = _hfl_setup(cfg, hcfg)
     client_params = jax.tree.map(
-        lambda p: jnp.broadcast_to(p[None], (cfg.n_devices,) + p.shape), init_params)
-
-    from repro.fl.client import local_sgd
+        lambda p: jnp.broadcast_to(p[None], (cfg.n_devices,) + p.shape),
+        init_params)
 
     @jax.jit
     def hfl_round(client_params, batches):
         def one(p, b):
-            delta, p_new, loss = local_sgd(loss_fn, p, b, cfg.lr)
+            _, p_new, loss = local_sgd(loss_fn, p, b, cfg.lr)
             return p_new, loss
         new_params, losses = jax.vmap(one)(client_params, batches)
         cluster_models = intra_cluster_average(new_params, cluster_ids,
@@ -175,7 +519,7 @@ def run_hfl(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
 
     logs: List[RoundLog] = []
     clock = 0.0
-    mu_rate = 1e7
+    mu_rate = _HFL_MU_RATE_BPS
     for t in range(cfg.rounds):
         batches = sample_client_batches(t, cfg.n_devices)
         cluster_models, client_params, loss = hfl_round(client_params, batches)
@@ -187,8 +531,9 @@ def run_hfl(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
         client_params = broadcast_to_clients(cluster_models, cluster_ids)
         hfl_lat, _ = hfl_round_latency_step(cfg, hcfg, mu_rate, t)
         clock += hfl_lat
-        lv = float(loss) if eval_fn is None else eval_fn(
-            inter_cluster_average(cluster_models, cluster_sizes))
+        # run_hfl only routes here for an opaque eval_fn; the no-eval case
+        # runs through the scanned engine
+        lv = eval_fn(inter_cluster_average(cluster_models, cluster_sizes))
         logs.append(RoundLog(t, clock, lv, cfg.n_devices,
                              np.ones(cfg.n_devices, bool)))
     return logs

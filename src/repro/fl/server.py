@@ -104,10 +104,6 @@ def fl_round(state: FLState, stacked_batches: Dict[str, jnp.ndarray],
                    state.round + 1), metrics
 
 
-def _neg(tree: PyTree) -> PyTree:
-    return jax.tree.map(lambda x: -x, tree)
-
-
 def _global_norm(tree: PyTree) -> jnp.ndarray:
     return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
                         for x in jax.tree.leaves(tree)))

@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import LONG_CONTEXT_WINDOW, ModelConfig, ShapeSpec
 from repro.core.collectives import hierarchical_allreduce
+from repro.core.compat import shard_map
 from repro.launch.mesh import data_axes, n_data_shards
 from repro.launch import sharding as shard_rules
 from repro.models import transformer as tf
@@ -173,7 +174,7 @@ def _make_pssgd_step(cfg: ModelConfig, policy: TrainPolicy, mesh):
         in_specs = (P(), P(), jax.tree.map(lambda _: ef_spec, ef), P(),
                     jax.tree.map(lambda _: batch_spec, batch))
         out_specs = (P(), P(), jax.tree.map(lambda _: ef_spec, ef), P(), P())
-        params, opt, ef, step, loss = jax.shard_map(
+        params, opt, ef, step, loss = shard_map(
             inner, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             axis_names=set(dp), check_vma=False)(
             state["params"], state["opt"], ef, state["step"], batch)
@@ -245,7 +246,7 @@ def _make_localsgd_step(cfg: ModelConfig, policy: TrainPolicy, mesh):
                     jax.tree.map(lambda _: P(dp), batch))
         out_specs = (specs(state["params"]), specs(opt.m), specs(opt.v), P(),
                      specs(ef), P(), P())
-        params, m, v, ostep, ef, step, loss = jax.shard_map(
+        params, m, v, ostep, ef, step, loss = shard_map(
             inner, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             axis_names=set(dp), check_vma=False)(
             state["params"], opt.m, opt.v, opt.step, ef, state["step"], batch)

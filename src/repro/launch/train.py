@@ -106,9 +106,13 @@ def run_federated(args) -> None:
         compressor=make_compressor(args.compressor),
         model_bits=32.0 * sum(p.size for p in jax.tree.leaves(params)))
 
+    # engine="host" keeps the seed's O(1)-per-round batch memory: the scan
+    # engine would stack all rounds' token batches on device, which for real
+    # transformer payloads and long runs can exceed accelerator memory.
     logs = fl_runtime.run_simulation(
         sim, loss_fn, params,
-        lambda t, n: {k: jnp.asarray(v) for k, v in loader.next_round().items()})
+        lambda t, n: {k: jnp.asarray(v) for k, v in loader.next_round().items()},
+        engine=args.engine)
     for lg in logs[:: max(1, len(logs) // 20)]:
         print(f"round {lg.round:4d} t={lg.latency_s:9.1f}s loss={lg.loss:.4f} "
               f"sched={lg.n_scheduled}")
@@ -137,6 +141,11 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     # federated args
     ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--engine", default="host", choices=["scan", "host"],
+                    help="simulation engine: 'scan' compiles the whole run "
+                         "but stacks all rounds' batches on device "
+                         "(O(rounds) memory); 'host' (default) samples "
+                         "round-by-round like the seed loop")
     ap.add_argument("--n-devices", type=int, default=16)
     ap.add_argument("--n-scheduled", type=int, default=8)
     ap.add_argument("--local-steps", type=int, default=2)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.compat import shard_map
 from repro.models.layers import dense_init
 
 Params = Dict[str, jnp.ndarray]
@@ -197,7 +198,7 @@ def moe_forward_ep(p: Params, x: jnp.ndarray, cfg: ModelConfig, mesh,
     except Exception:  # noqa: BLE001
         use_mesh = mesh
     shard_ids = jnp.arange(use_mesh.shape[axis], dtype=jnp.int32)
-    out = jax.shard_map(
+    out = shard_map(
         local_block, mesh=use_mesh,
         in_specs=(P(), P(), P(), P(), P(axis), P(axis), P(axis), P(axis)),
         out_specs=P(), axis_names={axis}, check_vma=False,

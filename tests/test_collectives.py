@@ -16,6 +16,7 @@ _SCRIPT = textwrap.dedent("""
     from jax.sharding import PartitionSpec as P
     from repro.core.collectives import (compressed_allreduce_leaf,
                                         hierarchical_allreduce)
+    from repro.core.compat import shard_map
 
     mesh = jax.make_mesh((2, 4), ("pod", "data"))
     n = 8
@@ -33,12 +34,12 @@ _SCRIPT = textwrap.dedent("""
             out, e2 = hierarchical_allreduce(
                 g, ("pod", "data"), method, e, min_size=16)
             return out[None], (e2[None] if use_ef else jnp.zeros((1, 1)))
-        f = jax.jit(jax.shard_map(inner, mesh=mesh,
-                                  in_specs=(P(("pod", "data")),),
-                                  out_specs=(P(("pod", "data")),
-                                             P(("pod", "data"))),
-                                  axis_names={"pod", "data"},
-                                  check_vma=False))
+        f = jax.jit(shard_map(inner, mesh=mesh,
+                              in_specs=(P(("pod", "data")),),
+                              out_specs=(P(("pod", "data")),
+                                         P(("pod", "data"))),
+                              axis_names={"pod", "data"},
+                              check_vma=False))
         out, e2 = f(gs)
         return out, e2
 

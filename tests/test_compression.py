@@ -37,10 +37,12 @@ def test_randk_count_and_unbiased_scaling(key):
 
 def test_randk_unbiased_in_expectation(key):
     g = jax.random.normal(key, (128,))
-    outs = [randk_sparsify(jax.random.PRNGKey(i), g, 32, unbiased=True)[0]
-            for i in range(800)]
-    mean = jnp.stack(outs).mean(0)
-    np.testing.assert_allclose(np.asarray(mean), np.asarray(g), atol=0.25)
+    # 3000 draws: the d/k=4 scaling needs ~O(1/sqrt(n)) slack below the
+    # tolerance (800 draws sat right at it -> seed-sensitive flake)
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(3000))
+    outs = jax.vmap(lambda k: randk_sparsify(k, g, 32, unbiased=True)[0])(keys)
+    np.testing.assert_allclose(np.asarray(outs.mean(0)), np.asarray(g),
+                               atol=0.25)
 
 
 def test_rtopk_subset_of_top_r(key):

@@ -1,0 +1,205 @@
+"""Device-resident simulation engine (fl/runtime.py): scan/host parity,
+sweep shapes + determinism, and the no-retrace property of the engine cache.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import make_linear_problem
+from repro.core import scheduling, wireless
+from repro.fl import runtime as rt
+
+
+def _make_problem():
+    params, loss_fn, make_batches, _ = make_linear_problem(d=16)
+    return params, loss_fn, make_batches
+
+
+@pytest.mark.parametrize("policy", ["random", "round_robin"])
+def test_scan_host_parity(policy):
+    """The lax.scan engine and the legacy host loop produce identical
+    per-round masks and losses at a fixed seed."""
+    params0, loss_fn, make_batches = _make_problem()
+    cfg = rt.SimConfig(n_devices=8, n_scheduled=3, rounds=12, lr=0.1,
+                       policy=policy, seed=5)
+    scan_logs = rt.run_simulation(cfg, loss_fn, params0, make_batches,
+                                  engine="scan")
+    host_logs = rt.run_simulation(cfg, loss_fn, params0, make_batches,
+                                  engine="host")
+    assert len(scan_logs) == len(host_logs) == cfg.rounds
+    for s, h in zip(scan_logs, host_logs):
+        np.testing.assert_array_equal(s.participation, h.participation)
+        assert s.n_scheduled == h.n_scheduled
+        np.testing.assert_allclose(s.loss, h.loss, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(s.latency_s, h.latency_s,
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_all_policies_run_in_scan_engine():
+    params0, loss_fn, make_batches = _make_problem()
+    for pol in scheduling.policy_names():
+        cfg = rt.SimConfig(n_devices=6, n_scheduled=3, rounds=3, lr=0.1,
+                           policy=pol)
+        logs = rt.run_simulation(cfg, loss_fn, params0, make_batches)
+        assert len(logs) == 3
+        assert logs[-1].latency_s > 0
+        assert logs[-1].participation.shape == (6,)
+
+
+def test_engine_cache_no_retrace():
+    """Repeated runs with the same static config reuse the compiled engine:
+    one trace, one compiled program — not one dispatch per round."""
+    params0, loss_fn, make_batches = _make_problem()
+    cfg = rt.SimConfig(n_devices=8, n_scheduled=3, rounds=7, lr=0.1,
+                       policy="random", seed=11)
+    rt.run_simulation(cfg, loss_fn, params0, make_batches)  # compile
+    before = rt.ENGINE_STATS["traces"]
+    rt.run_simulation(cfg, loss_fn, params0, make_batches)
+    rt.run_simulation(cfg, loss_fn, params0, make_batches)
+    assert rt.ENGINE_STATS["traces"] == before
+
+
+def test_run_sweep_shapes_and_determinism():
+    params0, loss_fn, make_batches = _make_problem()
+    rounds, n = 5, 8
+    cfg = rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds, lr=0.1,
+                       policy="random")
+    batches = rt.stack_batches(make_batches, rounds, n)
+    wcfgs = [wireless.WirelessConfig(n_devices=n),
+             wireless.WirelessConfig(n_devices=n, tx_power_dbm=20.0)]
+    seeds = [0, 1, 2, 3]
+
+    out = rt.run_sweep(cfg, loss_fn, params0, batches, seeds=seeds,
+                       wcfgs=wcfgs, policies=["random", "best_channel"])
+    assert set(out) == {"random", "best_channel"}
+    v = len(seeds) * len(wcfgs)
+    assert v >= 8
+    for logs in out.values():
+        assert logs.loss.shape == (v, rounds)
+        assert logs.latency_s.shape == (v, rounds)
+        assert logs.participation.shape == (v, rounds, n)
+        assert logs.n_scheduled.shape == (v, rounds)
+        assert np.isfinite(logs.loss).all()
+
+    # deterministic: same call -> identical results
+    out2 = rt.run_sweep(cfg, loss_fn, params0, batches, seeds=seeds,
+                        wcfgs=wcfgs, policies=["random", "best_channel"])
+    np.testing.assert_array_equal(out["random"].loss, out2["random"].loss)
+    np.testing.assert_array_equal(out["random"].participation,
+                                  out2["random"].participation)
+
+    # different seeds schedule differently under the random policy
+    p = out["random"].participation
+    assert (p[0] != p[2]).any()  # seed 0 vs seed 1, same wcfg
+
+    # sweep variant 0 (seed 0, default wcfg) matches the single-run engine
+    _, single = rt.run_simulation_scan(
+        rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds, lr=0.1,
+                     policy="random", seed=0),
+        loss_fn, params0, batches, wcfg=wcfgs[0])
+    np.testing.assert_array_equal(out["random"].participation[0],
+                                  single.participation)
+    np.testing.assert_allclose(out["random"].loss[0], single.loss,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_sweep_rejects_mixed_static_fields():
+    params0, loss_fn, make_batches = _make_problem()
+    cfg = rt.SimConfig(n_devices=8, n_scheduled=3, rounds=2, lr=0.1)
+    batches = rt.stack_batches(make_batches, 2, 8)
+    with pytest.raises(ValueError, match="static"):
+        rt.run_sweep(cfg, loss_fn, params0, batches, seeds=[0],
+                     wcfgs=[wireless.WirelessConfig(n_devices=8),
+                            wireless.WirelessConfig(n_devices=8,
+                                                    n_subchannels=4)])
+    # bandwidth may vary per variant (traced via ChannelParams)...
+    bw_wcfgs = [wireless.WirelessConfig(n_devices=8),
+                wireless.WirelessConfig(n_devices=8, bandwidth_hz=1e7)]
+    out = rt.run_sweep(cfg, loss_fn, params0, batches, seeds=[0],
+                       wcfgs=bw_wcfgs, policies=["random"])
+    assert out["random"].loss.shape == (2, 2)
+    # ...except for the age policy, whose sub-band width compiles statically
+    with pytest.raises(ValueError, match="bandwidth_hz"):
+        rt.run_sweep(cfg, loss_fn, params0, batches, seeds=[0],
+                     wcfgs=bw_wcfgs, policies=["age"])
+
+
+def test_eval_batch_inside_scan_matches_host_eval_fn():
+    """Compiled in-scan eval equals the host-side eval_fn path."""
+    params0, loss_fn, make_batches = _make_problem()
+    eval_batch = jax.tree.map(lambda x: x[0], make_batches(999, 2))
+
+    def eval_fn(p):
+        return float(loss_fn(p, eval_batch)[0])
+    eval_fn.eval_batch = eval_batch
+
+    cfg = rt.SimConfig(n_devices=8, n_scheduled=3, rounds=6, lr=0.1,
+                       policy="round_robin", seed=2)
+    compiled = rt.run_simulation(cfg, loss_fn, params0, make_batches,
+                                 eval_fn=eval_fn)
+
+    def host_eval(p):  # no eval_batch attribute -> forces the host loop
+        return float(loss_fn(p, eval_batch)[0])
+    host = rt.run_simulation(cfg, loss_fn, params0, make_batches,
+                             eval_fn=host_eval)
+    for c, h in zip(compiled, host):
+        np.testing.assert_allclose(c.loss, h.loss, rtol=1e-4, atol=1e-5)
+
+
+def test_jnp_policy_parity_with_numpy_reference():
+    """jnp deadline greedy reproduces the numpy reference exactly."""
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        n = int(rng.integers(4, 12))
+        comm = rng.random(n)
+        comp = rng.random(n) * 0.2
+        tmax = float(rng.random() * 2)
+        ref = scheduling.deadline_greedy(comm, comp, tmax)
+        pcfg = scheduling.PolicyConfig(n_devices=n, n_scheduled=3,
+                                       deadline_s=tmax)
+        st = scheduling.RoundState(
+            t=jnp.int32(0), key=jax.random.PRNGKey(0),
+            snr_lin=jnp.zeros(n), avg_snr=jnp.zeros(n), rates=jnp.zeros(n),
+            comm_lat=jnp.asarray(comm, jnp.float32),
+            comp_lat=jnp.asarray(comp, jnp.float32),
+            ages=jnp.zeros(n), update_norms=jnp.zeros(n))
+        got = np.asarray(scheduling.get_policy("deadline")(pcfg, st))
+        np.testing.assert_array_equal(ref, got)
+
+
+def test_age_greedy_jax_matches_numpy_reference():
+    """jnp two-phase age greedy reproduces the numpy reference on identical
+    SNR matrices (the policy wrapper only adds the fading draw)."""
+    rng = np.random.default_rng(3)
+    for _ in range(15):
+        n = int(rng.integers(3, 10))
+        w = int(rng.integers(3, 10))
+        ages = rng.integers(0, 20, n).astype(float)
+        snr = (rng.random((n, w)) * 10).astype(np.float32)
+        r_min = float(rng.random() * 4e6 + 5e5)
+        ref, _ = scheduling.age_based_greedy(ages, snr, r_min, sub_bw=1e6,
+                                             n_subchannels=w, alpha=1.0)
+        got = np.asarray(scheduling.age_greedy_jax(
+            jnp.asarray(ages), jnp.asarray(snr), r_min, 1e6, 1.0))
+        np.testing.assert_array_equal(ref, got)
+
+
+def test_jnp_channel_twins_match_numpy():
+    cfg = wireless.WirelessConfig(n_devices=16)
+    cp = wireless.channel_params(cfg)
+    dist = np.linspace(5.0, 480.0, 16)
+    fading = np.full(16, 0.7)
+    np.testing.assert_allclose(
+        np.asarray(wireless.path_gain_jax(jnp.asarray(dist), cp)),
+        wireless.path_gain(dist, cfg), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(wireless.snr_jax(jnp.asarray(dist), jnp.asarray(fading),
+                                    cp)),
+        wireless.snr(dist, fading, cfg), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(wireless.shannon_rate_jax(jnp.asarray([1.0, 3.0]), 2e7)),
+        wireless.shannon_rate(np.array([1.0, 3.0]), 2e7), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(wireless.comm_latency_jax(1e6, jnp.asarray([1e6, 2e6]))),
+        wireless.comm_latency(1e6, np.array([1e6, 2e6])), rtol=1e-6)

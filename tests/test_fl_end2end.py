@@ -14,23 +14,13 @@ from repro.fl import runtime as rt
 from repro.fl import server as fls
 from repro.fl.decentralized import consensus_step, gossip_round
 
+from benchmarks.common import make_linear_problem
+
 D = 24
 
 
 def _make_problem():
-    w_star = jax.random.normal(jax.random.PRNGKey(42), (D,))
-
-    def make_batches(t, n, h=2, b=8):
-        rng = np.random.default_rng(t)
-        x = rng.normal(size=(n, h, b, D)).astype(np.float32)
-        y = x @ np.asarray(w_star) + 0.01 * rng.normal(size=(n, h, b))
-        return {"x": jnp.asarray(x), "y": jnp.asarray(y.astype(np.float32))}
-
-    def loss_fn(params, batch):
-        pred = batch["x"] @ params["w"]
-        return jnp.mean((pred - batch["y"]) ** 2), {}
-
-    return {"w": jnp.zeros(D)}, loss_fn, make_batches, w_star
+    return make_linear_problem(d=D)
 
 
 @pytest.mark.parametrize("compressor,server", [
@@ -110,11 +100,13 @@ def test_hfl_converges_and_tracks_fl():
 
 
 def test_scheduling_policies_all_run():
+    """Host-engine twin of test_engine.py's scan-engine all-policies smoke."""
+    from repro.core.scheduling import policy_names
     params0, loss_fn, make_batches, _ = _make_problem()
-    for pol in ("random", "round_robin", "best_channel", "latency", "pf",
-                "bn2", "bc_bn2", "bn2_c", "age", "deadline"):
+    for pol in policy_names():
         cfg = rt.SimConfig(n_devices=6, n_scheduled=3, rounds=3, lr=0.1,
                            policy=pol)
-        logs = rt.run_simulation(cfg, loss_fn, params0, make_batches)
+        logs = rt.run_simulation(cfg, loss_fn, params0, make_batches,
+                                 engine="host")
         assert len(logs) == 3
         assert logs[-1].latency_s > 0

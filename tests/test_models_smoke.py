@@ -27,6 +27,7 @@ def _batch(cfg):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_forward_and_train_step(arch):
     cfg = get_config(arch).reduced()
@@ -73,6 +74,7 @@ def test_decode_step_shapes_and_finiteness(arch):
     assert jax.tree.structure(cache) == jax.tree.structure(cache2)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["gemma-2b", "falcon-mamba-7b",
                                   "recurrentgemma-2b", "stablelm-12b"])
 def test_prefill_decode_consistency(arch):
@@ -105,6 +107,7 @@ def test_prefill_decode_consistency(arch):
                                rtol=2e-2, atol=2e-3)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["falcon-mamba-7b", "recurrentgemma-2b",
                                   "gemma-2b"])
 def test_long_context_circular_decode(arch):

@@ -22,6 +22,7 @@ def _data(cfg, batch=8, seq=64, n=512):
     return next_batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("mode,compression,ef", [
     ("pssgd", "none", False),
     ("pssgd", "int8", True),
@@ -47,6 +48,7 @@ def test_cluster_training_reduces_loss(mode, compression, ef):
     assert not np.isnan(losses[-1])
 
 
+@pytest.mark.slow
 def test_localsgd_h_microbatching():
     cfg = get_config("minicpm-2b").reduced()
     mesh = make_local_mesh(1, 1)
