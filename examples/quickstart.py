@@ -8,9 +8,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.compression import topk_sparsify
+from repro.core.compression import compression_params
 from repro.data import FederatedLoader, SyntheticLMDataset, dirichlet_partition
 from repro.fl import runtime as rt
+from repro.fl.server import flat_dim
 from repro.models import transformer as tf
 
 
@@ -27,10 +28,13 @@ def main() -> None:
         return tf.lm_loss(params, cfg, batch, remat=False)
 
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    d = flat_dim(params)
     sim = rt.SimConfig(
         n_devices=12, n_scheduled=4, rounds=30, local_steps=2, lr=2e-3,
         policy="age",  # age-based wireless scheduling [58]
-        compressor=lambda g: topk_sparsify(g, max(1, g.size // 50)),
+        compression="topk",  # registry compressor: 2% top-k + EF, and the
+        #                      compressed bits price the uplink latency
+        compression_params=compression_params(k=max(1, d // 50)),
         model_bits=32.0 * cfg.param_count())
 
     logs = rt.run_simulation(
@@ -38,7 +42,8 @@ def main() -> None:
         lambda t, n: {k: jnp.asarray(v) for k, v in loader.next_round().items()})
     for lg in logs[::5] + [logs[-1]]:
         print(f"round {lg.round:3d}  wall-clock {lg.latency_s:8.1f}s  "
-              f"loss {lg.loss:.4f}  scheduled {lg.n_scheduled}")
+              f"(comm {lg.comm_s:6.1f}s)  loss {lg.loss:.4f}  "
+              f"scheduled {lg.n_scheduled}  uplink {lg.uplink_bits:.2e}b")
     assert logs[-1].loss < logs[0].loss
     print("quickstart OK")
 

@@ -13,4 +13,9 @@ from repro.core.compression.quantize import (  # noqa: F401
 from repro.core.compression.error_feedback import (  # noqa: F401
     ef_compress, init_error_state, tree_ef_compress, tree_init_error)
 from repro.core.compression.coding import (  # noqa: F401
-    encode_positions, decode_positions, elias_gamma_bits, sparse_message_bits)
+    encode_positions, decode_positions, elias_gamma_bits, elias_gamma_bits_jax,
+    sparse_bits_jax, sparse_message_bits)
+from repro.core.compression.registry import (  # noqa: F401
+    CompressionParams, compression_params, compressor_names,
+    default_compression_params, get_compressor, stack_compression_params,
+    uplink_bits_jax)

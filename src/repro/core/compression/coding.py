@@ -6,13 +6,17 @@ phi = nnz/d is split into blocks of size 1/phi; each non-zero costs
 end-of-block bit -> total = nnz*(1 + log2(1/phi)) + phi*d bits.
 
 The encoder/decoder here are exact (bit-level, numpy/python) and round-trip
-tested; the analytic functions are used by the benchmarks.
+tested; the analytic functions are used by the benchmarks. The ``*_jax``
+twins at the bottom are traceable versions of the analytic accounting used by
+the compiled simulation engine (``fl/runtime.py``): ``nnz`` may be a traced
+scalar there, so compression level can be swept under ``vmap``.
 """
 from __future__ import annotations
 
 import math
 from typing import List, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -85,3 +89,37 @@ def elias_gamma_bits(gaps: Sequence[int]) -> float:
 
 def mask_to_indices(mask: np.ndarray) -> np.ndarray:
     return np.nonzero(np.asarray(mask).reshape(-1))[0]
+
+
+# ---------------------------------------------------------------------------
+# jnp twins — same analytic formulas on traced scalars (engine bit accounting)
+# ---------------------------------------------------------------------------
+# The small epsilon nudges protect ceil/floor of float32 log2 at exact powers
+# of two (log2(16.) may evaluate to 4.0000002); integer ratios d/nnz that are
+# *not* powers of two sit at least ~1/d away in relative terms, far above the
+# nudge for any realistic message size.
+_LOG2_EPS = 1e-6
+
+
+def sparse_bits_jax(d: int, nnz: jnp.ndarray,
+                    value_bits: float = 32.0) -> jnp.ndarray:
+    """Traceable twin of :func:`sparse_message_bits` (Alg. 4 block coding).
+
+    ``nnz`` may be a traced (even fractional, e.g. vmapped-sweep) scalar; the
+    result matches the numpy accounting exactly at integer ``nnz`` and
+    interpolates the block geometry in between. ``nnz == 0`` costs 0 bits.
+    """
+    nnz = jnp.asarray(nnz, jnp.float32)
+    safe = jnp.maximum(nnz, 1.0)
+    log_bs = jnp.maximum(0.0, jnp.ceil(jnp.log2(d / safe) - _LOG2_EPS))
+    bs = jnp.exp2(log_bs)
+    n_blocks = jnp.ceil(d / bs - _LOG2_EPS)
+    bits = safe * (1.0 + log_bs + value_bits) + n_blocks
+    return jnp.where(nnz > 0, bits, 0.0)
+
+
+def elias_gamma_bits_jax(gaps: jnp.ndarray) -> jnp.ndarray:
+    """Traceable twin of :func:`elias_gamma_bits` (index-gap coding [30])."""
+    g = jnp.asarray(gaps, jnp.float32)
+    cost = 2.0 * jnp.floor(jnp.log2(jnp.maximum(g, 1.0)) + _LOG2_EPS) + 1.0
+    return jnp.sum(jnp.where(g >= 1.0, cost, 0.0))

@@ -16,9 +16,17 @@ An entire multi-round simulation compiles into **one XLA program**:
   latency accounting (synchronous round = max over scheduled devices) and
   the age recursion live *inside* the scan; per-round logs come back
   stacked;
-* ``run_sweep`` vmaps the scanned engine over seed x channel-config variants
-  (policies iterate in Python — they are static arguments) in **one**
-  compiled call per policy;
+* compression is first-class (``core/compression/registry.py``): the
+  compressor *name* is static, its continuous parameters travel as a traced
+  :class:`~repro.core.compression.registry.CompressionParams`, per-client EF
+  error state lives in the scan carry (inside ``FLState``), and the
+  compressed bits-on-the-wire price the uplink via ``comm_latency_jax``
+  *inside* the scan — so compression shortens rounds and interacts with the
+  deadline/latency/update-aware policies;
+* ``run_sweep`` vmaps the scanned engine over seed x channel-config x
+  compression-parameter variants (policies and compressor names iterate in
+  Python — they are static arguments) in **one** compiled call per
+  (policy, compressor-name) pair;
 * compiled engines are cached per static config (``_ENGINE_CACHE``, bounded
   FIFO) so repeated calls never re-trace; on the single-run path the initial
   params are donated (they alias the returned final params, letting XLA run
@@ -34,6 +42,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -42,6 +51,8 @@ import numpy as np
 from jax import lax
 
 from repro.core import scheduling, wireless
+from repro.core.compression import registry as compression
+from repro.core.compression.registry import CompressionParams
 from repro.core.hierarchy import (HFLConfig, hex_centers, assign_clusters_hex,
                                   broadcast_to_clients, inter_cluster_average,
                                   intra_cluster_average)
@@ -69,6 +80,14 @@ class SimConfig:
     deadline_s: float = 5.0          # for the P4 policy
     age_alpha: float = 1.0
     server: str = "avg"
+    # first-class compression: a registry *name* (static, engine-cache key)
+    # plus traced continuous parameters (vmappable in sweeps). The simulated
+    # uplink payload is model_bits compressed at the registry operator's
+    # bits-per-parameter rate; "none" sends exactly model_bits (legacy).
+    compression: str = "none"
+    compression_params: Optional[CompressionParams] = None
+    double_ef: bool = False          # downlink (PS-side) EF too (Alg. 3/6)
+    # deprecated: opaque callable, host engine only, no bit accounting
     compressor: Optional[Callable] = None
 
 
@@ -79,6 +98,9 @@ class RoundLog:
     loss: float
     n_scheduled: int
     participation: np.ndarray
+    uplink_bits: float = 0.0   # total scheduled uplink payload this round
+    comm_s: float = 0.0        # bottleneck device's upload time
+    comp_s: float = 0.0        # bottleneck device's compute time
 
 
 @dataclasses.dataclass
@@ -89,12 +111,17 @@ class SimLogs:
     latency_s: np.ndarray
     n_scheduled: np.ndarray
     participation: np.ndarray  # (..., rounds, n_devices) bool
+    uplink_bits: np.ndarray    # (..., rounds) scheduled bits-on-the-wire
+    comm_s: np.ndarray         # (..., rounds) comm share of the round time
+    comp_s: np.ndarray         # (..., rounds) compute share of the round time
 
     def to_round_logs(self) -> List[RoundLog]:
         if self.loss.ndim != 1:
             raise ValueError("to_round_logs needs unbatched (rounds,) logs")
         return [RoundLog(t, float(self.latency_s[t]), float(self.loss[t]),
-                         int(self.n_scheduled[t]), self.participation[t])
+                         int(self.n_scheduled[t]), self.participation[t],
+                         float(self.uplink_bits[t]), float(self.comm_s[t]),
+                         float(self.comp_s[t]))
                 for t in range(self.loss.shape[0])]
 
 
@@ -116,6 +143,13 @@ def _policy_cfg(cfg: SimConfig, wcfg: wireless.WirelessConfig
         n_subchannels=wcfg.n_subchannels)
 
 
+def _resolve_cparams(cfg: SimConfig, init_params) -> CompressionParams:
+    if cfg.compression_params is not None:
+        return cfg.compression_params
+    return compression.default_compression_params(
+        fl_server.flat_dim(init_params))
+
+
 def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
                   has_eval: bool):
     """Shared round logic for both engines. Returns
@@ -124,32 +158,56 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
     n = cfg.n_devices
     pcfg = _policy_cfg(cfg, wcfg)
     policy_fn = scheduling.get_policy(cfg.policy)
+    comp_active = cfg.compression != "none"
+    if comp_active and cfg.compressor is not None:
+        raise ValueError(
+            "SimConfig sets both compression="
+            f"{cfg.compression!r} (registry) and the deprecated opaque "
+            "compressor callable; drop SimConfig.compressor")
+    compress_fn = (compression.get_compressor(cfg.compression)
+                   if comp_active else None)
     round_fn = functools.partial(
         fl_server.fl_round, loss_fn=loss_fn, lr=cfg.lr,
         compressor=cfg.compressor, server=cfg.server)
 
     def init_carry(init_params):
+        # EF state rides in the scan carry (inside FLState): flat (N, D)
+        # message-space error on the registry path, per-leaf trees on the
+        # deprecated callable path.
         state0 = fl_server.init_fl_state(
-            init_params, n, use_ef=cfg.compressor is not None,
-            server=cfg.server)
+            init_params, n,
+            use_ef=comp_active or cfg.compressor is not None,
+            double_ef=comp_active and cfg.double_ef,
+            flat_ef=comp_active, server=cfg.server)
         state0 = dataclasses.replace(state0, round=jnp.int32(0))
         return (state0, jnp.float32(0.0), jnp.zeros(n, jnp.float32),
                 jnp.ones(n, jnp.float32), jnp.zeros(n, jnp.float32))
 
-    def make_step(chan: wireless.ChannelParams, dist: jnp.ndarray,
-                  k_rounds: jax.Array, eval_batch):
+    def make_step(chan: wireless.ChannelParams, cparams: CompressionParams,
+                  dist: jnp.ndarray, k_rounds: jax.Array, eval_batch):
         def step(carry, xs):
             state, clock, ages, norms, avg_snr = carry
             t, batches = xs
             kt = jax.random.fold_in(k_rounds, t)
-            kf, kc, kp, kn = jax.random.split(kt, 4)
+            kf, kc, kp, kn, kz = jax.random.split(kt, 5)
 
             fading = wireless.sample_fading_jax(kf, n)
             snr_lin = wireless.snr_jax(dist, fading, chan)
             rates = wireless.shannon_rate_jax(
                 snr_lin, chan.bandwidth_hz / cfg.n_scheduled)
             comp_lat = cfg.comp_latency_s * jax.random.exponential(kc, (n,))
-            comm_lat = wireless.comm_latency_jax(cfg.model_bits, rates)
+            # uplink pricing: the simulated payload is model_bits scaled by
+            # the compressor's bits-per-parameter rate on the actual d-dim
+            # message (data-independent, so the policies can price the round
+            # *before* transmission). "none" sends exactly model_bits.
+            d_model = fl_server.flat_dim(state.params)
+            payload_scale = cfg.model_bits / (32.0 * d_model)
+            if comp_active:
+                bits_dev = payload_scale * compression.uplink_bits_jax(
+                    cfg.compression, cparams, d_model)
+            else:
+                bits_dev = jnp.float32(cfg.model_bits)
+            comm_lat = wireless.comm_latency_jax(bits_dev, rates)
             # per-device time-averaged SNR (PF's denominator), seeded with
             # the first observation
             avg_snr = jnp.where(t == 0, snr_lin,
@@ -162,46 +220,60 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
             mask = policy_fn(pcfg, rstate)
             ages = scheduling.update_ages_jax(ages, mask)
 
-            state, metrics = round_fn(
-                state, batches, participation=mask.astype(jnp.float32))
+            if comp_active:
+                state, metrics = round_fn(
+                    state, batches, participation=mask.astype(jnp.float32),
+                    compress_fn=compress_fn, cparams=cparams, key=kz)
+                ubits = payload_scale * metrics["uplink_bits"]
+            else:
+                state, metrics = round_fn(
+                    state, batches, participation=mask.astype(jnp.float32))
+                ubits = bits_dev * jnp.sum(mask)
 
-            # wall-clock: synchronous round = slowest scheduled device
+            # wall-clock: synchronous round = slowest scheduled device; the
+            # comm/comp breakdown is that bottleneck device's split
             total = comm_lat + comp_lat
-            lat = jnp.where(jnp.any(mask),
-                            jnp.max(jnp.where(mask, total, -jnp.inf)),
-                            jnp.float32(0.0))
-            clock = clock + lat
+            slowest = jnp.argmax(jnp.where(mask, total, -jnp.inf))
+            any_sched = jnp.any(mask)
+            comm_s = jnp.where(any_sched, comm_lat[slowest], 0.0)
+            comp_s = jnp.where(any_sched, comp_lat[slowest], 0.0)
+            clock = clock + comm_s + comp_s
 
             loss = metrics["loss"]
             if has_eval:
                 loss = loss_fn(state.params, eval_batch)[0]
             # update-aware policies observe last-round delta norms (proxy)
             norms = 0.9 * norms + 0.1 * jax.random.exponential(kn, (n,))
-            return (state, clock, ages, norms, avg_snr), (loss, clock,
-                                                          mask, jnp.sum(mask))
+            return (state, clock, ages, norms, avg_snr), (
+                loss, clock, mask, jnp.sum(mask), ubits, comm_s, comp_s)
         return step
 
-    def engine(key, chan, init_params, batches_all, eval_batch):
+    def engine(key, chan, cparams, init_params, batches_all, eval_batch):
         ENGINE_STATS["traces"] += 1  # python side effect: runs at trace only
         k_pos, k_rounds = jax.random.split(key)
         dist = wireless.sample_positions_jax(k_pos, chan, n)
-        step = make_step(chan, dist, k_rounds, eval_batch)
+        step = make_step(chan, cparams, dist, k_rounds, eval_batch)
         ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
-        (state, *_), (losses, clocks, masks, nsched) = lax.scan(
+        (state, *_), outs = lax.scan(
             step, init_carry(init_params), (ts, batches_all))
-        return state.params, (losses, clocks, masks, nsched)
+        return state.params, outs
 
     return init_carry, make_step, engine
 
 
 def _engine_key(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
                 has_eval: bool, tag: str) -> Tuple:
-    # continuous channel params are traced (ChannelParams); everything the
-    # trace specializes on must appear here.
+    # continuous channel + compression params are traced (ChannelParams /
+    # CompressionParams); everything the trace specializes on must appear
+    # here. Compression is keyed by its static *name* (+ EF topology), so two
+    # equal configs share one compiled engine — the legacy ``compressor``
+    # callable (None on the registry path) is identity-keyed and therefore
+    # defeats the cache; it is deprecated.
     return (tag, cfg.policy, cfg.rounds, cfg.n_devices, cfg.n_scheduled,
             cfg.lr, cfg.model_bits, cfg.comp_latency_s, cfg.deadline_s,
-            cfg.age_alpha, cfg.server, cfg.compressor,
-            wcfg.n_subchannels, wcfg.bandwidth_hz, loss_fn, has_eval)
+            cfg.age_alpha, cfg.server, cfg.compression, cfg.double_ef,
+            cfg.compressor, wcfg.n_subchannels, wcfg.bandwidth_hz, loss_fn,
+            has_eval)
 
 
 _ENGINE_CACHE: Dict[Tuple, Callable] = {}
@@ -227,11 +299,12 @@ def _get_engine(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
         if vmapped:
             # broadcast init_params can't alias the per-variant outputs, so
             # there is nothing useful to donate on the sweep path.
-            return jax.jit(jax.vmap(engine, in_axes=(0, 0, None, None, None)))
+            return jax.jit(jax.vmap(engine,
+                                    in_axes=(0, 0, 0, None, None, None)))
         # init_params aliases the returned final params exactly; the
         # wrappers below pass a fresh copy, so donating it is safe and
         # lets XLA run the whole scan in-place on the parameter buffers.
-        return jax.jit(engine, donate_argnums=(2,))
+        return jax.jit(engine, donate_argnums=(3,))
 
     return _cached(_ENGINE_CACHE,
                    _engine_key(cfg, wcfg, loss_fn, has_eval,
@@ -246,8 +319,9 @@ def _get_host_step(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
     def make():
         _, make_step, _ = _make_sim_fns(cfg, wcfg, loss_fn, has_eval)
 
-        def host_step(chan, dist, k_rounds, eval_batch, carry, xs):
-            return make_step(chan, dist, k_rounds, eval_batch)(carry, xs)
+        def host_step(chan, cparams, dist, k_rounds, eval_batch, carry, xs):
+            return make_step(chan, cparams, dist, k_rounds,
+                             eval_batch)(carry, xs)
 
         return jax.jit(host_step)
 
@@ -267,16 +341,21 @@ def run_simulation_scan(cfg: SimConfig, loss_fn, init_params: PyTree,
     (see :func:`stack_batches`). Returns (final params, stacked logs).
     """
     wcfg = wcfg or wireless.WirelessConfig(n_devices=cfg.n_devices)
+    if cfg.compressor is not None:
+        raise ValueError(
+            "the scan engine no longer accepts opaque callable compressors; "
+            "use SimConfig.compression (registry name) + compression_params, "
+            "or run_simulation(engine='host') for the deprecated callable")
     engine = _get_engine(cfg, wcfg, loss_fn, eval_batch is not None)
     key = jax.random.PRNGKey(cfg.seed)
     chan = wireless.channel_params(wcfg)
+    cparams = _resolve_cparams(cfg, init_params)
     init_copy = jax.tree.map(jnp.array, init_params)  # donated to the engine
-    params, (losses, clocks, masks, nsched) = engine(
-        key, chan, init_copy, batches, eval_batch)
-    losses, clocks, masks, nsched = jax.device_get(
-        (losses, clocks, masks, nsched))
+    params, outs = engine(key, chan, cparams, init_copy, batches, eval_batch)
+    losses, clocks, masks, nsched, ubits, comm_s, comp_s = jax.device_get(outs)
     return params, SimLogs(loss=losses, latency_s=clocks,
-                           n_scheduled=nsched, participation=masks)
+                           n_scheduled=nsched, participation=masks,
+                           uplink_bits=ubits, comm_s=comm_s, comp_s=comp_s)
 
 
 def run_simulation(cfg: SimConfig, loss_fn, init_params: PyTree,
@@ -307,12 +386,23 @@ def run_simulation(cfg: SimConfig, loss_fn, init_params: PyTree,
     wcfg = wcfg or wireless.WirelessConfig(n_devices=cfg.n_devices)
     eval_batch = getattr(eval_fn, "eval_batch", None) if eval_fn else None
     opaque_eval = eval_fn is not None and eval_batch is None
+    if cfg.compressor is not None:
+        warnings.warn(
+            "SimConfig.compressor (opaque callable) is deprecated and now "
+            "runs on the host engine only: it cannot report bits-on-the-wire "
+            "and its identity defeats the compiled-engine cache. Use "
+            "SimConfig.compression='topk'/... + CompressionParams instead.",
+            DeprecationWarning, stacklevel=2)
+        if engine == "scan":
+            raise ValueError(
+                "engine='scan' does not support the deprecated callable "
+                "compressor; use SimConfig.compression (registry name)")
     if engine == "scan" and opaque_eval:
         raise ValueError(
             "engine='scan' needs an in-program eval: attach eval_fn."
             "eval_batch (logged loss becomes loss_fn(params, eval_batch)) "
             "or drop engine= to let the host loop serve the opaque eval_fn")
-    if engine == "host" or opaque_eval:
+    if engine == "host" or opaque_eval or cfg.compressor is not None:
         return _run_simulation_host(cfg, loss_fn, init_params,
                                     sample_client_batches, eval_fn,
                                     eval_batch, wcfg)
@@ -333,47 +423,62 @@ def _run_simulation_host(cfg: SimConfig, loss_fn, init_params: PyTree,
     key = jax.random.PRNGKey(cfg.seed)
     k_pos, k_rounds = jax.random.split(key)
     chan = wireless.channel_params(wcfg)
+    cparams = _resolve_cparams(cfg, init_params)
     dist = wireless.sample_positions_jax(k_pos, chan, cfg.n_devices)
 
     carry = init_carry(init_params)
     logs: List[RoundLog] = []
     for t in range(cfg.rounds):
         bt = sample_client_batches(t, cfg.n_devices)
-        carry, (loss, clock, mask, nsched) = step(
-            chan, dist, k_rounds, eval_batch, carry, (jnp.int32(t), bt))
+        carry, (loss, clock, mask, nsched, ubits, comm_s, comp_s) = step(
+            chan, cparams, dist, k_rounds, eval_batch, carry,
+            (jnp.int32(t), bt))
         mask_np = np.asarray(mask)
         lv = float(loss)
         if eval_fn is not None and not has_eval:
             lv = eval_fn(carry[0].params)
-        logs.append(RoundLog(t, float(clock), lv, int(nsched), mask_np))
+        logs.append(RoundLog(t, float(clock), lv, int(nsched), mask_np,
+                             float(ubits), float(comm_s), float(comp_s)))
     return logs
 
 
 # ---------------------------------------------------------------------------
-# Fleet-scale sweeps: one vmapped call over seed x channel-config variants
+# Fleet-scale sweeps: one vmapped call over seed x channel x compression
+# variants
 # ---------------------------------------------------------------------------
 def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
               seeds: Sequence[int],
               wcfgs: Optional[Sequence[wireless.WirelessConfig]] = None,
               policies: Optional[Sequence[str]] = None,
+              compressions: Optional[Sequence[str]] = None,
+              cparams_grid: Optional[Sequence[CompressionParams]] = None,
               eval_batch: Optional[Dict[str, jnp.ndarray]] = None
-              ) -> Dict[str, SimLogs]:
-    """Sweep policies x seeds x channel configs.
+              ) -> Dict[Any, SimLogs]:
+    """Sweep policies x compressor names x seeds x channels x compression
+    levels.
 
-    Policies iterate in Python (static engine arguments); the seed x config
-    grid runs as **one** vmapped+compiled call per policy. Returns
-    ``{policy: SimLogs}`` with ``(len(seeds)*len(wcfgs), rounds, ...)``
-    arrays, variants ordered ``itertools.product(seeds, wcfgs)``.
+    Policies and compressor *names* iterate in Python (static engine
+    arguments); the seed x channel x :class:`CompressionParams` grid runs as
+    **one** vmapped+compiled call per (policy, compressor-name) pair — so a
+    whole compression-level study (e.g. top-k over many k) costs a single
+    trace. Returns ``{policy: SimLogs}`` — or ``{(policy, compression):
+    SimLogs}`` when ``compressions`` is given — with
+    ``(len(seeds)*len(wcfgs)*len(cparams_grid), rounds, ...)`` arrays,
+    variants ordered ``itertools.product(seeds, wcfgs, cparams_grid)``.
 
     All ``wcfgs`` must share the static fields (``n_devices``,
     ``n_subchannels``; additionally ``bandwidth_hz`` when sweeping the
     ``age`` policy, whose per-subchannel bandwidth is a static argument of
     the compiled engine); the remaining continuous fields (power, radius,
-    path loss, noise...) vary per variant through ``ChannelParams``.
+    path loss, noise...) vary per variant through ``ChannelParams``, and
+    compression levels through ``CompressionParams``.
     """
     wcfgs = list(wcfgs) if wcfgs else [
         wireless.WirelessConfig(n_devices=cfg.n_devices)]
     policies = list(policies) if policies else [cfg.policy]
+    comp_names = list(compressions) if compressions is not None else None
+    cparams_list = (list(cparams_grid) if cparams_grid
+                    else [_resolve_cparams(cfg, init_params)])
     statics = (wcfgs[0].n_devices, wcfgs[0].n_subchannels)
     for w in wcfgs:
         if (w.n_devices, w.n_subchannels) != statics:
@@ -384,22 +489,28 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
                 "sweep wcfgs must share static bandwidth_hz for the 'age' "
                 "policy (its sub-band bandwidth compiles in statically)")
 
-    grid = list(itertools.product(seeds, wcfgs))
+    grid = list(itertools.product(seeds, wcfgs, cparams_list))
     if not grid:
-        raise ValueError("run_sweep needs at least one (seed, wcfg) variant")
-    keys = jnp.stack([jax.random.PRNGKey(s) for s, _ in grid])
-    chans = wireless.stack_channel_params([w for _, w in grid])
-    results: Dict[str, SimLogs] = {}
+        raise ValueError("run_sweep needs at least one "
+                         "(seed, wcfg, cparams) variant")
+    keys = jnp.stack([jax.random.PRNGKey(s) for s, _, _ in grid])
+    chans = wireless.stack_channel_params([w for _, w, _ in grid])
+    cps = compression.stack_compression_params([c for _, _, c in grid])
+    results: Dict[Any, SimLogs] = {}
     for pol in policies:
-        cfg_p = dataclasses.replace(cfg, policy=pol)
-        engine = _get_engine(cfg_p, wcfgs[0], loss_fn,
-                             eval_batch is not None, vmapped=True)
-        _, (losses, clocks, masks, nsched) = engine(
-            keys, chans, init_params, batches, eval_batch)
-        losses, clocks, masks, nsched = jax.device_get(
-            (losses, clocks, masks, nsched))
-        results[pol] = SimLogs(loss=losses, latency_s=clocks,
-                               n_scheduled=nsched, participation=masks)
+        for comp in (comp_names if comp_names is not None
+                     else [cfg.compression]):
+            cfg_pc = dataclasses.replace(cfg, policy=pol, compression=comp)
+            engine = _get_engine(cfg_pc, wcfgs[0], loss_fn,
+                                 eval_batch is not None, vmapped=True)
+            _, outs = engine(keys, chans, cps, init_params, batches,
+                             eval_batch)
+            (losses, clocks, masks, nsched, ubits,
+             comm_s, comp_s) = jax.device_get(outs)
+            logs = SimLogs(loss=losses, latency_s=clocks, n_scheduled=nsched,
+                           participation=masks, uplink_bits=ubits,
+                           comm_s=comm_s, comp_s=comp_s)
+            results[pol if comp_names is None else (pol, comp)] = logs
     return results
 
 
@@ -422,13 +533,15 @@ def _hfl_setup(cfg: SimConfig, hcfg: HFLConfig):
     return cluster_ids, cluster_sizes
 
 
-def _make_hfl_engine(cfg: SimConfig, hcfg: HFLConfig, loss_fn, has_eval: bool):
+def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig, loss_fn, has_eval: bool):
+    """Shared HFL round logic for both paths. Returns ``(round_fn, engine)``:
+    ``round_fn`` is one full Alg. 9 round (local steps -> intra-cluster
+    average -> periodic inter-cluster sync -> broadcast) and ``engine`` scans
+    it — the host loop jits the *same* ``round_fn`` (no re-implementation).
+    """
     h = hcfg.inter_cluster_period
 
-    def engine(cluster_ids, cluster_sizes, client_params0, batches_all,
-               eval_batch):
-        ENGINE_STATS["traces"] += 1
-
+    def round_fn(cluster_ids, cluster_sizes, client_params, t, batches):
         def local_one(p, b):
             _, p_new, loss = local_sgd(loss_fn, p, b, cfg.lr)
             return p_new, loss
@@ -439,15 +552,22 @@ def _make_hfl_engine(cfg: SimConfig, hcfg: HFLConfig, loss_fn, has_eval: bool):
                 lambda gg: jnp.broadcast_to(
                     gg[None], (hcfg.n_clusters,) + gg.shape), g)
 
+        new_params, losses = jax.vmap(local_one)(client_params, batches)
+        cluster_models = intra_cluster_average(new_params, cluster_ids,
+                                               hcfg.n_clusters)
+        cluster_models = lax.cond((t + 1) % h == 0, sync,
+                                  lambda cm: cm, cluster_models)
+        client_params = broadcast_to_clients(cluster_models, cluster_ids)
+        return client_params, cluster_models, jnp.mean(losses)
+
+    def engine(cluster_ids, cluster_sizes, client_params0, batches_all,
+               eval_batch):
+        ENGINE_STATS["traces"] += 1
+
         def step(client_params, xs):
             t, batches = xs
-            new_params, losses = jax.vmap(local_one)(client_params, batches)
-            cluster_models = intra_cluster_average(new_params, cluster_ids,
-                                                   hcfg.n_clusters)
-            cluster_models = lax.cond((t + 1) % h == 0, sync,
-                                      lambda cm: cm, cluster_models)
-            client_params = broadcast_to_clients(cluster_models, cluster_ids)
-            loss = jnp.mean(losses)
+            client_params, cluster_models, loss = round_fn(
+                cluster_ids, cluster_sizes, client_params, t, batches)
             if has_eval:
                 loss = loss_fn(inter_cluster_average(cluster_models,
                                                      cluster_sizes),
@@ -459,7 +579,7 @@ def _make_hfl_engine(cfg: SimConfig, hcfg: HFLConfig, loss_fn, has_eval: bool):
                                          (ts, batches_all))
         return client_params, losses
 
-    return engine
+    return round_fn, engine
 
 
 _HFL_CACHE: Dict[Tuple, Callable] = {}
@@ -484,11 +604,11 @@ def run_hfl(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
         init_params)
     batches = stack_batches(sample_client_batches, cfg.rounds, cfg.n_devices)
 
-    key = (cfg.rounds, cfg.n_devices, cfg.lr, hcfg.n_clusters,
+    key = ("hfl-engine", cfg.rounds, cfg.n_devices, cfg.lr, hcfg.n_clusters,
            hcfg.inter_cluster_period, loss_fn, eval_batch is not None)
     engine = _cached(_HFL_CACHE, key,
-                     lambda: jax.jit(_make_hfl_engine(
-                         cfg, hcfg, loss_fn, eval_batch is not None)))
+                     lambda: jax.jit(_make_hfl_fns(
+                         cfg, hcfg, loss_fn, eval_batch is not None)[1]))
     _, losses = engine(cluster_ids, cluster_sizes, client_params0, batches,
                        eval_batch)
     losses = jax.device_get(losses)
@@ -501,34 +621,26 @@ def run_hfl(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
 
 def _run_hfl_host(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
                   sample_client_batches, eval_fn) -> List[RoundLog]:
-    """Legacy per-round HFL loop (host-side eval_fn support)."""
+    """Per-round HFL dispatch loop over the *same* round step the scanned
+    engine uses (host-side eval_fn support; parity baseline)."""
     cluster_ids, cluster_sizes = _hfl_setup(cfg, hcfg)
     client_params = jax.tree.map(
         lambda p: jnp.broadcast_to(p[None], (cfg.n_devices,) + p.shape),
         init_params)
 
-    @jax.jit
-    def hfl_round(client_params, batches):
-        def one(p, b):
-            _, p_new, loss = local_sgd(loss_fn, p, b, cfg.lr)
-            return p_new, loss
-        new_params, losses = jax.vmap(one)(client_params, batches)
-        cluster_models = intra_cluster_average(new_params, cluster_ids,
-                                               hcfg.n_clusters)
-        return cluster_models, new_params, jnp.mean(losses)
+    key = ("hfl-step", cfg.n_devices, cfg.lr, hcfg.n_clusters,
+           hcfg.inter_cluster_period, loss_fn)
+    step = _cached(_HFL_CACHE, key,
+                   lambda: jax.jit(_make_hfl_fns(cfg, hcfg, loss_fn,
+                                                 has_eval=False)[0]))
 
     logs: List[RoundLog] = []
     clock = 0.0
     mu_rate = _HFL_MU_RATE_BPS
     for t in range(cfg.rounds):
         batches = sample_client_batches(t, cfg.n_devices)
-        cluster_models, client_params, loss = hfl_round(client_params, batches)
-        if (t + 1) % hcfg.inter_cluster_period == 0:
-            global_model = inter_cluster_average(cluster_models, cluster_sizes)
-            cluster_models = jax.tree.map(
-                lambda g: jnp.broadcast_to(g[None], (hcfg.n_clusters,) + g.shape),
-                global_model)
-        client_params = broadcast_to_clients(cluster_models, cluster_ids)
+        client_params, cluster_models, _ = step(
+            cluster_ids, cluster_sizes, client_params, jnp.int32(t), batches)
         hfl_lat, _ = hfl_round_latency_step(cfg, hcfg, mu_rate, t)
         clock += hfl_lat
         # run_hfl only routes here for an opaque eval_fn; the no-eval case

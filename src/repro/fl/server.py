@@ -3,6 +3,16 @@
 ``fl_round`` composes the full Alg. 6 pipeline:
   broadcast -> H local steps -> client EF-compress(delta) -> masked aggregate
   -> optional downlink EF-compress -> server optimizer (avg | slowmo | adam).
+
+Two compression interfaces coexist for one release:
+
+* **registry path** (``compress_fn`` + ``cparams`` + ``key`` from
+  ``core.compression.get_compressor``): each client's whole delta pytree is
+  flattened into one (D,) uplink message, EF-corrected against a flat (N, D)
+  error state, compressed, and its bits-on-the-wire are reported in
+  ``metrics["uplink_bits"]`` so the wireless layer can price the round;
+* **legacy path** (``compressor`` opaque callable): per-leaf compression, no
+  bit accounting. Deprecated — see ``runtime.run_simulation``.
 """
 from __future__ import annotations
 
@@ -14,10 +24,36 @@ import jax.numpy as jnp
 
 from repro.core import aggregation as agg
 from repro.core.compression import error_feedback as ef
+from repro.core.compression.registry import CompressionParams, CompressorFn
 from repro.fl.client import make_client_step
 
 PyTree = Any
 Compressor = Callable[[jnp.ndarray], Tuple[jnp.ndarray, Any]]
+
+
+def flat_dim(tree: PyTree) -> int:
+    """Total message dimension of a parameter/delta pytree."""
+    return sum(leaf.size for leaf in jax.tree.leaves(tree))
+
+
+def _flatten_clients(tree: PyTree) -> Tuple[jnp.ndarray, Callable]:
+    """Stacked (N, ...) leaves -> one (N, D) float32 message matrix, plus the
+    inverse (which restores shapes and dtypes)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    n = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [leaf.astype(jnp.float32).reshape(n, -1) for leaf in leaves], axis=1)
+
+    def unflatten(mat: jnp.ndarray) -> PyTree:
+        out, off = [], 0
+        for leaf in leaves:
+            size = leaf[0].size
+            out.append(mat[:, off:off + size]
+                       .reshape(leaf.shape).astype(leaf.dtype))
+            off += size
+        return jax.tree.unflatten(treedef, out)
+
+    return flat, unflatten
 
 
 @jax.tree_util.register_dataclass
@@ -31,12 +67,23 @@ class FLState:
 
 
 def init_fl_state(params: PyTree, n_clients: int, *, use_ef: bool = False,
-                  double_ef: bool = False, server: str = "avg") -> FLState:
+                  double_ef: bool = False, server: str = "avg",
+                  flat_ef: bool = False) -> FLState:
+    """``use_ef`` allocates client EF state; ``flat_ef`` stores it as the
+    (N, D) / (D,) message-space matrices of the registry compression path
+    instead of per-leaf pytrees (the scan carry shape of the engine)."""
     client_error = None
-    if use_ef:
+    if use_ef and flat_ef:
+        client_error = jnp.zeros((n_clients, flat_dim(params)), jnp.float32)
+    elif use_ef:
         client_error = jax.tree.map(
             lambda p: jnp.zeros((n_clients,) + p.shape, jnp.float32), params)
-    server_error = ef.tree_init_error(params) if double_ef else None
+    if double_ef and flat_ef:
+        server_error = jnp.zeros(flat_dim(params), jnp.float32)
+    elif double_ef:
+        server_error = ef.tree_init_error(params)
+    else:
+        server_error = None
     if server == "slowmo":
         opt = agg.init_slowmo(params)
     elif server in ("adam", "yogi"):
@@ -48,18 +95,47 @@ def init_fl_state(params: PyTree, n_clients: int, *, use_ef: bool = False,
 
 def fl_round(state: FLState, stacked_batches: Dict[str, jnp.ndarray],
              loss_fn, *, lr: float, participation: Optional[jnp.ndarray] = None,
-             compressor: Optional[Compressor] = None, server: str = "avg",
+             compressor: Optional[Compressor] = None,
+             compress_fn: Optional[CompressorFn] = None,
+             cparams: Optional[CompressionParams] = None,
+             key: Optional[jax.Array] = None,
+             server: str = "avg",
              server_lr: float = 1.0, slowmo_beta: float = 0.5,
              momentum: float = 0.0) -> Tuple[FLState, Dict[str, jnp.ndarray]]:
-    """One FL round. stacked_batches leaves: (N, H, ...)."""
+    """One FL round. stacked_batches leaves: (N, H, ...).
+
+    Registry compression (``compress_fn``/``cparams``/``key``) flattens each
+    client's delta into one message, applies EF in message space, and adds
+    ``metrics["uplink_bits"]`` (participation-weighted total). ``compressor``
+    is the deprecated opaque-callable path.
+    """
     client_step = make_client_step(loss_fn, lr, momentum)
     deltas, losses = client_step(state.params, stacked_batches)
+    uplink_bits = None
 
     # --- client-side compression with error feedback (Alg. 6 lines 8-11) ---
     # the compressor is vmapped over the client axis: each device compresses
-    # its *own* delta (per-client top-k masks, per-client scales).
+    # its *own* delta (per-client top-k masks, per-client scales). Every
+    # client compresses (and accrues EF error) whether or not it is
+    # scheduled; the participation mask gates aggregation only.
     client_error = state.client_error
-    if compressor is not None:
+    if compress_fn is not None:
+        if compressor is not None:
+            raise ValueError("pass either compress_fn (registry) or "
+                             "compressor (legacy callable), not both")
+        k_up, k_down = jax.random.split(key)
+        flat, unflatten = _flatten_clients(deltas)
+        if client_error is not None:
+            flat = flat + client_error
+        keys = jax.random.split(k_up, flat.shape[0])
+        comp, bits = jax.vmap(compress_fn, in_axes=(None, 0, 0))(
+            cparams, keys, flat)
+        if client_error is not None:
+            client_error = flat - comp
+        deltas = unflatten(comp)
+        uplink_bits = (jnp.sum(bits) if participation is None
+                       else jnp.sum(bits * participation))
+    elif compressor is not None:
         comp_one = lambda x: compressor(x)[0]  # noqa: E731
         if client_error is not None:
             flat_d, treedef = jax.tree.flatten(deltas)
@@ -79,7 +155,14 @@ def fl_round(state: FLState, stacked_batches: Dict[str, jnp.ndarray],
 
     # --- downlink (PS-side) EF compression (Alg. 6 lines 15-17) ---
     server_error = state.server_error
-    if compressor is not None and server_error is not None:
+    if compress_fn is not None and server_error is not None:
+        stacked_md = jax.tree.map(lambda d: d[None], mean_delta)
+        flat_md, unflatten_md = _flatten_clients(stacked_md)
+        corrected = flat_md[0] + server_error
+        c, _ = compress_fn(cparams, k_down, corrected)
+        server_error = corrected - c
+        mean_delta = jax.tree.map(lambda d: d[0], unflatten_md(c[None]))
+    elif compressor is not None and server_error is not None:
         mean_delta, server_error = ef.tree_ef_compress(
             compressor, mean_delta, server_error)
 
@@ -100,6 +183,8 @@ def fl_round(state: FLState, stacked_batches: Dict[str, jnp.ndarray],
 
     metrics = {"loss": jnp.mean(losses),
                "delta_norm": _global_norm(mean_delta)}
+    if uplink_bits is not None:
+        metrics["uplink_bits"] = uplink_bits
     return FLState(new_params, client_error, server_error, opt,
                    state.round + 1), metrics
 

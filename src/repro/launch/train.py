@@ -24,26 +24,20 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import SHAPES, get_config
-from repro.core.compression import (qsgd, scaled_sign, topk_sparsify)
+from repro.core.compression import compression_params, compressor_names
 from repro.data import (FederatedLoader, SyntheticLMDataset, batch_iterator,
                         dirichlet_partition)
 from repro.fl import runtime as fl_runtime
+from repro.fl.server import flat_dim
 from repro.launch.mesh import make_local_mesh
 from repro.launch.specs import batch_specs
 from repro.launch.steps import TrainPolicy, make_init_fn, make_train_step
 from repro.models import transformer as tf
 
 
-def make_compressor(name: str, k_frac: float = 0.01):
-    if name == "none":
-        return None
-    if name == "topk":
-        return lambda g: topk_sparsify(g, max(1, int(k_frac * g.size)))
-    if name == "qsgd":
-        return lambda g: qsgd(jax.random.PRNGKey(0), g, levels=256)
-    if name == "sign":
-        return scaled_sign
-    raise ValueError(name)
+def make_compression(name: str, d: int, k_frac: float = 0.01):
+    """CLI name -> (registry name, CompressionParams) for the d-dim model."""
+    return name, compression_params(k=max(1, int(k_frac * d)), levels=256)
 
 
 def run_cluster(args) -> None:
@@ -99,12 +93,14 @@ def run_federated(args) -> None:
         return tf.lm_loss(params, cfg, batch, remat=False)
 
     params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
+    d = flat_dim(params)
+    comp_name, cparams = make_compression(args.compressor, d)
     sim = fl_runtime.SimConfig(
         n_devices=args.n_devices, n_scheduled=args.n_scheduled,
         rounds=args.rounds, local_steps=args.local_steps, lr=args.lr,
         policy=args.policy, server=args.server,
-        compressor=make_compressor(args.compressor),
-        model_bits=32.0 * sum(p.size for p in jax.tree.leaves(params)))
+        compression=comp_name, compression_params=cparams,
+        model_bits=32.0 * d)
 
     # engine="host" keeps the seed's O(1)-per-round batch memory: the scan
     # engine would stack all rounds' token batches on device, which for real
@@ -153,7 +149,9 @@ def main() -> None:
     ap.add_argument("--server", default="avg",
                     choices=["avg", "slowmo", "adam", "yogi"])
     ap.add_argument("--compressor", default="none",
-                    choices=["none", "topk", "qsgd", "sign"])
+                    choices=sorted(compressor_names()),
+                    help="uplink compression (registry name; compressed "
+                         "bits-on-the-wire drive the simulated latency)")
     ap.add_argument("--dirichlet-alpha", type=float, default=0.5)
     args = ap.parse_args()
     if args.cluster:

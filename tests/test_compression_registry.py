@@ -1,0 +1,212 @@
+"""First-class compression registry (core/compression/registry.py):
+operator/reference parity, the jnp bit-cost model vs the exact coding.py
+accounting, and the k-contraction property under error feedback for every
+registry compressor.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import (blockwise_scaled_sign, compression_params,
+                                    compressor_names, ef_compress,
+                                    elias_gamma_bits, elias_gamma_bits_jax,
+                                    get_compressor, init_error_state, qsgd,
+                                    scaled_sign, sign_compress,
+                                    sparse_bits_jax, sparse_message_bits,
+                                    stack_compression_params, ternary,
+                                    topk_sparsify, uplink_bits_jax)
+from repro.core.compression.error_feedback import is_k_contraction
+
+D = 256
+CP = compression_params(k=16, levels=16, block=32)
+
+
+def _x(seed=0, d=D):
+    return jax.random.normal(jax.random.PRNGKey(seed), (d,))
+
+
+# ---------------------------------------------------------------------------
+# operator parity with the per-leaf reference implementations
+# ---------------------------------------------------------------------------
+def test_registry_covers_issue_names():
+    assert set(compressor_names()) == {
+        "none", "qsgd", "ternary", "sign", "scaled_sign",
+        "blockwise_scaled_sign", "topk", "randk", "rtopk"}
+
+
+@pytest.mark.parametrize("name,ref", [
+    ("topk", lambda key, x: topk_sparsify(x, 16)[0]),
+    ("sign", lambda key, x: sign_compress(x)[0]),
+    ("scaled_sign", lambda key, x: scaled_sign(x)[0]),
+    ("blockwise_scaled_sign",
+     lambda key, x: blockwise_scaled_sign(x, block=32)[0]),
+    ("ternary", lambda key, x: ternary(key, x)[0]),
+    ("qsgd", lambda key, x: qsgd(key, x, levels=16)[0]),
+])
+def test_registry_matches_reference_ops(name, ref, key):
+    x = _x()
+    got, _ = get_compressor(name)(CP, key, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref(key, x)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_randk_and_rtopk_counts(key):
+    x = _x()
+    for name in ("randk", "rtopk"):
+        got, _ = get_compressor(name)(CP, key, x)
+        assert int(jnp.sum(got != 0)) == 16, name
+    # rtopk keeps only coordinates from the top-4k by magnitude
+    got, _ = get_compressor("rtopk")(CP, key, x)
+    top_r = topk_sparsify(x, 64)[0]
+    assert bool(jnp.all((got == 0) | (top_r != 0)))
+
+
+def test_traced_params_are_vmappable(key):
+    """One compiled call sweeps a whole compression-level grid."""
+    x = _x()
+    cps = stack_compression_params(
+        [compression_params(k=k, levels=16, block=32) for k in (4, 16, 64)])
+    outs, bits = jax.jit(jax.vmap(get_compressor("topk"),
+                                  in_axes=(0, None, None)))(cps, key, x)
+    nnzs = np.asarray(jnp.sum(outs != 0, axis=1))
+    np.testing.assert_array_equal(nnzs, [4, 16, 64])
+    assert bits[0] < bits[1] < bits[2]
+
+
+# ---------------------------------------------------------------------------
+# bit accounting: jnp model == coding.py exact accounting
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("d,nnz", [(64, 4), (1024, 10), (4096, 41),
+                                   (100, 99), (128, 1), (1 << 20, 1000),
+                                   (512, 512), (24, 3)])
+def test_sparse_bits_jax_matches_coding(d, nnz):
+    np.testing.assert_allclose(float(sparse_bits_jax(d, jnp.float32(nnz))),
+                               sparse_message_bits(d, nnz), rtol=1e-6)
+    np.testing.assert_allclose(
+        float(sparse_bits_jax(d, jnp.float32(nnz), value_bits=0.0)),
+        sparse_message_bits(d, nnz, value_bits=0.0), rtol=1e-6)
+
+
+def test_sparse_bits_jax_zero_nnz():
+    assert float(sparse_bits_jax(128, jnp.float32(0.0))) == 0.0
+
+
+def test_elias_gamma_bits_jax_matches_coding():
+    gaps = [1, 2, 3, 4, 7, 8, 100, 1023, 1024]
+    np.testing.assert_allclose(
+        float(elias_gamma_bits_jax(jnp.asarray(gaps, jnp.float32))),
+        elias_gamma_bits(gaps))
+
+
+@pytest.mark.parametrize("name,k", [("topk", 8), ("randk", 8), ("rtopk", 8),
+                                    ("topk", 100), ("randk", 1)])
+def test_uplink_bits_sparse_matches_coding(name, k):
+    cp = compression_params(k=k)
+    np.testing.assert_allclose(float(uplink_bits_jax(name, cp, D)),
+                               sparse_message_bits(D, k), rtol=1e-6)
+
+
+def test_uplink_bits_dense_formulas():
+    cp = compression_params(k=8, levels=16, block=32)
+    assert float(uplink_bits_jax("none", cp, D)) == 32.0 * D
+    assert float(uplink_bits_jax("sign", cp, D)) == D
+    assert float(uplink_bits_jax("scaled_sign", cp, D)) == D + 32.0
+    assert float(uplink_bits_jax("blockwise_scaled_sign", cp, D)) == \
+        D + 32.0 * np.ceil(D / 32)
+    np.testing.assert_allclose(float(uplink_bits_jax("ternary", cp, D)),
+                               np.log2(3) * D + 32.0, rtol=1e-6)
+    np.testing.assert_allclose(float(uplink_bits_jax("qsgd", cp, D)),
+                               (np.log2(17) + 1) * D + 32.0, rtol=1e-6)
+
+
+def test_compressor_bits_equal_pricing_model(key):
+    """The bits each operator returns == the standalone pricing model the
+    engine uses to schedule *before* transmission (data-independence)."""
+    x = _x()
+    for name in compressor_names():
+        _, bits = get_compressor(name)(CP, key, x)
+        np.testing.assert_allclose(float(bits),
+                                   float(uplink_bits_jax(name, CP, D)),
+                                   rtol=1e-6, err_msg=name)
+
+
+def test_unknown_name_raises():
+    with pytest.raises(ValueError, match="unknown compressor"):
+        get_compressor("gzip")
+    with pytest.raises(ValueError, match="unknown compressor"):
+        uplink_bits_jax("gzip", CP, D)
+
+
+# ---------------------------------------------------------------------------
+# k-contraction (Def. 1, eq. 22) under EF for every registry compressor
+# ---------------------------------------------------------------------------
+# Effective contraction parameter per operator, paired with an input
+# distribution on which the bound provably holds (see §II: top-k is an exact
+# k-contraction; scaled-sign is delta-approximate with delta = L1^2/(d*L2^2),
+# i.e. k_eff = d*delta; stochastic operators contract in expectation).
+def _gaussian(seed):
+    return _x(seed)
+
+
+def _unit_scale(seed):
+    """|x_i| in [0.6, 1.4]: keeps the sign/ternary alphabets contractive."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    mag = jax.random.uniform(k1, (D,), minval=0.6, maxval=1.4)
+    sgn = jnp.sign(jax.random.normal(k2, (D,)))
+    return mag * sgn
+
+
+CONTRACTION_CASES = [
+    ("none", _gaussian, D),
+    ("topk", _gaussian, 16),
+    ("randk", _gaussian, 12),       # k=16 in expectation; slack for variance
+    ("rtopk", _gaussian, 12),
+    ("qsgd", _gaussian, 1),
+    ("ternary", _unit_scale, 1),
+    ("sign", _unit_scale, 1),
+    ("scaled_sign", _gaussian, None),   # k_eff = floor(d * delta(x))
+    ("blockwise_scaled_sign", _gaussian, None),
+]
+
+
+@pytest.mark.parametrize("name,make_x,k_eff",
+                         CONTRACTION_CASES,
+                         ids=[c[0] for c in CONTRACTION_CASES])
+def test_registry_k_contraction(name, make_x, k_eff):
+    fn = get_compressor(name)
+    oks = []
+    for seed in range(20):
+        x = make_x(seed)
+        if k_eff is None:  # eq. (30): delta-approximate, delta = L1^2/(d L2^2)
+            l1, l2sq = float(jnp.sum(jnp.abs(x))), float(jnp.sum(x * x))
+            k = int(l1 * l1 / (D * l2sq) * D)
+        else:
+            k = k_eff
+        comp = lambda v: fn(CP, jax.random.PRNGKey(seed), v)  # noqa: E731
+        oks.append(bool(is_k_contraction(comp, x, k)))
+    # deterministic operators hold per-realization; stochastic ones on average
+    assert np.mean(oks) >= (1.0 if name in ("none", "topk", "sign",
+                                            "scaled_sign",
+                                            "blockwise_scaled_sign")
+                            else 0.8), f"{name}: {np.mean(oks)}"
+
+
+@pytest.mark.parametrize("name", sorted(set(compressor_names()) - {"none"}))
+def test_registry_ef_identity_and_bounded_error(name):
+    """Every registry compressor composes with EF (eqs. 20-21): the identity
+    c_t + e_{t+1} = x_t + e_t holds exactly and the accumulated EF error
+    stays bounded over repeated rounds (no blow-up)."""
+    fn = get_compressor(name)
+    e = init_error_state(jnp.zeros(D))
+    norms = []
+    for i in range(30):
+        x = _unit_scale(i) if name in ("sign", "ternary") else _gaussian(i)
+        comp = lambda v: fn(CP, jax.random.PRNGKey(i), v)  # noqa: E731
+        c, e_new, _ = ef_compress(comp, x, e)
+        np.testing.assert_allclose(np.asarray(c + e_new), np.asarray(x + e),
+                                   rtol=1e-4, atol=1e-4)
+        e = e_new
+        norms.append(float(jnp.linalg.norm(e)))
+    assert max(norms[15:]) < 10 * np.sqrt(D), name

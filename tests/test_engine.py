@@ -1,5 +1,7 @@
 """Device-resident simulation engine (fl/runtime.py): scan/host parity,
-sweep shapes + determinism, and the no-retrace property of the engine cache.
+sweep shapes + determinism, the no-retrace property of the engine cache, and
+the first-class compression path (bits-on-the-wire -> latency, EF in the
+scan carry, sweepable compression axis).
 """
 import jax
 import jax.numpy as jnp
@@ -8,6 +10,9 @@ import pytest
 
 from benchmarks.common import make_linear_problem
 from repro.core import scheduling, wireless
+from repro.core.compression import (compression_params, sparse_message_bits,
+                                    topk_sparsify)
+from repro.core.hierarchy import HFLConfig
 from repro.fl import runtime as rt
 
 
@@ -145,6 +150,185 @@ def test_eval_batch_inside_scan_matches_host_eval_fn():
                              eval_fn=host_eval)
     for c, h in zip(compiled, host):
         np.testing.assert_allclose(c.loss, h.loss, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# First-class compression through the compiled engine
+# ---------------------------------------------------------------------------
+D = 16
+
+
+def _cfg(compression="none", cparams=None, **kw):
+    kw.setdefault("n_devices", 8)
+    kw.setdefault("n_scheduled", 3)
+    kw.setdefault("rounds", 8)
+    kw.setdefault("lr", 0.1)
+    kw.setdefault("policy", "random")
+    kw.setdefault("seed", 7)
+    kw.setdefault("model_bits", 32.0 * D)  # payload == the actual d-dim
+    #                                        message -> exact Alg.4 accounting
+    return rt.SimConfig(compression=compression, compression_params=cparams,
+                        **kw)
+
+
+@pytest.mark.parametrize("compression", ["topk", "qsgd", "scaled_sign"])
+def test_scan_host_parity_with_compression(compression):
+    """Scan and host engines agree with compression + EF in the carry."""
+    params0, loss_fn, make_batches = _make_problem()
+    cfg = _cfg(compression, compression_params(k=3, levels=8))
+    scan_logs = rt.run_simulation(cfg, loss_fn, params0, make_batches,
+                                  engine="scan")
+    host_logs = rt.run_simulation(cfg, loss_fn, params0, make_batches,
+                                  engine="host")
+    for s, h in zip(scan_logs, host_logs):
+        np.testing.assert_array_equal(s.participation, h.participation)
+        np.testing.assert_allclose(s.loss, h.loss, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(s.latency_s, h.latency_s,
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(s.uplink_bits, h.uplink_bits, rtol=1e-5)
+
+
+def test_compression_shortens_rounds_and_matches_coding():
+    """Bits-on-the-wire drive latency: a compressed run is strictly faster
+    than an uncompressed one under identical channels/schedules, and its
+    logged uplink_bits equal the Alg. 4 accounting from coding.py."""
+    params0, loss_fn, make_batches = _make_problem()
+    k = 2
+    comp = rt.run_simulation(_cfg("topk", compression_params(k=k)),
+                             loss_fn, params0, make_batches, engine="scan")
+    none = rt.run_simulation(_cfg("none"), loss_fn, params0, make_batches,
+                             engine="scan")
+    for c, u in zip(comp, none):
+        # same seed + random policy -> identical schedules, cheaper uplink
+        np.testing.assert_array_equal(c.participation, u.participation)
+        assert c.latency_s < u.latency_s
+        assert c.comm_s < u.comm_s
+        np.testing.assert_allclose(c.comp_s, u.comp_s, rtol=1e-5)
+        np.testing.assert_allclose(
+            c.uplink_bits, sparse_message_bits(D, k) * c.n_scheduled,
+            rtol=1e-5)
+        np.testing.assert_allclose(u.uplink_bits,
+                                   32.0 * D * u.n_scheduled, rtol=1e-5)
+        np.testing.assert_allclose(c.latency_s - (comp[c.round - 1].latency_s
+                                                  if c.round else 0.0),
+                                   c.comm_s + c.comp_s, rtol=1e-4, atol=1e-6)
+    # compression still learns
+    assert comp[-1].loss < comp[0].loss * 0.5
+
+
+def test_compression_interacts_with_deadline_policy():
+    """The deadline greedy (P4) sees compressed upload times, so a tight
+    deadline admits more devices when the payload shrinks."""
+    params0, loss_fn, make_batches = _make_problem()
+    wcfg = wireless.WirelessConfig(n_devices=8, tx_power_dbm=-18.0)
+    base = dict(policy="deadline", deadline_s=1.0, n_scheduled=8,
+                model_bits=32.0 * D, comp_latency_s=1e-3, seed=1, rounds=6)
+    comp = rt.run_simulation(
+        rt.SimConfig(n_devices=8, lr=0.1, compression="topk",
+                     compression_params=compression_params(k=1), **base),
+        loss_fn, params0, make_batches, wcfg=wcfg, engine="scan")
+    none = rt.run_simulation(rt.SimConfig(n_devices=8, lr=0.1, **base),
+                             loss_fn, params0, make_batches, wcfg=wcfg,
+                             engine="scan")
+    assert sum(c.n_scheduled for c in comp) > sum(u.n_scheduled for u in none)
+
+
+def test_compression_engine_cache_no_retrace():
+    """Two *equal* compression configs (the failure mode of the old opaque
+    callable: equal lambdas hashed differently) reuse one compiled engine."""
+    params0, loss_fn, make_batches = _make_problem()
+    run = lambda: rt.run_simulation(  # noqa: E731
+        _cfg("topk", compression_params(k=3)), loss_fn, params0, make_batches,
+        engine="scan")
+    run()  # compile
+    before = rt.ENGINE_STATS["traces"]
+    run()
+    # fresh-but-equal config objects and params, different traced k
+    rt.run_simulation(_cfg("topk", compression_params(k=5)), loss_fn,
+                      params0, make_batches, engine="scan")
+    assert rt.ENGINE_STATS["traces"] == before
+
+
+def test_sweep_compression_axis_one_trace_per_pair():
+    """seed x channel x CompressionParams grids run as one vmapped call per
+    (policy, compressor-name) pair."""
+    params0, loss_fn, make_batches = _make_problem()
+    rounds, n = 4, 8
+    cfg = rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds, lr=0.1,
+                       model_bits=32.0 * D)
+    batches = rt.stack_batches(make_batches, rounds, n)
+    wcfgs = [wireless.WirelessConfig(n_devices=n),
+             wireless.WirelessConfig(n_devices=n, tx_power_dbm=20.0)]
+    cps = [compression_params(k=2, levels=4),
+           compression_params(k=8, levels=64)]
+    before = rt.ENGINE_STATS["traces"]
+    out = rt.run_sweep(cfg, loss_fn, params0, batches, seeds=[0, 1],
+                       wcfgs=wcfgs, policies=["random", "best_channel"],
+                       compressions=["none", "topk", "qsgd"],
+                       cparams_grid=cps)
+    assert rt.ENGINE_STATS["traces"] - before == 2 * 3  # policies x names
+    assert set(out) == {(p, c) for p in ("random", "best_channel")
+                        for c in ("none", "topk", "qsgd")}
+    v = 2 * len(wcfgs) * len(cps)
+    for logs in out.values():
+        assert logs.loss.shape == (v, rounds)
+        assert logs.uplink_bits.shape == (v, rounds)
+        assert np.isfinite(logs.loss).all()
+    # within a variant row, k=2 costs fewer uplink bits than k=8
+    ub = out[("random", "topk")].uplink_bits
+    assert (ub[0::2] < ub[1::2]).all()
+    # the traced compression axis is inert for "none"
+    ub_none = out[("random", "none")].uplink_bits
+    np.testing.assert_allclose(ub_none[0::2], ub_none[1::2], rtol=1e-6)
+    # repeated identical sweep: no re-trace
+    rt.run_sweep(cfg, loss_fn, params0, batches, seeds=[0, 1], wcfgs=wcfgs,
+                 policies=["random", "best_channel"],
+                 compressions=["none", "topk", "qsgd"], cparams_grid=cps)
+    assert rt.ENGINE_STATS["traces"] - before == 2 * 3
+
+
+def test_legacy_callable_compressor_deprecated_host_only():
+    params0, loss_fn, make_batches = _make_problem()
+    comp = lambda g: topk_sparsify(g, max(1, g.size // 8))  # noqa: E731
+    cfg = rt.SimConfig(n_devices=8, n_scheduled=4, rounds=5, lr=0.1,
+                       compressor=comp)
+    with pytest.warns(DeprecationWarning, match="compressor"):
+        logs = rt.run_simulation(cfg, loss_fn, params0, make_batches)
+    assert len(logs) == 5
+    with pytest.warns(DeprecationWarning, match="compressor"):
+        with pytest.raises(ValueError, match="registry"):
+            rt.run_simulation(cfg, loss_fn, params0, make_batches,
+                              engine="scan")
+    # setting both interfaces is rejected up front, not mid-trace
+    both = rt.SimConfig(n_devices=8, n_scheduled=4, rounds=5, lr=0.1,
+                        compression="topk", compressor=comp)
+    with pytest.warns(DeprecationWarning, match="compressor"):
+        with pytest.raises(ValueError, match="both"):
+            rt.run_simulation(both, loss_fn, params0, make_batches)
+
+
+def test_hfl_scan_host_parity():
+    """The HFL host loop shares the scanned engine's round step (ROADMAP
+    carry-over): both paths produce identical eval losses."""
+    params0, loss_fn, make_batches = _make_problem()
+    eval_batch = jax.tree.map(lambda x: x[0], make_batches(999, 2))
+
+    def eval_scan(p):
+        return float(loss_fn(p, eval_batch)[0])
+    eval_scan.eval_batch = eval_batch
+
+    def eval_host(p):  # opaque -> routes to the host loop
+        return float(loss_fn(p, eval_batch)[0])
+
+    cfg = rt.SimConfig(n_devices=12, rounds=9, lr=0.1, seed=3)
+    hcfg = HFLConfig(n_clusters=3, inter_cluster_period=3)
+    scan = rt.run_hfl(cfg, hcfg, loss_fn, params0, make_batches,
+                      eval_fn=eval_scan)
+    host = rt.run_hfl(cfg, hcfg, loss_fn, params0, make_batches,
+                      eval_fn=eval_host)
+    assert len(scan) == len(host) == cfg.rounds
+    for s, h in zip(scan, host):
+        np.testing.assert_allclose(s.loss, h.loss, rtol=1e-4, atol=1e-5)
 
 
 def test_jnp_policy_parity_with_numpy_reference():

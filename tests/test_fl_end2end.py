@@ -23,18 +23,36 @@ def _make_problem():
     return make_linear_problem(d=D)
 
 
-@pytest.mark.parametrize("compressor,server", [
-    (None, "avg"),
-    (lambda g: topk_sparsify(g, max(1, g.size // 8)), "avg"),
-    (scaled_sign, "avg"),
-    (lambda g: qsgd(jax.random.PRNGKey(0), g, 16), "avg"),
-    (None, "slowmo"),
-    (None, "adam"),
+@pytest.mark.parametrize("compression,server", [
+    ("none", "avg"),
+    ("topk", "avg"),
+    ("scaled_sign", "avg"),
+    ("qsgd", "avg"),
+    ("none", "slowmo"),
+    ("none", "adam"),
 ])
-def test_fl_converges(compressor, server):
+def test_fl_converges(compression, server):
     params0, loss_fn, make_batches, _ = _make_problem()
     cfg = rt.SimConfig(n_devices=8, n_scheduled=4, rounds=40, lr=0.1,
-                       policy="random", compressor=compressor, server=server)
+                       policy="random", compression=compression,
+                       compression_params=rt.compression.compression_params(
+                           k=D // 8, levels=16),
+                       server=server)
+    logs = rt.run_simulation(cfg, loss_fn, params0, make_batches)
+    assert logs[-1].loss < logs[0].loss * 0.3, (logs[0].loss, logs[-1].loss)
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+@pytest.mark.parametrize("compressor", [
+    lambda g: topk_sparsify(g, max(1, g.size // 8)),
+    scaled_sign,
+    lambda g: qsgd(jax.random.PRNGKey(0), g, 16),
+])
+def test_fl_converges_legacy_callable(compressor):
+    """Deprecated opaque-callable path (host engine) still converges."""
+    params0, loss_fn, make_batches, _ = _make_problem()
+    cfg = rt.SimConfig(n_devices=8, n_scheduled=4, rounds=40, lr=0.1,
+                       policy="random", compressor=compressor)
     logs = rt.run_simulation(cfg, loss_fn, params0, make_batches)
     assert logs[-1].loss < logs[0].loss * 0.3, (logs[0].loss, logs[-1].loss)
 
