@@ -1,0 +1,52 @@
+"""Algorithm-registry throughput: rounds/s per algorithm on the acceptance
+config (100 rounds x 40 devices) through the compiled scan engine.
+
+Every algorithm shares one engine shape except SCAFFOLD, which carries the
+flat (N, D) control-variate matrix in the scan carry and uplinks (and is
+billed for) a second message-sized payload per client — so its rows double
+the reported bits-on-the-wire and pick up the extra carry bandwidth.
+Derived column: final loss and per-round uplink bits on the tiny linear
+problem (negligible model FLOPs, so the timing isolates algorithm overhead).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_rounds, emit, make_linear_problem
+from repro.core.algorithms import algorithm_names
+from repro.fl import runtime as rt
+
+ROUNDS = 100
+N_DEVICES = 40
+
+
+def main() -> None:
+    rounds = bench_rounds(ROUNDS)
+    params, loss_fn, make_batches, _ = make_linear_problem()
+    batches = rt.stack_batches(make_batches, rounds, N_DEVICES)
+    aparams = rt.algo_params(lr=0.1, momentum=0.5, prox_mu=0.01,
+                             server_lr=0.5)
+    for name in algorithm_names():
+        cfg = rt.SimConfig(n_devices=N_DEVICES, n_scheduled=8, rounds=rounds,
+                           policy="random", algorithm=name,
+                           algo_params=aparams)
+
+        def run():
+            # fresh params every call: the engine donates them
+            return rt.run_simulation_scan(
+                cfg, loss_fn, jax.tree.map(jnp.array, params), batches)
+
+        run()  # compile
+        t0 = time.perf_counter()
+        _, logs = run()
+        dt = time.perf_counter() - t0
+        emit(f"algorithms.{name}.us_per_round", dt / rounds * 1e6,
+             f"loss={logs.loss[-1]:.4f};rounds_per_s={rounds / dt:.0f};"
+             f"uplink_bits={logs.uplink_bits[0]:.2e}")
+
+
+if __name__ == "__main__":
+    main()

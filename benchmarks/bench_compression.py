@@ -36,7 +36,7 @@ def main() -> None:
     params, loss_fn, sample, eval_fn = make_lm_problem(n_clients=N_DEVICES)
     d = flat_dim(params)
     cfg = rt.SimConfig(n_devices=N_DEVICES, n_scheduled=N_DEVICES,
-                       rounds=rounds, lr=1.0, local_steps=4, policy="random",
+                       rounds=rounds, algo_params=rt.algo_params(lr=1.0), local_steps=4, policy="random",
                        model_bits=32.0 * d,
                        compression_params=compression_params(
                            k=max(1, d // 100), levels=256))

@@ -23,7 +23,7 @@ def main() -> None:
     t0 = time.perf_counter()
     # flat FL baseline (all devices participate — matches Alg. 9 with L=1)
     params, loss_fn, sample, eval_fn = make_lm_problem(n_clients=21, alpha=0.3)
-    fl_cfg = rt.SimConfig(n_devices=21, n_scheduled=21, rounds=rounds, lr=1.0,
+    fl_cfg = rt.SimConfig(n_devices=21, n_scheduled=21, rounds=rounds, algo_params=rt.algo_params(lr=1.0),
                           local_steps=2, policy="random", model_bits=1e6)
     fl_logs = rt.run_simulation(fl_cfg, loss_fn, params, sample,
                                 eval_fn=eval_fn)

@@ -24,7 +24,7 @@ ROUNDS = 100
 
 
 def _cfg(policy: str, rounds: int) -> rt.SimConfig:
-    return rt.SimConfig(n_devices=20, n_scheduled=4, rounds=rounds, lr=1.0,
+    return rt.SimConfig(n_devices=20, n_scheduled=4, rounds=rounds, algo_params=rt.algo_params(lr=1.0),
                         policy=policy, local_steps=4, model_bits=1e6)
 
 
@@ -58,7 +58,7 @@ def bench_engine(rounds: int) -> None:
     isolates simulation overhead (dispatch, channel, scheduling)."""
     # --- engine overhead: 40 devices, light model -------------------------
     params0, lin_loss, make_batches, _ = make_linear_problem()
-    cfg = rt.SimConfig(n_devices=40, n_scheduled=8, rounds=rounds, lr=0.1,
+    cfg = rt.SimConfig(n_devices=40, n_scheduled=8, rounds=rounds, algo_params=rt.algo_params(lr=0.1),
                        policy="random")
     wcfg = rt.wireless.WirelessConfig(n_devices=cfg.n_devices)
     batches = rt.stack_batches(make_batches, rounds, cfg.n_devices)

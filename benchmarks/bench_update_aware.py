@@ -19,7 +19,7 @@ def main() -> None:
     rounds = bench_rounds(ROUNDS)
     t0 = time.perf_counter()
     params, loss_fn, sample, eval_fn = make_lm_problem(n_clients=16, alpha=0.1)
-    cfg = rt.SimConfig(n_devices=16, n_scheduled=2, rounds=rounds, lr=1.0,
+    cfg = rt.SimConfig(n_devices=16, n_scheduled=2, rounds=rounds, algo_params=rt.algo_params(lr=1.0),
                        local_steps=4, model_bits=1e6)
     batches = rt.stack_batches(sample, rounds, cfg.n_devices)
     sweep = rt.run_sweep(cfg, loss_fn, params, batches, seeds=[cfg.seed],

@@ -15,8 +15,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_compression, bench_hfl, bench_kernels,
-                        bench_rs_rr_pf, bench_scheduling, bench_update_aware)
+from benchmarks import (bench_algorithms, bench_compression, bench_hfl,
+                        bench_kernels, bench_rs_rr_pf, bench_scheduling,
+                        bench_update_aware)
 from benchmarks import common, roofline
 
 MODULES = [
@@ -24,6 +25,7 @@ MODULES = [
     ("update_aware(fig2)", bench_update_aware),
     ("hfl(table1)", bench_hfl),
     ("compression(sec2)", bench_compression),
+    ("algorithms(registry)", bench_algorithms),
     ("rs_rr_pf(eqs50-56)", bench_rs_rr_pf),
     ("kernels", bench_kernels),
 ]

@@ -11,7 +11,7 @@ from repro.fl import runtime as rt
 def main() -> None:
     rounds = 60
     params, loss_fn, sample, eval_fn = make_lm_problem(n_clients=21, alpha=0.3)
-    base = rt.SimConfig(n_devices=21, n_scheduled=21, rounds=rounds, lr=1.0,
+    base = rt.SimConfig(n_devices=21, n_scheduled=21, rounds=rounds, algo_params=rt.algo_params(lr=1.0),
                         local_steps=2, policy="random", model_bits=1e8)
 
     fl_logs = rt.run_simulation(base, loss_fn, params, sample, eval_fn=eval_fn)

@@ -30,7 +30,7 @@ def main() -> None:
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
     d = flat_dim(params)
     sim = rt.SimConfig(
-        n_devices=12, n_scheduled=4, rounds=30, local_steps=2, lr=2e-3,
+        n_devices=12, n_scheduled=4, rounds=30, local_steps=2, algo_params=rt.algo_params(lr=2e-3),
         policy="age",  # age-based wireless scheduling [58]
         compression="topk",  # registry compressor: 2% top-k + EF, and the
         #                      compressed bits price the uplink latency

@@ -20,7 +20,7 @@ ROUNDS = 60
 def main() -> None:
     params, loss_fn, sample, eval_fn = make_lm_problem(n_clients=20,
                                                        alpha=0.1)
-    cfg = rt.SimConfig(n_devices=20, n_scheduled=4, rounds=ROUNDS, lr=1.0,
+    cfg = rt.SimConfig(n_devices=20, n_scheduled=4, rounds=ROUNDS, algo_params=rt.algo_params(lr=1.0),
                        local_steps=4, model_bits=1e6)
     batches = rt.stack_batches(sample, ROUNDS, cfg.n_devices)
     sweep = rt.run_sweep(cfg, loss_fn, params, batches, seeds=[cfg.seed],

@@ -61,23 +61,30 @@ def init_slowmo(params: PyTree) -> SlowMoState:
     return SlowMoState(jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params))
 
 
-def slowmo(params: PyTree, client_deltas: PyTree, state: SlowMoState, *,
-           inner_lr: float, alpha: float = 1.0, beta: float = 0.5,
-           participation: Optional[jnp.ndarray] = None
-           ) -> Tuple[PyTree, SlowMoState]:
+def slowmo_step(params: PyTree, mean_delta: PyTree, state: SlowMoState, *,
+                inner_lr, alpha=1.0, beta=0.5) -> Tuple[PyTree, SlowMoState]:
     """theta_{t+1} = theta_t - alpha * eta * m_{t+1};
     m_{t+1} = beta*m_t + mean(delta)/eta  (Alg. 8 lines 13-16).
 
-    client_deltas are theta_i^H - theta_{t-1} (note sign: descent deltas are
-    negative), so the pseudo-gradient is -mean(delta)/eta.
+    ``mean_delta`` is the already-aggregated theta_i^H - theta_{t-1} (note
+    sign: descent deltas are negative), so the pseudo-gradient is
+    -mean_delta/eta. Hyperparameters may be traced (AlgoParams sweep axes).
     """
-    mean_delta = _wmean(client_deltas, participation)
     pseudo_grad = jax.tree.map(lambda d: -d.astype(jnp.float32) / inner_lr, mean_delta)
     m = jax.tree.map(lambda m0, g: beta * m0 + g, state.momentum, pseudo_grad)
     new_params = jax.tree.map(
         lambda p, mm: (p.astype(jnp.float32) - alpha * inner_lr * mm).astype(p.dtype),
         params, m)
     return new_params, SlowMoState(m)
+
+
+def slowmo(params: PyTree, client_deltas: PyTree, state: SlowMoState, *,
+           inner_lr: float, alpha: float = 1.0, beta: float = 0.5,
+           participation: Optional[jnp.ndarray] = None
+           ) -> Tuple[PyTree, SlowMoState]:
+    """Stacked-client convenience wrapper over :func:`slowmo_step`."""
+    return slowmo_step(params, _wmean(client_deltas, participation), state,
+                       inner_lr=inner_lr, alpha=alpha, beta=beta)
 
 
 # ---------------------------------------------------------------------------
@@ -94,12 +101,11 @@ def init_server_opt(params: PyTree) -> ServerOptState:
     return ServerOptState(z, z, jnp.zeros((), jnp.int32))
 
 
-def fedadam(params: PyTree, client_deltas: PyTree, state: ServerOptState, *,
-            server_lr: float = 1e-2, beta1: float = 0.9, beta2: float = 0.99,
-            eps: float = 1e-3, participation: Optional[jnp.ndarray] = None,
-            yogi: bool = False) -> Tuple[PyTree, ServerOptState]:
-    """Server Adam on the pseudo-gradient -mean(delta)."""
-    mean_delta = _wmean(client_deltas, participation)
+def fedadam_step(params: PyTree, mean_delta: PyTree, state: ServerOptState, *,
+                 server_lr=1e-2, beta1=0.9, beta2=0.99, eps=1e-3,
+                 yogi: bool = False) -> Tuple[PyTree, ServerOptState]:
+    """Server Adam on the pseudo-gradient -mean_delta (already aggregated).
+    Hyperparameters may be traced (AlgoParams sweep axes)."""
     g = jax.tree.map(lambda d: -d.astype(jnp.float32), mean_delta)
     step = state.step + 1
     m = jax.tree.map(lambda m0, gg: beta1 * m0 + (1 - beta1) * gg, state.m, g)
@@ -118,3 +124,13 @@ def fedadam(params: PyTree, client_deltas: PyTree, state: ServerOptState, *,
                            ).astype(p.dtype),
         params, m, v)
     return new_params, ServerOptState(m, v, step)
+
+
+def fedadam(params: PyTree, client_deltas: PyTree, state: ServerOptState, *,
+            server_lr: float = 1e-2, beta1: float = 0.9, beta2: float = 0.99,
+            eps: float = 1e-3, participation: Optional[jnp.ndarray] = None,
+            yogi: bool = False) -> Tuple[PyTree, ServerOptState]:
+    """Stacked-client convenience wrapper over :func:`fedadam_step`."""
+    return fedadam_step(params, _wmean(client_deltas, participation), state,
+                        server_lr=server_lr, beta1=beta1, beta2=beta2,
+                        eps=eps, yogi=yogi)

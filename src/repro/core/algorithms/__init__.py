@@ -1,0 +1,7 @@
+"""Distributed-optimization algorithm registry (FedAvg family, SCAFFOLD,
+SlowMo, adaptive server methods) for the compiled simulation engine."""
+from repro.core.algorithms.registry import (  # noqa: F401
+    Algorithm, AlgoParams, algo_params, algorithm_names,
+    default_algo_params, flat_dim, flatten_vec, from_server_name,
+    get_algorithm, sgd_steps, stack_algo_params, unflatten_rows,
+    unflatten_vec)

@@ -1,0 +1,299 @@
+"""First-class distributed-optimization algorithm registry (paper §II-III).
+
+The paper's subject is the *family* of collaborative-learning algorithms —
+PSSGD, local-SGD/FedAvg, SlowMo, adaptive server methods — and how wireless
+scheduling and compression interact with each of them. The engine used to
+hardwire the client update to plain local SGD and drive the server side
+through a stringly-typed ``server=`` kwarg whose hyperparameters were not
+even threaded through ``run_simulation``. This registry replaces that, with
+the same split the policy and compression registries use:
+
+* the algorithm **name** is static (an engine-cache key / Python-loop axis);
+* every hyperparameter travels in a traced :class:`AlgoParams` NamedTuple
+  (continuous, so ``run_sweep`` vmaps a learning-rate grid exactly like a
+  channel or compression-level grid — no retrace per lr point);
+* :func:`get_algorithm` returns an :class:`Algorithm` triple of pure-jnp
+  functions ``(client_update, server_update, init_algo_state)`` plus two
+  static facts the engine needs: whether the algorithm carries per-client
+  control variates in the scan carry (SCAFFOLD) and how many message-sized
+  uplink payloads a client sends per round (2 for SCAFFOLD — the control
+  variate delta rides the same wireless uplink and is priced by
+  ``comm_latency_jax``).
+
+Algorithms
+----------
+``fedavg``     H local SGD steps, server averaging (Alg. 7).
+``fedavg_m``   FedAvg with client-side momentum (``momentum``).
+``fedprox``    proximal local steps ``g + prox_mu * (w - w_global)``
+               (Li et al. 2020, heterogeneity-robust).
+``scaffold``   control-variate-corrected local steps ``g + c - c_i``;
+               per-client ``c_i`` lives as a flat (N, D) message-space
+               matrix in the scan carry, the server ``c`` as a flat (D,)
+               vector in the algo state (Karimireddy et al. 2020).
+``slowmo``     server momentum over the pseudo-gradient (Alg. 8).
+``fedadam``    server Adam on the pseudo-gradient (Reddi et al. 2021).
+``fedyogi``    server Yogi variant (Reddi et al. 2021).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation as agg
+
+PyTree = Any
+
+
+class AlgoParams(NamedTuple):
+    """Traceable (vmappable) algorithm hyperparameters.
+
+    Continuous on purpose: a sweep stacks these along a leading variant axis
+    (see :func:`stack_algo_params`) and the engine vmaps over them, so every
+    hyperparameter is a sweep axis while the algorithm *name* stays the
+    static engine-cache key. Fields unused by a given algorithm are ignored.
+    """
+    lr: jnp.ndarray            # client/local learning rate (all algorithms)
+    momentum: jnp.ndarray      # client momentum (fedavg_m)
+    prox_mu: jnp.ndarray       # proximal strength (fedprox)
+    server_lr: jnp.ndarray     # server step size (all server updates)
+    slowmo_beta: jnp.ndarray   # server momentum decay (slowmo)
+    beta1: jnp.ndarray         # Adam/Yogi first-moment decay
+    beta2: jnp.ndarray         # Adam/Yogi second-moment decay
+    eps: jnp.ndarray           # Adam/Yogi denominator floor
+
+
+def algo_params(lr: float = 0.05, momentum: float = 0.9,
+                prox_mu: float = 0.01, server_lr: float = 1.0,
+                slowmo_beta: float = 0.5, beta1: float = 0.9,
+                beta2: float = 0.99, eps: float = 1e-3) -> AlgoParams:
+    return AlgoParams(*(jnp.float32(v) for v in (
+        lr, momentum, prox_mu, server_lr, slowmo_beta, beta1, beta2, eps)))
+
+
+def default_algo_params() -> AlgoParams:
+    return algo_params()
+
+
+def stack_algo_params(ps) -> AlgoParams:
+    """Stack params along a leading variant axis (``run_sweep``'s vmap)."""
+    ps = list(ps)
+    return AlgoParams(*(jnp.stack([getattr(p, f) for p in ps])
+                        for f in AlgoParams._fields))
+
+
+# ---------------------------------------------------------------------------
+# Flat message-space helpers (shared by EF and control-variate state)
+# ---------------------------------------------------------------------------
+def flat_dim(tree: PyTree) -> int:
+    """Total message dimension of a parameter/delta pytree."""
+    return sum(leaf.size for leaf in jax.tree.leaves(tree))
+
+
+def flatten_vec(tree: PyTree) -> jnp.ndarray:
+    """Pytree -> one flat (D,) float32 message vector."""
+    return jnp.concatenate([leaf.astype(jnp.float32).ravel()
+                            for leaf in jax.tree.leaves(tree)])
+
+
+def unflatten_vec(vec: jnp.ndarray, template: PyTree) -> PyTree:
+    """(D,) message vector -> float32 pytree shaped like ``template``."""
+    leaves, treedef = jax.tree.flatten(template)
+    out, off = [], 0
+    for leaf in leaves:
+        out.append(vec[off:off + leaf.size].reshape(leaf.shape))
+        off += leaf.size
+    return jax.tree.unflatten(treedef, out)
+
+
+def unflatten_rows(mat: jnp.ndarray, template: PyTree) -> PyTree:
+    """(N, D) message matrix -> stacked float32 pytree with leading client
+    axis, leaf shapes ``(N,) + template_leaf.shape``."""
+    leaves, treedef = jax.tree.flatten(template)
+    n = mat.shape[0]
+    out, off = [], 0
+    for leaf in leaves:
+        out.append(mat[:, off:off + leaf.size].reshape((n,) + leaf.shape))
+        off += leaf.size
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Local SGD loop (the single implementation behind every client update)
+# ---------------------------------------------------------------------------
+def sgd_steps(loss_fn, params: PyTree, batches: PyTree, lr,
+              momentum=0.0, extra_grad: Optional[Callable[[PyTree], PyTree]] = None
+              ) -> Tuple[PyTree, PyTree, jnp.ndarray]:
+    """H local (momentum-)SGD steps via ``lax.scan`` (eqs. 32-35).
+
+    ``batches`` leaves have leading dim H; ``lr``/``momentum`` may be traced.
+    ``extra_grad(p)`` (optional) returns a float32 pytree added to the
+    gradient each step — the FedProx proximal term or the SCAFFOLD control
+    correction. Returns (delta = theta_H - theta_0, final params, mean loss).
+    """
+    grad_fn = jax.grad(lambda p, b: loss_fn(p, b)[0])
+    vel0 = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def step(carry, batch):
+        p, vel = carry
+        g = grad_fn(p, batch)
+        loss = loss_fn(p, batch)[0]
+        if extra_grad is not None:
+            g = jax.tree.map(lambda gg, e: gg.astype(jnp.float32) + e,
+                             g, extra_grad(p))
+        vel = jax.tree.map(lambda v, gg: momentum * v + gg.astype(jnp.float32),
+                           vel, g)
+        p = jax.tree.map(lambda pp, v: (pp.astype(jnp.float32) - lr * v).astype(pp.dtype),
+                         p, vel)
+        return (p, vel), loss
+
+    (p_final, _), losses = jax.lax.scan(step, (params, vel0), batches)
+    delta = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                         p_final, params)
+    return delta, p_final, jnp.mean(losses)
+
+
+# ---------------------------------------------------------------------------
+# Client updates — one client; ``fl_round`` vmaps over the client axis.
+# Signature: (loss_fn, ap, params, batches, ctrl) -> (delta, ctrl_delta, loss)
+# where ``ctrl`` is None, or a ``(c_i, c)`` pair of float32 pytrees for
+# control-variate algorithms (which return the uplinked ctrl_delta).
+# ---------------------------------------------------------------------------
+def _client_sgd(loss_fn, ap: AlgoParams, params, batches, ctrl):
+    delta, _, loss = sgd_steps(loss_fn, params, batches, ap.lr)
+    return delta, None, loss
+
+
+def _client_sgd_momentum(loss_fn, ap: AlgoParams, params, batches, ctrl):
+    delta, _, loss = sgd_steps(loss_fn, params, batches, ap.lr,
+                               momentum=ap.momentum)
+    return delta, None, loss
+
+
+def _client_prox(loss_fn, ap: AlgoParams, params, batches, ctrl):
+    w0 = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+
+    def prox_grad(p):
+        return jax.tree.map(lambda pp, w: ap.prox_mu * (pp.astype(jnp.float32) - w),
+                            p, w0)
+
+    delta, _, loss = sgd_steps(loss_fn, params, batches, ap.lr,
+                               extra_grad=prox_grad)
+    return delta, None, loss
+
+
+def _client_scaffold(loss_fn, ap: AlgoParams, params, batches, ctrl):
+    c_i, c = ctrl
+    correction = jax.tree.map(lambda cc, ci: cc - ci, c, c_i)
+    delta, _, loss = sgd_steps(loss_fn, params, batches, ap.lr,
+                               extra_grad=lambda p: correction)
+    # option-II control update: c_i+ = c_i - c + (w0 - wH)/(H lr), i.e. the
+    # uplinked ctrl_delta = c_i+ - c_i = -c - delta/(H lr)
+    h = jax.tree.leaves(batches)[0].shape[0]
+    ctrl_delta = jax.tree.map(lambda cc, d: -cc - d / (h * ap.lr), c, delta)
+    return delta, ctrl_delta, loss
+
+
+# ---------------------------------------------------------------------------
+# Server updates — (ap, params, mean_delta, state, ctrl_aux) ->
+# (new_params, new_state). ``ctrl_aux`` is None, or (mean_ctrl_delta (D,),
+# participating fraction |S|/N) for control-variate algorithms.
+# ---------------------------------------------------------------------------
+def _server_avg(ap: AlgoParams, params, mean_delta, state, ctrl_aux):
+    new_params = jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32) + ap.server_lr * d).astype(p.dtype),
+        params, mean_delta)
+    return new_params, state
+
+
+def _server_scaffold(ap: AlgoParams, params, mean_delta, state, ctrl_aux):
+    new_params, _ = _server_avg(ap, params, mean_delta, None, None)
+    mean_ctrl_delta, part_frac = ctrl_aux
+    return new_params, state + part_frac * mean_ctrl_delta
+
+
+def _server_slowmo(ap: AlgoParams, params, mean_delta, state, ctrl_aux):
+    return agg.slowmo_step(params, mean_delta, state, inner_lr=ap.lr,
+                           alpha=ap.server_lr, beta=ap.slowmo_beta)
+
+
+def _server_adam(ap: AlgoParams, params, mean_delta, state, ctrl_aux):
+    return agg.fedadam_step(params, mean_delta, state, server_lr=ap.server_lr,
+                            beta1=ap.beta1, beta2=ap.beta2, eps=ap.eps)
+
+
+def _server_yogi(ap: AlgoParams, params, mean_delta, state, ctrl_aux):
+    return agg.fedadam_step(params, mean_delta, state, server_lr=ap.server_lr,
+                            beta1=ap.beta1, beta2=ap.beta2, eps=ap.eps,
+                            yogi=True)
+
+
+def _init_none(params):
+    return None
+
+
+def _init_scaffold(params):
+    return jnp.zeros(flat_dim(params), jnp.float32)
+
+
+class Algorithm(NamedTuple):
+    """The registry triple plus the two static facts the engine compiles on.
+
+    ``uses_ctrl`` tells the engine to allocate a flat (N, D) control-variate
+    matrix in the scan carry; ``uplink_factor`` is how many message-sized
+    payloads a client uplinks per round (2 for SCAFFOLD: delta + ctrl delta),
+    which multiplies the priced bits-on-the-wire.
+    """
+    name: str
+    client_update: Callable
+    server_update: Callable
+    init_algo_state: Callable
+    uses_ctrl: bool = False
+    uplink_factor: float = 1.0
+
+
+_REGISTRY: Dict[str, Algorithm] = {
+    "fedavg": Algorithm("fedavg", _client_sgd, _server_avg, _init_none),
+    "fedavg_m": Algorithm("fedavg_m", _client_sgd_momentum, _server_avg,
+                          _init_none),
+    "fedprox": Algorithm("fedprox", _client_prox, _server_avg, _init_none),
+    "scaffold": Algorithm("scaffold", _client_scaffold, _server_scaffold,
+                          _init_scaffold, uses_ctrl=True, uplink_factor=2.0),
+    "slowmo": Algorithm("slowmo", _client_sgd, _server_slowmo,
+                        lambda p: agg.init_slowmo(p)),
+    "fedadam": Algorithm("fedadam", _client_sgd, _server_adam,
+                         lambda p: agg.init_server_opt(p)),
+    "fedyogi": Algorithm("fedyogi", _client_sgd, _server_yogi,
+                         lambda p: agg.init_server_opt(p)),
+}
+
+# deprecated SimConfig.server / fl_round(server=) spellings -> registry names
+SERVER_ALIASES: Dict[str, str] = {
+    "avg": "fedavg", "slowmo": "slowmo", "adam": "fedadam", "yogi": "fedyogi",
+}
+
+
+def get_algorithm(name) -> Algorithm:
+    """Registry lookup: static *name* -> :class:`Algorithm` triple. Passing
+    an :class:`Algorithm` through unchanged is allowed (resolved callers)."""
+    if isinstance(name, Algorithm):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown algorithm {name!r}; "
+                         f"known: {sorted(_REGISTRY)}") from None
+
+
+def algorithm_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def from_server_name(server: str) -> str:
+    """Map a deprecated ``server=`` spelling onto its registry name."""
+    try:
+        return SERVER_ALIASES[server]
+    except KeyError:
+        raise ValueError(f"unknown server {server!r}; "
+                         f"known: {sorted(SERVER_ALIASES)}") from None

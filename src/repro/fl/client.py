@@ -1,8 +1,11 @@
 """Client-side local computation (paper §II.C, Alg. 6/7 device side).
 
-``local_sgd`` runs H local SGD steps via ``lax.scan``; ``make_client_step``
-vmaps it over a stacked client axis. Model-agnostic: works with any
-``loss_fn(params, batch) -> (loss, metrics)``.
+``local_sgd`` is the reference client update: H local SGD steps via
+``lax.scan``. The single loop implementation lives in
+``core.algorithms.registry.sgd_steps`` — the same code every registry
+algorithm (FedAvg, FedProx, SCAFFOLD, ...) builds its client update from, so
+the engine and this reference can never drift apart. Model-agnostic: works
+with any ``loss_fn(params, batch) -> (loss, metrics)``.
 """
 from __future__ import annotations
 
@@ -11,36 +14,23 @@ from typing import Any, Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.algorithms.registry import sgd_steps
+
 PyTree = Any
 LossFn = Callable[[PyTree, Dict[str, jnp.ndarray]], Tuple[jnp.ndarray, Dict]]
 
 
 def local_sgd(loss_fn: LossFn, params: PyTree, batches: Dict[str, jnp.ndarray],
-              lr: float, momentum: float = 0.0
-              ) -> Tuple[PyTree, PyTree, jnp.ndarray]:
-    """H local steps (eqs. 32-35). ``batches`` leaves have leading dim H.
+              lr, momentum=0.0) -> Tuple[PyTree, PyTree, jnp.ndarray]:
+    """H local steps (eqs. 32-35). ``batches`` leaves have leading dim H;
+    ``lr``/``momentum`` may be traced (AlgoParams sweep axes).
 
     Returns (delta = theta_H - theta_0, final params, mean loss).
     """
-    grad_fn = jax.grad(lambda p, b: loss_fn(p, b)[0])
-    vel0 = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
-
-    def step(carry, batch):
-        p, vel = carry
-        g = grad_fn(p, batch)
-        loss = loss_fn(p, batch)[0]
-        vel = jax.tree.map(lambda v, gg: momentum * v + gg.astype(jnp.float32), vel, g)
-        p = jax.tree.map(lambda pp, v: (pp.astype(jnp.float32) - lr * v).astype(pp.dtype),
-                         p, vel)
-        return (p, vel), loss
-
-    (p_final, _), losses = jax.lax.scan(step, (params, vel0), batches)
-    delta = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
-                         p_final, params)
-    return delta, p_final, jnp.mean(losses)
+    return sgd_steps(loss_fn, params, batches, lr, momentum)
 
 
-def make_client_step(loss_fn: LossFn, lr: float, momentum: float = 0.0):
+def make_client_step(loss_fn: LossFn, lr, momentum=0.0):
     """vmap local_sgd over the leading client axis of ``batches``.
 
     Params are broadcast (same global model for all clients, Alg. 7 line 4).

@@ -10,6 +10,15 @@ An entire multi-round simulation compiles into **one XLA program**:
 * the scheduling policy is a pure-``jnp`` function from the registry
   ``scheduling.get_policy(name)`` — the *name* is static, so there is no
   Python branch in the compiled program;
+* the optimization **algorithm** is first-class
+  (``core/algorithms/registry.py``): ``get_algorithm(name)`` returns the
+  pure-jnp ``(client_update, server_update, init_algo_state)`` triple for
+  fedavg / fedavg_m / fedprox / scaffold / slowmo / fedadam / fedyogi; the
+  *name* is static while every hyperparameter (lr, momentum, prox_mu,
+  server_lr, ...) rides the traced :class:`AlgoParams` — so a learning-rate
+  grid vmaps instead of retracing. SCAFFOLD's per-client control variates
+  are a flat (N, D) matrix in the scan carry and its second uplink message
+  doubles the priced bits-on-the-wire;
 * ``run_simulation_scan`` wraps one round as a ``lax.scan`` body whose carry
   is ``(FLState, wall_clock, ages, update_norms, avg_snr)`` — the last being
   the per-device time-averaged-SNR EMA behind true proportional-fair;
@@ -24,9 +33,9 @@ An entire multi-round simulation compiles into **one XLA program**:
   *inside* the scan — so compression shortens rounds and interacts with the
   deadline/latency/update-aware policies;
 * ``run_sweep`` vmaps the scanned engine over seed x channel-config x
-  compression-parameter variants (policies and compressor names iterate in
-  Python — they are static arguments) in **one** compiled call per
-  (policy, compressor-name) pair;
+  compression-level x algorithm-hyperparameter variants (policy, compressor,
+  and algorithm *names* iterate in Python — they are static arguments) in
+  **one** compiled call per (policy, compressor-name, algorithm-name) tuple;
 * compiled engines are cached per static config (``_ENGINE_CACHE``, bounded
   FIFO) so repeated calls never re-trace; on the single-run path the initial
   params are donated (they alias the returned final params, letting XLA run
@@ -36,6 +45,8 @@ An entire multi-round simulation compiles into **one XLA program**:
 wrappers: ``engine="host"`` (or a host-only ``eval_fn`` with no attached
 ``eval_batch``) falls back to a per-round dispatch loop built from the *same*
 round step, which is also the baseline the benchmarks compare against.
+``SimConfig.lr`` / ``SimConfig.server`` are deprecated for one release and
+map onto ``algorithm`` + ``algo_params`` with a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
@@ -51,13 +62,15 @@ import numpy as np
 from jax import lax
 
 from repro.core import scheduling, wireless
+from repro.core.algorithms import registry as algo_registry
+from repro.core.algorithms.registry import (AlgoParams, algo_params,
+                                            stack_algo_params)
 from repro.core.compression import registry as compression
 from repro.core.compression.registry import CompressionParams
 from repro.core.hierarchy import (HFLConfig, hex_centers, assign_clusters_hex,
                                   broadcast_to_clients, inter_cluster_average,
                                   intra_cluster_average)
 from repro.fl import server as fl_server
-from repro.fl.client import local_sgd
 
 PyTree = Any
 
@@ -72,14 +85,17 @@ class SimConfig:
     n_scheduled: int = 8
     rounds: int = 100
     local_steps: int = 1
-    lr: float = 0.05
+    # first-class algorithm: a registry *name* (static, engine-cache key)
+    # plus traced hyperparameters (vmappable sweep axes — lr, momentum,
+    # prox_mu, server_lr, slowmo_beta, beta1, beta2, eps).
+    algorithm: str = "fedavg"
+    algo_params: Optional[AlgoParams] = None
     policy: str = "random"  # see scheduling.policy_names()
     seed: int = 0
-    model_bits: float = 1e6          # uplink payload per round
+    model_bits: float = 1e6          # uplink payload per round (per message)
     comp_latency_s: float = 0.05     # per-device compute time (mean)
     deadline_s: float = 5.0          # for the P4 policy
     age_alpha: float = 1.0
-    server: str = "avg"
     # first-class compression: a registry *name* (static, engine-cache key)
     # plus traced continuous parameters (vmappable in sweeps). The simulated
     # uplink payload is model_bits compressed at the registry operator's
@@ -87,8 +103,35 @@ class SimConfig:
     compression: str = "none"
     compression_params: Optional[CompressionParams] = None
     double_ef: bool = False          # downlink (PS-side) EF too (Alg. 3/6)
-    # deprecated: opaque callable, host engine only, no bit accounting
-    compressor: Optional[Callable] = None
+    # deprecated (one release): stringly-typed spellings, mapped onto
+    # algorithm/algo_params by __post_init__ with a DeprecationWarning
+    lr: Optional[float] = None
+    server: Optional[str] = None
+
+    def __post_init__(self):
+        if self.server is not None:
+            mapped = algo_registry.from_server_name(self.server)
+            warnings.warn(
+                f"SimConfig.server={self.server!r} is deprecated; use "
+                f"SimConfig.algorithm={mapped!r} (core.algorithms registry)",
+                DeprecationWarning, stacklevel=3)
+            if self.algorithm not in ("fedavg", mapped):
+                raise ValueError(
+                    f"SimConfig sets both algorithm={self.algorithm!r} and "
+                    f"the deprecated server={self.server!r} (-> {mapped!r}); "
+                    "drop SimConfig.server")
+            self.algorithm = mapped
+            self.server = None
+        if self.lr is not None:
+            warnings.warn(
+                "SimConfig.lr is deprecated; pass algo_params="
+                "algo_params(lr=...) — a traced AlgoParams field, so a "
+                "learning-rate sweep vmaps instead of retracing",
+                DeprecationWarning, stacklevel=3)
+            ap = (self.algo_params if self.algo_params is not None
+                  else algo_registry.default_algo_params())
+            self.algo_params = ap._replace(lr=jnp.float32(self.lr))
+            self.lr = None
 
 
 @dataclasses.dataclass
@@ -150,6 +193,12 @@ def _resolve_cparams(cfg: SimConfig, init_params) -> CompressionParams:
         fl_server.flat_dim(init_params))
 
 
+def _resolve_aparams(cfg: SimConfig) -> AlgoParams:
+    if cfg.algo_params is not None:
+        return cfg.algo_params
+    return algo_registry.default_algo_params()
+
+
 def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
                   has_eval: bool):
     """Shared round logic for both engines. Returns
@@ -158,33 +207,27 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
     n = cfg.n_devices
     pcfg = _policy_cfg(cfg, wcfg)
     policy_fn = scheduling.get_policy(cfg.policy)
+    algo = algo_registry.get_algorithm(cfg.algorithm)
     comp_active = cfg.compression != "none"
-    if comp_active and cfg.compressor is not None:
-        raise ValueError(
-            "SimConfig sets both compression="
-            f"{cfg.compression!r} (registry) and the deprecated opaque "
-            "compressor callable; drop SimConfig.compressor")
     compress_fn = (compression.get_compressor(cfg.compression)
                    if comp_active else None)
-    round_fn = functools.partial(
-        fl_server.fl_round, loss_fn=loss_fn, lr=cfg.lr,
-        compressor=cfg.compressor, server=cfg.server)
+    round_fn = functools.partial(fl_server.fl_round, loss_fn=loss_fn,
+                                 algo=algo)
 
     def init_carry(init_params):
-        # EF state rides in the scan carry (inside FLState): flat (N, D)
-        # message-space error on the registry path, per-leaf trees on the
-        # deprecated callable path.
+        # message-space state rides in the scan carry (inside FLState): the
+        # flat (N, D) EF matrix and, for control-variate algorithms, the
+        # flat (N, D) ctrl matrix + (D,) server control variate.
         state0 = fl_server.init_fl_state(
-            init_params, n,
-            use_ef=comp_active or cfg.compressor is not None,
-            double_ef=comp_active and cfg.double_ef,
-            flat_ef=comp_active, server=cfg.server)
+            init_params, n, algo=algo, use_ef=comp_active,
+            double_ef=comp_active and cfg.double_ef)
         state0 = dataclasses.replace(state0, round=jnp.int32(0))
         return (state0, jnp.float32(0.0), jnp.zeros(n, jnp.float32),
                 jnp.ones(n, jnp.float32), jnp.zeros(n, jnp.float32))
 
     def make_step(chan: wireless.ChannelParams, cparams: CompressionParams,
-                  dist: jnp.ndarray, k_rounds: jax.Array, eval_batch):
+                  aparams: AlgoParams, dist: jnp.ndarray, k_rounds: jax.Array,
+                  eval_batch):
         def step(carry, xs):
             state, clock, ages, norms, avg_snr = carry
             t, batches = xs
@@ -199,14 +242,16 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
             # uplink pricing: the simulated payload is model_bits scaled by
             # the compressor's bits-per-parameter rate on the actual d-dim
             # message (data-independent, so the policies can price the round
-            # *before* transmission). "none" sends exactly model_bits.
+            # *before* transmission), times the algorithm's messages-per-
+            # round (SCAFFOLD uplinks delta + ctrl delta -> 2x). "none"
+            # sends exactly model_bits per message.
             d_model = fl_server.flat_dim(state.params)
             payload_scale = cfg.model_bits / (32.0 * d_model)
             if comp_active:
                 bits_dev = payload_scale * compression.uplink_bits_jax(
-                    cfg.compression, cparams, d_model)
+                    cfg.compression, cparams, d_model) * algo.uplink_factor
             else:
-                bits_dev = jnp.float32(cfg.model_bits)
+                bits_dev = jnp.float32(cfg.model_bits * algo.uplink_factor)
             comm_lat = wireless.comm_latency_jax(bits_dev, rates)
             # per-device time-averaged SNR (PF's denominator), seeded with
             # the first observation
@@ -222,12 +267,14 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
 
             if comp_active:
                 state, metrics = round_fn(
-                    state, batches, participation=mask.astype(jnp.float32),
+                    state, batches, aparams=aparams,
+                    participation=mask.astype(jnp.float32),
                     compress_fn=compress_fn, cparams=cparams, key=kz)
                 ubits = payload_scale * metrics["uplink_bits"]
             else:
                 state, metrics = round_fn(
-                    state, batches, participation=mask.astype(jnp.float32))
+                    state, batches, aparams=aparams,
+                    participation=mask.astype(jnp.float32))
                 ubits = bits_dev * jnp.sum(mask)
 
             # wall-clock: synchronous round = slowest scheduled device; the
@@ -248,11 +295,12 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
                 loss, clock, mask, jnp.sum(mask), ubits, comm_s, comp_s)
         return step
 
-    def engine(key, chan, cparams, init_params, batches_all, eval_batch):
+    def engine(key, chan, cparams, aparams, init_params, batches_all,
+               eval_batch):
         ENGINE_STATS["traces"] += 1  # python side effect: runs at trace only
         k_pos, k_rounds = jax.random.split(key)
         dist = wireless.sample_positions_jax(k_pos, chan, n)
-        step = make_step(chan, cparams, dist, k_rounds, eval_batch)
+        step = make_step(chan, cparams, aparams, dist, k_rounds, eval_batch)
         ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
         (state, *_), outs = lax.scan(
             step, init_carry(init_params), (ts, batches_all))
@@ -263,17 +311,15 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
 
 def _engine_key(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
                 has_eval: bool, tag: str) -> Tuple:
-    # continuous channel + compression params are traced (ChannelParams /
-    # CompressionParams); everything the trace specializes on must appear
-    # here. Compression is keyed by its static *name* (+ EF topology), so two
-    # equal configs share one compiled engine — the legacy ``compressor``
-    # callable (None on the registry path) is identity-keyed and therefore
-    # defeats the cache; it is deprecated.
+    # continuous channel / compression / algorithm params are traced
+    # (ChannelParams / CompressionParams / AlgoParams); everything the trace
+    # specializes on must appear here. Compression and the algorithm are
+    # keyed by their static *names*, so two equal configs share one compiled
+    # engine regardless of hyperparameter values.
     return (tag, cfg.policy, cfg.rounds, cfg.n_devices, cfg.n_scheduled,
-            cfg.lr, cfg.model_bits, cfg.comp_latency_s, cfg.deadline_s,
-            cfg.age_alpha, cfg.server, cfg.compression, cfg.double_ef,
-            cfg.compressor, wcfg.n_subchannels, wcfg.bandwidth_hz, loss_fn,
-            has_eval)
+            cfg.model_bits, cfg.comp_latency_s, cfg.deadline_s,
+            cfg.age_alpha, cfg.algorithm, cfg.compression, cfg.double_ef,
+            wcfg.n_subchannels, wcfg.bandwidth_hz, loss_fn, has_eval)
 
 
 _ENGINE_CACHE: Dict[Tuple, Callable] = {}
@@ -300,11 +346,11 @@ def _get_engine(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
             # broadcast init_params can't alias the per-variant outputs, so
             # there is nothing useful to donate on the sweep path.
             return jax.jit(jax.vmap(engine,
-                                    in_axes=(0, 0, 0, None, None, None)))
+                                    in_axes=(0, 0, 0, 0, None, None, None)))
         # init_params aliases the returned final params exactly; the
         # wrappers below pass a fresh copy, so donating it is safe and
         # lets XLA run the whole scan in-place on the parameter buffers.
-        return jax.jit(engine, donate_argnums=(3,))
+        return jax.jit(engine, donate_argnums=(4,))
 
     return _cached(_ENGINE_CACHE,
                    _engine_key(cfg, wcfg, loss_fn, has_eval,
@@ -319,8 +365,9 @@ def _get_host_step(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
     def make():
         _, make_step, _ = _make_sim_fns(cfg, wcfg, loss_fn, has_eval)
 
-        def host_step(chan, cparams, dist, k_rounds, eval_batch, carry, xs):
-            return make_step(chan, cparams, dist, k_rounds,
+        def host_step(chan, cparams, aparams, dist, k_rounds, eval_batch,
+                      carry, xs):
+            return make_step(chan, cparams, aparams, dist, k_rounds,
                              eval_batch)(carry, xs)
 
         return jax.jit(host_step)
@@ -341,17 +388,14 @@ def run_simulation_scan(cfg: SimConfig, loss_fn, init_params: PyTree,
     (see :func:`stack_batches`). Returns (final params, stacked logs).
     """
     wcfg = wcfg or wireless.WirelessConfig(n_devices=cfg.n_devices)
-    if cfg.compressor is not None:
-        raise ValueError(
-            "the scan engine no longer accepts opaque callable compressors; "
-            "use SimConfig.compression (registry name) + compression_params, "
-            "or run_simulation(engine='host') for the deprecated callable")
     engine = _get_engine(cfg, wcfg, loss_fn, eval_batch is not None)
     key = jax.random.PRNGKey(cfg.seed)
     chan = wireless.channel_params(wcfg)
     cparams = _resolve_cparams(cfg, init_params)
+    aparams = _resolve_aparams(cfg)
     init_copy = jax.tree.map(jnp.array, init_params)  # donated to the engine
-    params, outs = engine(key, chan, cparams, init_copy, batches, eval_batch)
+    params, outs = engine(key, chan, cparams, aparams, init_copy, batches,
+                          eval_batch)
     losses, clocks, masks, nsched, ubits, comm_s, comp_s = jax.device_get(outs)
     return params, SimLogs(loss=losses, latency_s=clocks,
                            n_scheduled=nsched, participation=masks,
@@ -386,23 +430,12 @@ def run_simulation(cfg: SimConfig, loss_fn, init_params: PyTree,
     wcfg = wcfg or wireless.WirelessConfig(n_devices=cfg.n_devices)
     eval_batch = getattr(eval_fn, "eval_batch", None) if eval_fn else None
     opaque_eval = eval_fn is not None and eval_batch is None
-    if cfg.compressor is not None:
-        warnings.warn(
-            "SimConfig.compressor (opaque callable) is deprecated and now "
-            "runs on the host engine only: it cannot report bits-on-the-wire "
-            "and its identity defeats the compiled-engine cache. Use "
-            "SimConfig.compression='topk'/... + CompressionParams instead.",
-            DeprecationWarning, stacklevel=2)
-        if engine == "scan":
-            raise ValueError(
-                "engine='scan' does not support the deprecated callable "
-                "compressor; use SimConfig.compression (registry name)")
     if engine == "scan" and opaque_eval:
         raise ValueError(
             "engine='scan' needs an in-program eval: attach eval_fn."
             "eval_batch (logged loss becomes loss_fn(params, eval_batch)) "
             "or drop engine= to let the host loop serve the opaque eval_fn")
-    if engine == "host" or opaque_eval or cfg.compressor is not None:
+    if engine == "host" or opaque_eval:
         return _run_simulation_host(cfg, loss_fn, init_params,
                                     sample_client_batches, eval_fn,
                                     eval_batch, wcfg)
@@ -424,6 +457,7 @@ def _run_simulation_host(cfg: SimConfig, loss_fn, init_params: PyTree,
     k_pos, k_rounds = jax.random.split(key)
     chan = wireless.channel_params(wcfg)
     cparams = _resolve_cparams(cfg, init_params)
+    aparams = _resolve_aparams(cfg)
     dist = wireless.sample_positions_jax(k_pos, chan, cfg.n_devices)
 
     carry = init_carry(init_params)
@@ -431,7 +465,7 @@ def _run_simulation_host(cfg: SimConfig, loss_fn, init_params: PyTree,
     for t in range(cfg.rounds):
         bt = sample_client_batches(t, cfg.n_devices)
         carry, (loss, clock, mask, nsched, ubits, comm_s, comp_s) = step(
-            chan, cparams, dist, k_rounds, eval_batch, carry,
+            chan, cparams, aparams, dist, k_rounds, eval_batch, carry,
             (jnp.int32(t), bt))
         mask_np = np.asarray(mask)
         lv = float(loss)
@@ -443,8 +477,8 @@ def _run_simulation_host(cfg: SimConfig, loss_fn, init_params: PyTree,
 
 
 # ---------------------------------------------------------------------------
-# Fleet-scale sweeps: one vmapped call over seed x channel x compression
-# variants
+# Fleet-scale sweeps: one vmapped call over seed x channel x compression x
+# algorithm-hyperparameter variants
 # ---------------------------------------------------------------------------
 def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
               seeds: Sequence[int],
@@ -452,33 +486,43 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
               policies: Optional[Sequence[str]] = None,
               compressions: Optional[Sequence[str]] = None,
               cparams_grid: Optional[Sequence[CompressionParams]] = None,
+              algorithms: Optional[Sequence[str]] = None,
+              aparams_grid: Optional[Sequence[AlgoParams]] = None,
               eval_batch: Optional[Dict[str, jnp.ndarray]] = None
               ) -> Dict[Any, SimLogs]:
-    """Sweep policies x compressor names x seeds x channels x compression
-    levels.
+    """Sweep policies x compressor names x algorithm names x seeds x
+    channels x compression levels x algorithm hyperparameters.
 
-    Policies and compressor *names* iterate in Python (static engine
-    arguments); the seed x channel x :class:`CompressionParams` grid runs as
-    **one** vmapped+compiled call per (policy, compressor-name) pair — so a
-    whole compression-level study (e.g. top-k over many k) costs a single
-    trace. Returns ``{policy: SimLogs}`` — or ``{(policy, compression):
-    SimLogs}`` when ``compressions`` is given — with
-    ``(len(seeds)*len(wcfgs)*len(cparams_grid), rounds, ...)`` arrays,
-    variants ordered ``itertools.product(seeds, wcfgs, cparams_grid)``.
+    Policies, compressor names, and algorithm *names* iterate in Python
+    (static engine arguments); the seed x channel x
+    :class:`CompressionParams` x :class:`AlgoParams` grid runs as **one**
+    vmapped+compiled call per (policy, compressor-name, algorithm-name)
+    tuple — so a whole learning-rate study (e.g. fedprox over many lr)
+    costs a single trace. Returns ``{policy: SimLogs}``, with the key
+    growing to ``(policy, compression)`` / ``(policy, algorithm)`` /
+    ``(policy, compression, algorithm)`` when the ``compressions`` /
+    ``algorithms`` axes are given. Arrays have shape
+    ``(len(seeds)*len(wcfgs)*len(cparams_grid)*len(aparams_grid), rounds,
+    ...)``, variants ordered
+    ``itertools.product(seeds, wcfgs, cparams_grid, aparams_grid)``.
 
     All ``wcfgs`` must share the static fields (``n_devices``,
     ``n_subchannels``; additionally ``bandwidth_hz`` when sweeping the
     ``age`` policy, whose per-subchannel bandwidth is a static argument of
     the compiled engine); the remaining continuous fields (power, radius,
-    path loss, noise...) vary per variant through ``ChannelParams``, and
-    compression levels through ``CompressionParams``.
+    path loss, noise...) vary per variant through ``ChannelParams``,
+    compression levels through ``CompressionParams``, and algorithm
+    hyperparameters through ``AlgoParams``.
     """
     wcfgs = list(wcfgs) if wcfgs else [
         wireless.WirelessConfig(n_devices=cfg.n_devices)]
     policies = list(policies) if policies else [cfg.policy]
     comp_names = list(compressions) if compressions is not None else None
+    algo_names = list(algorithms) if algorithms is not None else None
     cparams_list = (list(cparams_grid) if cparams_grid
                     else [_resolve_cparams(cfg, init_params)])
+    aparams_list = (list(aparams_grid) if aparams_grid
+                    else [_resolve_aparams(cfg)])
     statics = (wcfgs[0].n_devices, wcfgs[0].n_subchannels)
     for w in wcfgs:
         if (w.n_devices, w.n_subchannels) != statics:
@@ -489,28 +533,36 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
                 "sweep wcfgs must share static bandwidth_hz for the 'age' "
                 "policy (its sub-band bandwidth compiles in statically)")
 
-    grid = list(itertools.product(seeds, wcfgs, cparams_list))
+    grid = list(itertools.product(seeds, wcfgs, cparams_list, aparams_list))
     if not grid:
         raise ValueError("run_sweep needs at least one "
-                         "(seed, wcfg, cparams) variant")
-    keys = jnp.stack([jax.random.PRNGKey(s) for s, _, _ in grid])
-    chans = wireless.stack_channel_params([w for _, w, _ in grid])
-    cps = compression.stack_compression_params([c for _, _, c in grid])
+                         "(seed, wcfg, cparams, aparams) variant")
+    keys = jnp.stack([jax.random.PRNGKey(s) for s, _, _, _ in grid])
+    chans = wireless.stack_channel_params([w for _, w, _, _ in grid])
+    cps = compression.stack_compression_params([c for _, _, c, _ in grid])
+    aps = stack_algo_params([a for _, _, _, a in grid])
     results: Dict[Any, SimLogs] = {}
     for pol in policies:
         for comp in (comp_names if comp_names is not None
                      else [cfg.compression]):
-            cfg_pc = dataclasses.replace(cfg, policy=pol, compression=comp)
-            engine = _get_engine(cfg_pc, wcfgs[0], loss_fn,
-                                 eval_batch is not None, vmapped=True)
-            _, outs = engine(keys, chans, cps, init_params, batches,
-                             eval_batch)
-            (losses, clocks, masks, nsched, ubits,
-             comm_s, comp_s) = jax.device_get(outs)
-            logs = SimLogs(loss=losses, latency_s=clocks, n_scheduled=nsched,
-                           participation=masks, uplink_bits=ubits,
-                           comm_s=comm_s, comp_s=comp_s)
-            results[pol if comp_names is None else (pol, comp)] = logs
+            for alg in (algo_names if algo_names is not None
+                        else [cfg.algorithm]):
+                cfg_v = dataclasses.replace(cfg, policy=pol, compression=comp,
+                                            algorithm=alg)
+                engine = _get_engine(cfg_v, wcfgs[0], loss_fn,
+                                     eval_batch is not None, vmapped=True)
+                _, outs = engine(keys, chans, cps, aps, init_params, batches,
+                                 eval_batch)
+                (losses, clocks, masks, nsched, ubits,
+                 comm_s, comp_s) = jax.device_get(outs)
+                logs = SimLogs(loss=losses, latency_s=clocks,
+                               n_scheduled=nsched, participation=masks,
+                               uplink_bits=ubits, comm_s=comm_s,
+                               comp_s=comp_s)
+                parts = ((pol,)
+                         + ((comp,) if comp_names is not None else ())
+                         + ((alg,) if algo_names is not None else ()))
+                results[parts[0] if len(parts) == 1 else parts] = logs
     return results
 
 
@@ -535,15 +587,29 @@ def _hfl_setup(cfg: SimConfig, hcfg: HFLConfig):
 
 def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig, loss_fn, has_eval: bool):
     """Shared HFL round logic for both paths. Returns ``(round_fn, engine)``:
-    ``round_fn`` is one full Alg. 9 round (local steps -> intra-cluster
-    average -> periodic inter-cluster sync -> broadcast) and ``engine`` scans
-    it — the host loop jits the *same* ``round_fn`` (no re-implementation).
+    ``round_fn`` is one full Alg. 9 round (algorithm client_update ->
+    intra-cluster average -> periodic inter-cluster sync -> broadcast) and
+    ``engine`` scans it — the host loop jits the *same* ``round_fn`` (no
+    re-implementation). The client side comes from the algorithm registry
+    (fedavg/fedavg_m/fedprox); Alg. 9 aggregates raw models, so server-side
+    optimizers and control-variate algorithms don't apply here.
     """
     h = hcfg.inter_cluster_period
+    algo = algo_registry.get_algorithm(cfg.algorithm)
+    if algo.name not in ("fedavg", "fedavg_m", "fedprox"):
+        raise ValueError(
+            f"run_hfl supports client-side algorithms only "
+            f"(fedavg/fedavg_m/fedprox), not {algo.name!r}: Alg. 9 "
+            "aggregates raw models, so server optimizers and control "
+            "variates have no place to live")
 
-    def round_fn(cluster_ids, cluster_sizes, client_params, t, batches):
+    def round_fn(cluster_ids, cluster_sizes, client_params, t, aparams,
+                 batches):
         def local_one(p, b):
-            _, p_new, loss = local_sgd(loss_fn, p, b, cfg.lr)
+            delta, _, loss = algo.client_update(loss_fn, aparams, p, b, None)
+            p_new = jax.tree.map(
+                lambda pp, d: (pp.astype(jnp.float32) + d).astype(pp.dtype),
+                p, delta)
             return p_new, loss
 
         def sync(cm):
@@ -560,14 +626,15 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig, loss_fn, has_eval: bool):
         client_params = broadcast_to_clients(cluster_models, cluster_ids)
         return client_params, cluster_models, jnp.mean(losses)
 
-    def engine(cluster_ids, cluster_sizes, client_params0, batches_all,
-               eval_batch):
+    def engine(cluster_ids, cluster_sizes, client_params0, aparams,
+               batches_all, eval_batch):
         ENGINE_STATS["traces"] += 1
 
         def step(client_params, xs):
             t, batches = xs
             client_params, cluster_models, loss = round_fn(
-                cluster_ids, cluster_sizes, client_params, t, batches)
+                cluster_ids, cluster_sizes, client_params, t, aparams,
+                batches)
             if has_eval:
                 loss = loss_fn(inter_cluster_average(cluster_models,
                                                      cluster_sizes),
@@ -603,14 +670,16 @@ def run_hfl(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
         lambda p: jnp.broadcast_to(p[None], (cfg.n_devices,) + p.shape),
         init_params)
     batches = stack_batches(sample_client_batches, cfg.rounds, cfg.n_devices)
+    aparams = _resolve_aparams(cfg)
 
-    key = ("hfl-engine", cfg.rounds, cfg.n_devices, cfg.lr, hcfg.n_clusters,
-           hcfg.inter_cluster_period, loss_fn, eval_batch is not None)
+    key = ("hfl-engine", cfg.rounds, cfg.n_devices, cfg.algorithm,
+           hcfg.n_clusters, hcfg.inter_cluster_period, loss_fn,
+           eval_batch is not None)
     engine = _cached(_HFL_CACHE, key,
                      lambda: jax.jit(_make_hfl_fns(
                          cfg, hcfg, loss_fn, eval_batch is not None)[1]))
-    _, losses = engine(cluster_ids, cluster_sizes, client_params0, batches,
-                       eval_batch)
+    _, losses = engine(cluster_ids, cluster_sizes, client_params0, aparams,
+                       batches, eval_batch)
     losses = jax.device_get(losses)
 
     hfl_lat, _ = hfl_round_latency_step(cfg, hcfg, _HFL_MU_RATE_BPS, 0)
@@ -627,8 +696,9 @@ def _run_hfl_host(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
     client_params = jax.tree.map(
         lambda p: jnp.broadcast_to(p[None], (cfg.n_devices,) + p.shape),
         init_params)
+    aparams = _resolve_aparams(cfg)
 
-    key = ("hfl-step", cfg.n_devices, cfg.lr, hcfg.n_clusters,
+    key = ("hfl-step", cfg.n_devices, cfg.algorithm, hcfg.n_clusters,
            hcfg.inter_cluster_period, loss_fn)
     step = _cached(_HFL_CACHE, key,
                    lambda: jax.jit(_make_hfl_fns(cfg, hcfg, loss_fn,
@@ -640,7 +710,8 @@ def _run_hfl_host(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
     for t in range(cfg.rounds):
         batches = sample_client_batches(t, cfg.n_devices)
         client_params, cluster_models, _ = step(
-            cluster_ids, cluster_sizes, client_params, jnp.int32(t), batches)
+            cluster_ids, cluster_sizes, client_params, jnp.int32(t), aparams,
+            batches)
         hfl_lat, _ = hfl_round_latency_step(cfg, hcfg, mu_rate, t)
         clock += hfl_lat
         # run_hfl only routes here for an opaque eval_fn; the no-eval case

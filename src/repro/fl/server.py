@@ -1,39 +1,40 @@
 """Server-side round logic (paper Algs. 1, 3, 6, 7).
 
-``fl_round`` composes the full Alg. 6 pipeline:
-  broadcast -> H local steps -> client EF-compress(delta) -> masked aggregate
-  -> optional downlink EF-compress -> server optimizer (avg | slowmo | adam).
+``fl_round`` composes the full Alg. 6 pipeline around an algorithm-registry
+triple (``core.algorithms.get_algorithm``):
 
-Two compression interfaces coexist for one release:
+  broadcast -> algorithm.client_update (H local steps; FedProx proximal
+  term / SCAFFOLD control correction live here) -> client EF-compress(delta)
+  -> masked aggregate -> optional downlink EF-compress ->
+  algorithm.server_update (avg | slowmo | fedadam | fedyogi | scaffold-c).
 
-* **registry path** (``compress_fn`` + ``cparams`` + ``key`` from
-  ``core.compression.get_compressor``): each client's whole delta pytree is
-  flattened into one (D,) uplink message, EF-corrected against a flat (N, D)
-  error state, compressed, and its bits-on-the-wire are reported in
-  ``metrics["uplink_bits"]`` so the wireless layer can price the round;
-* **legacy path** (``compressor`` opaque callable): per-leaf compression, no
-  bit accounting. Deprecated — see ``runtime.run_simulation``.
+All message-space state is flat: per-client EF error is an (N, D) matrix,
+downlink EF a (D,) vector, and SCAFFOLD's per-client control variates an
+(N, D) matrix (``FLState.ctrl``) with the server control variate as the
+algorithm state — exactly the scan-carry layout of the compiled engine.
+Compression comes from ``core.compression.get_compressor`` (registry names +
+traced :class:`CompressionParams`); the old opaque-callable compressor and
+the per-leaf EF branch were removed after their deprecation release.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+import warnings
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation as agg
-from repro.core.compression import error_feedback as ef
+from repro.core.algorithms import registry as algorithms
+from repro.core.algorithms.registry import Algorithm, AlgoParams
+from repro.core.compression import registry as compression_lib
 from repro.core.compression.registry import CompressionParams, CompressorFn
-from repro.fl.client import make_client_step
 
 PyTree = Any
-Compressor = Callable[[jnp.ndarray], Tuple[jnp.ndarray, Any]]
 
-
-def flat_dim(tree: PyTree) -> int:
-    """Total message dimension of a parameter/delta pytree."""
-    return sum(leaf.size for leaf in jax.tree.leaves(tree))
+# re-exported here for callers that sized payloads off the server module
+flat_dim = algorithms.flat_dim
 
 
 def _flatten_clients(tree: PyTree) -> Tuple[jnp.ndarray, Callable]:
@@ -60,70 +61,130 @@ def _flatten_clients(tree: PyTree) -> Tuple[jnp.ndarray, Callable]:
 @dataclasses.dataclass
 class FLState:
     params: PyTree
-    client_error: Optional[PyTree]    # stacked (N, ...) EF state, or None
-    server_error: Optional[PyTree]    # downlink EF state, or None
-    server_opt: Any                   # SlowMoState | ServerOptState | None
+    client_error: Optional[jnp.ndarray]   # (N, D) uplink EF state, or None
+    server_error: Optional[jnp.ndarray]   # (D,) downlink EF state, or None
+    server_opt: Any    # algorithm server state: SlowMoState | ServerOptState
+    #                    | (D,) SCAFFOLD server control variate | None
+    ctrl: Optional[jnp.ndarray] = None    # (N, D) SCAFFOLD client variates
     round: int = 0
 
 
-def init_fl_state(params: PyTree, n_clients: int, *, use_ef: bool = False,
-                  double_ef: bool = False, server: str = "avg",
-                  flat_ef: bool = False) -> FLState:
-    """``use_ef`` allocates client EF state; ``flat_ef`` stores it as the
-    (N, D) / (D,) message-space matrices of the registry compression path
-    instead of per-leaf pytrees (the scan carry shape of the engine)."""
-    client_error = None
-    if use_ef and flat_ef:
-        client_error = jnp.zeros((n_clients, flat_dim(params)), jnp.float32)
-    elif use_ef:
-        client_error = jax.tree.map(
-            lambda p: jnp.zeros((n_clients,) + p.shape, jnp.float32), params)
-    if double_ef and flat_ef:
-        server_error = jnp.zeros(flat_dim(params), jnp.float32)
-    elif double_ef:
-        server_error = ef.tree_init_error(params)
-    else:
-        server_error = None
-    if server == "slowmo":
-        opt = agg.init_slowmo(params)
-    elif server in ("adam", "yogi"):
-        opt = agg.init_server_opt(params)
-    else:
-        opt = None
-    return FLState(params, client_error, server_error, opt, 0)
+def init_fl_state(params: PyTree, n_clients: int, *,
+                  algo: Union[str, Algorithm] = "fedavg",
+                  use_ef: bool = False, double_ef: bool = False,
+                  server: Optional[str] = None) -> FLState:
+    """``use_ef`` allocates the flat (N, D) client EF matrix, ``double_ef``
+    the (D,) downlink EF vector; the algorithm decides its own server state
+    and whether an (N, D) control-variate matrix joins the carry."""
+    if server is not None:
+        warnings.warn(
+            "init_fl_state(server=...) is deprecated; pass algo="
+            "<algorithm registry name> instead", DeprecationWarning,
+            stacklevel=2)
+        algo = algorithms.from_server_name(server)
+    a = algorithms.get_algorithm(algo)
+    d = flat_dim(params)
+    client_error = (jnp.zeros((n_clients, d), jnp.float32) if use_ef else None)
+    server_error = jnp.zeros(d, jnp.float32) if double_ef else None
+    ctrl = jnp.zeros((n_clients, d), jnp.float32) if a.uses_ctrl else None
+    return FLState(params, client_error, server_error,
+                   a.init_algo_state(params), ctrl, 0)
+
+
+def _resolve_algo(algo, aparams, lr, server, server_lr, slowmo_beta, momentum
+                  ) -> Tuple[Algorithm, AlgoParams]:
+    """Resolve the algorithm + params, mapping the deprecated stringly-typed
+    kwargs (one release) onto the registry."""
+    legacy = {"lr": lr, "server": server, "server_lr": server_lr,
+              "slowmo_beta": slowmo_beta, "momentum": momentum}
+    if any(v is not None for v in legacy.values()):
+        given = sorted(k for k, v in legacy.items() if v is not None)
+        warnings.warn(
+            f"fl_round({'/'.join(given)}=...) is deprecated; pass "
+            "algo=<registry name> + aparams=AlgoParams(...) instead "
+            "(core.algorithms.get_algorithm)", DeprecationWarning,
+            stacklevel=3)
+        algo_name = algorithms.get_algorithm(algo).name
+        if server is not None:
+            mapped = algorithms.from_server_name(server)
+            if algo_name not in ("fedavg", mapped):
+                raise ValueError(
+                    f"fl_round sets both algo={algo_name!r} and the "
+                    f"deprecated server={server!r} (-> {mapped!r}); drop "
+                    "server=")
+            algo = algo_name = mapped
+        if momentum is not None:
+            # the old path always ran momentum-SGD clients; only the
+            # fedavg_m client update reads AlgoParams.momentum
+            if algo_name == "fedavg":
+                algo = "fedavg_m"
+            elif algo_name != "fedavg_m":
+                raise ValueError(
+                    f"fl_round(momentum=...) has no registry equivalent for "
+                    f"algo={algo_name!r} (its client update ignores "
+                    "momentum); compose your own Algorithm triple instead")
+        ap = aparams if aparams is not None else algorithms.default_algo_params()
+        updates = {k: jnp.float32(v) for k, v in legacy.items()
+                   if v is not None and k != "server"}
+        aparams = ap._replace(**updates)
+    a = algorithms.get_algorithm(algo)
+    return a, (aparams if aparams is not None
+               else algorithms.default_algo_params())
 
 
 def fl_round(state: FLState, stacked_batches: Dict[str, jnp.ndarray],
-             loss_fn, *, lr: float, participation: Optional[jnp.ndarray] = None,
-             compressor: Optional[Compressor] = None,
+             loss_fn, *, algo: Union[str, Algorithm] = "fedavg",
+             aparams: Optional[AlgoParams] = None,
+             participation: Optional[jnp.ndarray] = None,
              compress_fn: Optional[CompressorFn] = None,
              cparams: Optional[CompressionParams] = None,
              key: Optional[jax.Array] = None,
-             server: str = "avg",
-             server_lr: float = 1.0, slowmo_beta: float = 0.5,
-             momentum: float = 0.0) -> Tuple[FLState, Dict[str, jnp.ndarray]]:
+             lr=None, server=None, server_lr=None, slowmo_beta=None,
+             momentum=None) -> Tuple[FLState, Dict[str, jnp.ndarray]]:
     """One FL round. stacked_batches leaves: (N, H, ...).
 
-    Registry compression (``compress_fn``/``cparams``/``key``) flattens each
-    client's delta into one message, applies EF in message space, and adds
-    ``metrics["uplink_bits"]`` (participation-weighted total). ``compressor``
-    is the deprecated opaque-callable path.
+    The algorithm *name* is static; every hyperparameter rides the traced
+    ``aparams`` (a vmappable sweep axis). Registry compression
+    (``compress_fn``/``cparams``/``key``) flattens each client's delta into
+    one message, applies EF in message space, and reports the
+    participation-weighted ``metrics["uplink_bits"]`` — control-variate
+    algorithms uplink a second message-sized payload (the ctrl delta), which
+    is compressed and billed the same way. The old ``lr=``/``server=``/
+    ``server_lr=``/``slowmo_beta=``/``momentum=`` kwargs are deprecated and
+    map onto the registry for one release.
     """
-    client_step = make_client_step(loss_fn, lr, momentum)
-    deltas, losses = client_step(state.params, stacked_batches)
-    uplink_bits = None
+    a, ap = _resolve_algo(algo, aparams, lr, server, server_lr, slowmo_beta,
+                          momentum)
+
+    # --- client updates (vmapped over the client axis, Alg. 7 line 4) -----
+    if a.uses_ctrl:
+        c_tree = algorithms.unflatten_vec(state.server_opt, state.params)
+        ci_tree = algorithms.unflatten_rows(state.ctrl, state.params)
+
+        def one(p, b, ci):
+            return a.client_update(loss_fn, ap, p, b, (ci, c_tree))
+
+        deltas, ctrl_deltas, losses = jax.vmap(one, in_axes=(None, 0, 0))(
+            state.params, stacked_batches, ci_tree)
+        ctrl_flat, _ = _flatten_clients(ctrl_deltas)  # (N, D) message space
+    else:
+        def one(p, b):
+            return a.client_update(loss_fn, ap, p, b, None)
+
+        deltas, _, losses = jax.vmap(one, in_axes=(None, 0))(
+            state.params, stacked_batches)
+        ctrl_flat = None
 
     # --- client-side compression with error feedback (Alg. 6 lines 8-11) ---
     # the compressor is vmapped over the client axis: each device compresses
     # its *own* delta (per-client top-k masks, per-client scales). Every
     # client compresses (and accrues EF error) whether or not it is
     # scheduled; the participation mask gates aggregation only.
+    uplink_bits = None
     client_error = state.client_error
+    ctrl_wire = ctrl_flat  # what the server receives for the ctrl update
     if compress_fn is not None:
-        if compressor is not None:
-            raise ValueError("pass either compress_fn (registry) or "
-                             "compressor (legacy callable), not both")
-        k_up, k_down = jax.random.split(key)
+        k_up, k_down, k_ctrl = jax.random.split(key, 3)
         flat, unflatten = _flatten_clients(deltas)
         if client_error is not None:
             flat = flat + client_error
@@ -133,60 +194,58 @@ def fl_round(state: FLState, stacked_batches: Dict[str, jnp.ndarray],
         if client_error is not None:
             client_error = flat - comp
         deltas = unflatten(comp)
+        if ctrl_flat is not None:
+            # the control-variate delta is a second message on the same
+            # uplink: compressed with the same operator (no EF) and billed
+            keys_c = jax.random.split(k_ctrl, ctrl_flat.shape[0])
+            ctrl_wire, ctrl_bits = jax.vmap(compress_fn, in_axes=(None, 0, 0))(
+                cparams, keys_c, ctrl_flat)
+            bits = bits + ctrl_bits
         uplink_bits = (jnp.sum(bits) if participation is None
                        else jnp.sum(bits * participation))
-    elif compressor is not None:
-        comp_one = lambda x: compressor(x)[0]  # noqa: E731
-        if client_error is not None:
-            flat_d, treedef = jax.tree.flatten(deltas)
-            flat_e = jax.tree.leaves(client_error)
-            cs, es = [], []
-            for d, e in zip(flat_d, flat_e):
-                corrected = d.astype(jnp.float32) + e
-                c = jax.vmap(comp_one)(corrected)
-                cs.append(c)
-                es.append(corrected - c)
-            deltas = jax.tree.unflatten(treedef, cs)
-            client_error = jax.tree.unflatten(treedef, es)
-        else:
-            deltas = jax.tree.map(lambda d: jax.vmap(comp_one)(d), deltas)
 
     mean_delta = agg.fedavg(deltas, participation)
 
     # --- downlink (PS-side) EF compression (Alg. 6 lines 15-17) ---
     server_error = state.server_error
     if compress_fn is not None and server_error is not None:
-        stacked_md = jax.tree.map(lambda d: d[None], mean_delta)
-        flat_md, unflatten_md = _flatten_clients(stacked_md)
-        corrected = flat_md[0] + server_error
+        corrected = algorithms.flatten_vec(mean_delta) + server_error
         c, _ = compress_fn(cparams, k_down, corrected)
         server_error = corrected - c
-        mean_delta = jax.tree.map(lambda d: d[0], unflatten_md(c[None]))
-    elif compressor is not None and server_error is not None:
-        mean_delta, server_error = ef.tree_ef_compress(
-            compressor, mean_delta, server_error)
+        mean_delta = algorithms.unflatten_vec(c, mean_delta)
 
-    # --- server update ---
-    opt = state.server_opt
-    if server == "slowmo":
-        stacked = jax.tree.map(lambda d: d[None], mean_delta)
-        new_params, opt = agg.slowmo(state.params, stacked, opt,
-                                     inner_lr=lr, alpha=server_lr, beta=slowmo_beta)
-    elif server in ("adam", "yogi"):
-        stacked = jax.tree.map(lambda d: d[None], mean_delta)
-        new_params, opt = agg.fedadam(state.params, stacked, opt,
-                                      server_lr=server_lr, yogi=(server == "yogi"))
-    else:  # plain averaging: theta += mean_delta
-        new_params = jax.tree.map(
-            lambda p, d: (p.astype(jnp.float32) + server_lr * d).astype(p.dtype),
-            state.params, mean_delta)
+    # --- control-variate bookkeeping (SCAFFOLD) ---
+    # clients advance c_i by the *transmitted* (possibly compressed) ctrl
+    # delta — the same quantity the server integrates into c — so
+    # c = mean(c_i) stays consistent under lossy compression.
+    ctrl_aux = None
+    new_ctrl = state.ctrl
+    if a.uses_ctrl:
+        n = ctrl_wire.shape[0]
+        if participation is None:
+            part_frac = jnp.float32(1.0)
+            mean_ctrl_delta = jnp.mean(ctrl_wire, axis=0)
+            new_ctrl = state.ctrl + ctrl_wire
+        else:
+            part = participation.astype(jnp.float32)
+            nsched = jnp.sum(part)
+            part_frac = nsched / n
+            mean_ctrl_delta = (jnp.sum(ctrl_wire * part[:, None], axis=0)
+                               / jnp.maximum(nsched, 1.0))
+            # only scheduled clients advance their local control variate
+            new_ctrl = state.ctrl + ctrl_wire * part[:, None]
+        ctrl_aux = (mean_ctrl_delta, part_frac)
+
+    # --- server update (registry triple) ---
+    new_params, new_opt = a.server_update(ap, state.params, mean_delta,
+                                          state.server_opt, ctrl_aux)
 
     metrics = {"loss": jnp.mean(losses),
                "delta_norm": _global_norm(mean_delta)}
     if uplink_bits is not None:
         metrics["uplink_bits"] = uplink_bits
-    return FLState(new_params, client_error, server_error, opt,
-                   state.round + 1), metrics
+    return FLState(new_params, client_error, server_error, new_opt,
+                   new_ctrl, state.round + 1), metrics
 
 
 def _global_norm(tree: PyTree) -> jnp.ndarray:
@@ -198,16 +257,33 @@ def _global_norm(tree: PyTree) -> jnp.ndarray:
 # PSSGD (Alg. 1): one synchronous gradient-averaging step
 # ---------------------------------------------------------------------------
 def pssgd_round(params: PyTree, stacked_batches: Dict[str, jnp.ndarray],
-                loss_fn, *, lr: float,
-                compressor: Optional[Compressor] = None
+                loss_fn, *, lr: float, compression: str = "none",
+                cparams: Optional[CompressionParams] = None,
+                key: Optional[jax.Array] = None
                 ) -> Tuple[PyTree, jnp.ndarray]:
-    """theta <- theta - lr * mean_i g_i (eq. 6), optional compression."""
+    """theta <- theta - lr * mean_i g_i (eq. 6), with optional registry
+    compression of each client's flattened gradient message."""
     def one(p, batch):
         (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
         return g, loss
     grads, losses = jax.vmap(one, in_axes=(None, 0))(params, stacked_batches)
-    if compressor is not None:
-        grads = jax.tree.map(lambda g: compressor(g)[0], grads)
+    if compression != "none":
+        compress_fn = compression_lib.get_compressor(compression)
+        if cparams is None:
+            cparams = compression_lib.default_compression_params(
+                flat_dim(params))
+        if key is None:
+            # a silently fixed key would reuse the same dither every round,
+            # correlating the quantization error across steps
+            raise ValueError(
+                "pssgd_round needs key= when compression != 'none' "
+                "(stochastic compressors must see fresh randomness each "
+                "round)")
+        flat, unflatten = _flatten_clients(grads)
+        keys = jax.random.split(key, flat.shape[0])
+        comp, _ = jax.vmap(compress_fn, in_axes=(None, 0, 0))(
+            cparams, keys, flat)
+        grads = unflatten(comp)
     mean_g = agg.average_gradients(grads)
     new_params = jax.tree.map(
         lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),

@@ -17,6 +17,7 @@ from __future__ import annotations
 import argparse
 import functools
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +25,8 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import SHAPES, get_config
+from repro.core.algorithms import (algo_params, algorithm_names,
+                                   from_server_name)
 from repro.core.compression import compression_params, compressor_names
 from repro.data import (FederatedLoader, SyntheticLMDataset, batch_iterator,
                         dirichlet_partition)
@@ -95,10 +98,19 @@ def run_federated(args) -> None:
     params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
     d = flat_dim(params)
     comp_name, cparams = make_compression(args.compressor, d)
+    algorithm = args.algorithm
+    if args.server is not None:
+        algorithm = from_server_name(args.server)
+        warnings.warn(f"--server is deprecated; use --algorithm {algorithm}",
+                      DeprecationWarning, stacklevel=2)
+    aparams = algo_params(lr=args.lr, momentum=args.momentum,
+                          prox_mu=args.prox_mu, server_lr=args.server_lr,
+                          slowmo_beta=args.slowmo_beta)
     sim = fl_runtime.SimConfig(
         n_devices=args.n_devices, n_scheduled=args.n_scheduled,
-        rounds=args.rounds, local_steps=args.local_steps, lr=args.lr,
-        policy=args.policy, server=args.server,
+        rounds=args.rounds, local_steps=args.local_steps,
+        algorithm=algorithm, algo_params=aparams,
+        policy=args.policy,
         compression=comp_name, compression_params=cparams,
         model_bits=32.0 * d)
 
@@ -146,8 +158,16 @@ def main() -> None:
     ap.add_argument("--n-scheduled", type=int, default=8)
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--policy", default="random")
-    ap.add_argument("--server", default="avg",
-                    choices=["avg", "slowmo", "adam", "yogi"])
+    ap.add_argument("--algorithm", default="fedavg",
+                    choices=sorted(algorithm_names()),
+                    help="optimization algorithm (core.algorithms registry)")
+    ap.add_argument("--server", default=None,
+                    choices=["avg", "slowmo", "adam", "yogi"],
+                    help="deprecated: use --algorithm")
+    ap.add_argument("--server-lr", type=float, default=1.0)
+    ap.add_argument("--slowmo-beta", type=float, default=0.5)
+    ap.add_argument("--prox-mu", type=float, default=0.01)
+    ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--compressor", default="none",
                     choices=sorted(compressor_names()),
                     help="uplink compression (registry name; compressed "

@@ -1,0 +1,380 @@
+"""First-class algorithm registry (core/algorithms + engine integration):
+registry parity with the deprecated string-dispatch spellings, the
+server_lr threading regression, SCAFFOLD variance reduction and control-
+variate traffic pricing, and the no-retrace property of AlgoParams sweeps.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import make_linear_problem
+from repro.core.algorithms import algo_params, algorithm_names, get_algorithm
+from repro.core.compression import compression_params
+from repro.fl import runtime as rt
+from repro.fl import server as fls
+
+D = 16
+AP01 = rt.algo_params(lr=0.1)
+
+
+def _make_problem():
+    params, loss_fn, make_batches, _ = make_linear_problem(d=D)
+    return params, loss_fn, make_batches
+
+
+# ---------------------------------------------------------------------------
+# Registry surface
+# ---------------------------------------------------------------------------
+def test_registry_returns_triple_for_every_algorithm():
+    assert set(algorithm_names()) == {
+        "fedavg", "fedavg_m", "fedprox", "scaffold", "slowmo", "fedadam",
+        "fedyogi"}
+    for name in algorithm_names():
+        a = get_algorithm(name)
+        assert callable(a.client_update) and callable(a.server_update)
+        assert callable(a.init_algo_state)
+    assert get_algorithm("scaffold").uses_ctrl
+    assert get_algorithm("scaffold").uplink_factor == 2.0
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        get_algorithm("fedsgd_mystery")
+
+
+def test_algo_params_are_traced_not_static():
+    """Hyperparameters are jnp scalars (vmappable sweep axes), and the
+    engine key contains only the algorithm *name*."""
+    ap = algo_params(lr=0.3, prox_mu=0.7)
+    for leaf in ap:
+        assert isinstance(leaf, jnp.ndarray)
+    assert float(ap.lr) == pytest.approx(0.3)
+    assert float(ap.prox_mu) == pytest.approx(0.7)
+
+
+# ---------------------------------------------------------------------------
+# Parity: registry vs the deprecated stringly-typed spellings
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("server,algorithm", [
+    ("avg", "fedavg"), ("slowmo", "slowmo"), ("adam", "fedadam"),
+])
+def test_registry_matches_deprecated_string_dispatch(server, algorithm):
+    """`server=`/`lr=` spellings map onto the registry and bitwise-match the
+    first-class API on the host engine (and the host engine matches scan)."""
+    params0, loss_fn, make_batches = _make_problem()
+    with pytest.warns(DeprecationWarning):
+        old = rt.SimConfig(n_devices=8, n_scheduled=4, rounds=10, lr=0.1,
+                           server=server, seed=3)
+    new = rt.SimConfig(n_devices=8, n_scheduled=4, rounds=10, seed=3,
+                       algorithm=algorithm, algo_params=AP01)
+    lo = rt.run_simulation(old, loss_fn, params0, make_batches, engine="host")
+    ln = rt.run_simulation(new, loss_fn, params0, make_batches, engine="host")
+    np.testing.assert_array_equal([l.loss for l in lo], [l.loss for l in ln])
+    ls = rt.run_simulation(new, loss_fn, params0, make_batches, engine="scan")
+    np.testing.assert_allclose([l.loss for l in ln], [l.loss for l in ls],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fl_round_deprecated_kwargs_map():
+    """fl_round's old lr=/server=/server_lr=/slowmo_beta= kwargs warn and
+    bitwise-match the algo=/aparams= spelling."""
+    params0, loss_fn, make_batches = _make_problem()
+    batches = make_batches(0, 8)
+    state0 = fls.init_fl_state(params0, 8, algo="slowmo")
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        s_old, m_old = fls.fl_round(state0, batches, loss_fn, lr=0.1,
+                                    server="slowmo", server_lr=0.3,
+                                    slowmo_beta=0.7)
+    s_new, m_new = fls.fl_round(
+        state0, batches, loss_fn, algo="slowmo",
+        aparams=algo_params(lr=0.1, server_lr=0.3, slowmo_beta=0.7))
+    np.testing.assert_array_equal(np.asarray(s_old.params["w"]),
+                                  np.asarray(s_new.params["w"]))
+    np.testing.assert_array_equal(np.asarray(m_old["loss"]),
+                                  np.asarray(m_new["loss"]))
+
+
+def test_fl_round_deprecated_momentum_maps_to_fedavg_m():
+    """The old momentum= kwarg ran momentum-SGD clients; the shim must keep
+    that (via fedavg_m), not silently drop it into an ignored field."""
+    params0, loss_fn, make_batches = _make_problem()
+    batches = make_batches(0, 8)
+    state0 = fls.init_fl_state(params0, 8)
+    with pytest.warns(DeprecationWarning):
+        s_old, _ = fls.fl_round(state0, batches, loss_fn, lr=0.1,
+                                momentum=0.9)
+    s_new, _ = fls.fl_round(state0, batches, loss_fn, algo="fedavg_m",
+                            aparams=algo_params(lr=0.1, momentum=0.9))
+    np.testing.assert_array_equal(np.asarray(s_old.params["w"]),
+                                  np.asarray(s_new.params["w"]))
+    # no registry client update reads momentum for slowmo -> refuse rather
+    # than silently change training dynamics
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="momentum"):
+            fls.fl_round(fls.init_fl_state(params0, 8, algo="slowmo"),
+                         batches, loss_fn, algo="slowmo", momentum=0.9)
+
+
+def test_fl_round_rejects_conflicting_algo_and_server():
+    params0, loss_fn, make_batches = _make_problem()
+    batches = make_batches(0, 8)
+    state0 = fls.init_fl_state(params0, 8, algo="scaffold")
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="both"):
+            fls.fl_round(state0, batches, loss_fn, algo="scaffold",
+                         server="adam")
+
+
+def test_pssgd_round_requires_key_for_stochastic_compression():
+    params0, loss_fn, make_batches = _make_problem()
+    b1 = jax.tree.map(lambda v: v[:, 0], make_batches(0, 8))
+    with pytest.raises(ValueError, match="key"):
+        fls.pssgd_round(params0, b1, loss_fn, lr=0.1, compression="qsgd")
+
+
+# ---------------------------------------------------------------------------
+# The server_lr threading bug (satellite): run_simulation used to drop
+# server_lr/slowmo_beta before fl_round, so slowmo/adam ran at defaults
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("algorithm", ["slowmo", "fedadam"])
+def test_server_lr_threads_through_engine(algorithm):
+    params0, loss_fn, make_batches = _make_problem()
+    base = dict(n_devices=8, n_scheduled=4, rounds=8, seed=2,
+                algorithm=algorithm)
+    default = rt.run_simulation(
+        rt.SimConfig(algo_params=algo_params(lr=0.1), **base),
+        loss_fn, params0, make_batches)
+    tuned = rt.run_simulation(
+        rt.SimConfig(algo_params=algo_params(lr=0.1, server_lr=0.25), **base),
+        loss_fn, params0, make_batches)
+    assert [l.loss for l in default] != [l.loss for l in tuned]
+
+
+def test_slowmo_beta_threads_through_engine():
+    params0, loss_fn, make_batches = _make_problem()
+    base = dict(n_devices=8, n_scheduled=4, rounds=8, seed=2,
+                algorithm="slowmo")
+    a = rt.run_simulation(
+        rt.SimConfig(algo_params=algo_params(lr=0.1, slowmo_beta=0.5), **base),
+        loss_fn, params0, make_batches)
+    b = rt.run_simulation(
+        rt.SimConfig(algo_params=algo_params(lr=0.1, slowmo_beta=0.9), **base),
+        loss_fn, params0, make_batches)
+    assert [l.loss for l in a] != [l.loss for l in b]
+
+
+def test_prox_mu_threads_and_shrinks_drift():
+    """A strong proximal term pins the local iterates to the broadcast
+    model, so fedprox's aggregate delta norm shrinks well below fedavg's
+    over a multi-step local epoch."""
+    params0, loss_fn, make_batches, _ = make_linear_problem(d=D, h=8)
+    batches = make_batches(0, 8)
+    state0 = fls.init_fl_state(params0, 8)
+    _, m_avg = fls.fl_round(state0, batches, loss_fn, algo="fedavg",
+                            aparams=algo_params(lr=0.1))
+    _, m_prox = fls.fl_round(state0, batches, loss_fn, algo="fedprox",
+                             aparams=algo_params(lr=0.1, prox_mu=5.0))
+    assert float(m_prox["delta_norm"]) < 0.5 * float(m_avg["delta_norm"])
+
+
+# ---------------------------------------------------------------------------
+# Scan/host parity for the new algorithms (incl. ctrl state in the carry)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("algorithm", ["fedavg_m", "fedprox", "scaffold",
+                                       "fedyogi"])
+def test_scan_host_parity_new_algorithms(algorithm):
+    params0, loss_fn, make_batches = _make_problem()
+    cfg = rt.SimConfig(n_devices=8, n_scheduled=3, rounds=8, seed=5,
+                       algorithm=algorithm,
+                       algo_params=algo_params(lr=0.1, momentum=0.5,
+                                               server_lr=0.5),
+                       compression="topk",
+                       compression_params=compression_params(k=4),
+                       model_bits=32.0 * D)
+    scan_logs = rt.run_simulation(cfg, loss_fn, params0, make_batches,
+                                  engine="scan")
+    host_logs = rt.run_simulation(cfg, loss_fn, params0, make_batches,
+                                  engine="host")
+    for s, h in zip(scan_logs, host_logs):
+        np.testing.assert_array_equal(s.participation, h.participation)
+        np.testing.assert_allclose(s.loss, h.loss, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(s.uplink_bits, h.uplink_bits, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SCAFFOLD: control-variate traffic is priced, and variance shrinks
+# ---------------------------------------------------------------------------
+def test_scaffold_control_traffic_prices_uplink_and_latency():
+    """SCAFFOLD uplinks a second message-sized payload (the ctrl delta):
+    its logged uplink_bits double fedavg's and the rounds get slower under
+    identical schedules — with and without compression."""
+    params0, loss_fn, make_batches = _make_problem()
+    for comp in ("none", "topk"):
+        base = dict(n_devices=8, n_scheduled=3, rounds=6, seed=7,
+                    policy="random", compression=comp,
+                    compression_params=compression_params(k=4),
+                    model_bits=32.0 * D, algo_params=AP01)
+        fa = rt.run_simulation(rt.SimConfig(algorithm="fedavg", **base),
+                               loss_fn, params0, make_batches, engine="scan")
+        sc = rt.run_simulation(rt.SimConfig(algorithm="scaffold", **base),
+                               loss_fn, params0, make_batches, engine="scan")
+        for f, s in zip(fa, sc):
+            # random policy ignores rates -> identical schedules
+            np.testing.assert_array_equal(f.participation, s.participation)
+            np.testing.assert_allclose(s.uplink_bits, 2.0 * f.uplink_bits,
+                                       rtol=1e-5)
+            if f.n_scheduled:
+                assert s.comm_s > f.comm_s
+                assert s.latency_s > f.latency_s
+
+
+def _hetero_problem(d=6, n=8, h=4, b=8, shift=2.0, noise=0.01):
+    """Non-iid linear regression: client i's targets come from
+    w* + shift_i, so multi-step local SGD drifts toward client optima and
+    partial participation makes FedAvg's trajectory schedule-dependent."""
+    kw, ks = jax.random.split(jax.random.PRNGKey(0))
+    w_star = np.asarray(jax.random.normal(kw, (d,)))
+    shifts = np.asarray(jax.random.normal(ks, (n, d))) * shift
+
+    def make_batches(t, n_):
+        rng = np.random.default_rng(1000 + t)
+        x = rng.normal(size=(n_, h, b, d)).astype(np.float32)
+        w = w_star[None] + shifts[:n_]
+        y = np.einsum("nhbd,nd->nhb", x, w) + noise * rng.normal(
+            size=(n_, h, b))
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y.astype(np.float32))}
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    rng = np.random.default_rng(9)
+    xe = rng.normal(size=(n * 32, d)).astype(np.float32)
+    we = np.repeat(w_star[None] + shifts, 32, axis=0)
+    ye = np.einsum("bd,bd->b", xe, we).astype(np.float32)
+    eval_batch = {"x": jnp.asarray(xe), "y": jnp.asarray(ye)}
+    return {"w": jnp.zeros(d)}, loss_fn, make_batches, eval_batch
+
+
+@pytest.mark.slow
+def test_scaffold_variance_reduction_on_heterogeneous_problem():
+    """Across scheduling seeds on a heterogeneous problem with partial
+    participation, SCAFFOLD's control variates make the final global loss
+    far less dependent on *which* clients got scheduled than FedAvg's."""
+    params0, loss_fn, make_batches, eval_batch = _hetero_problem()
+    rounds, n = 60, 8
+    cfg = rt.SimConfig(n_devices=n, n_scheduled=2, rounds=rounds,
+                       policy="random")
+    batches = rt.stack_batches(make_batches, rounds, n)
+    out = rt.run_sweep(cfg, loss_fn, params0, batches, seeds=list(range(10)),
+                       algorithms=["fedavg", "scaffold"],
+                       aparams_grid=[algo_params(lr=0.05)],
+                       eval_batch=eval_batch)
+    fa = out[("random", "fedavg")].loss[:, -1]
+    sc = out[("random", "scaffold")].loss[:, -1]
+    assert np.isfinite(fa).all() and np.isfinite(sc).all()
+    assert np.var(sc) < 0.5 * np.var(fa), (np.var(sc), np.var(fa))
+
+
+# ---------------------------------------------------------------------------
+# No-retrace: hyperparameters are vmapped, never compiled in
+# ---------------------------------------------------------------------------
+def test_lr_sweep_compiles_exactly_one_engine():
+    """A 5-point learning-rate grid is one vmapped call on one compiled
+    engine — lr is a traced AlgoParams field, not a static config leaf."""
+    params0, loss_fn, make_batches = _make_problem()
+    rounds, n = 4, 8
+    cfg = rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds)
+    batches = rt.stack_batches(make_batches, rounds, n)
+    grid = [algo_params(lr=l) for l in (0.01, 0.02, 0.05, 0.1, 0.2)]
+    before = rt.ENGINE_STATS["traces"]
+    out = rt.run_sweep(cfg, loss_fn, params0, batches, seeds=[0],
+                       algorithms=["fedavg"], aparams_grid=grid)
+    assert rt.ENGINE_STATS["traces"] - before == 1
+    logs = out[("random", "fedavg")]
+    assert logs.loss.shape == (5, rounds)
+    # every lr row took a different trajectory
+    assert len({float(v) for v in logs.loss[:, -1]}) == 5
+
+
+def test_single_run_lr_change_reuses_engine():
+    """Two single runs differing only in AlgoParams share one engine."""
+    params0, loss_fn, make_batches = _make_problem()
+    base = dict(n_devices=8, n_scheduled=3, rounds=5, seed=1)
+    rt.run_simulation(rt.SimConfig(algo_params=algo_params(lr=0.1), **base),
+                      loss_fn, params0, make_batches)  # compile
+    before = rt.ENGINE_STATS["traces"]
+    a = rt.run_simulation(rt.SimConfig(algo_params=algo_params(lr=0.1), **base),
+                          loss_fn, params0, make_batches)
+    b = rt.run_simulation(rt.SimConfig(algo_params=algo_params(lr=0.03), **base),
+                          loss_fn, params0, make_batches)
+    assert rt.ENGINE_STATS["traces"] == before
+    assert [l.loss for l in a] != [l.loss for l in b]
+
+
+def test_acceptance_algorithm_sweep_one_trace_per_name_tuple():
+    """ISSUE acceptance: a >=5-point lr grid for fedavg, fedprox, and
+    scaffold runs with exactly one engine trace per (policy, compression,
+    algorithm) name tuple, and SCAFFOLD's control traffic shows up in
+    uplink_bits and round latency."""
+    params0, loss_fn, make_batches = _make_problem()
+    rounds, n = 4, 8
+    cfg = rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds,
+                       model_bits=32.0 * D)
+    batches = rt.stack_batches(make_batches, rounds, n)
+    lrs = (0.01, 0.02, 0.05, 0.1, 0.2)
+    algs = ["fedavg", "fedprox", "scaffold"]
+    comps = ["none", "topk"]
+    before = rt.ENGINE_STATS["traces"]
+    out = rt.run_sweep(cfg, loss_fn, params0, batches, seeds=[0],
+                       policies=["random"], compressions=comps,
+                       algorithms=algs,
+                       cparams_grid=[compression_params(k=4)],
+                       aparams_grid=[algo_params(lr=l) for l in lrs])
+    assert rt.ENGINE_STATS["traces"] - before == len(comps) * len(algs)
+    assert set(out) == {("random", c, a) for c in comps for a in algs}
+    for logs in out.values():
+        assert logs.loss.shape == (len(lrs), rounds)
+        assert np.isfinite(logs.loss).all()
+    # control-variate traffic: scaffold doubles every uplink bit...
+    for c in comps:
+        np.testing.assert_allclose(
+            out[("random", c, "scaffold")].uplink_bits,
+            2.0 * out[("random", c, "fedavg")].uplink_bits, rtol=1e-5)
+        # ...and the extra payload costs wall-clock under equal schedules
+        np.testing.assert_array_equal(
+            out[("random", c, "scaffold")].participation,
+            out[("random", c, "fedavg")].participation)
+        assert (out[("random", c, "scaffold")].latency_s
+                > out[("random", c, "fedavg")].latency_s).all()
+    # repeated identical sweep: fully cached
+    rt.run_sweep(cfg, loss_fn, params0, batches, seeds=[0],
+                 policies=["random"], compressions=comps, algorithms=algs,
+                 cparams_grid=[compression_params(k=4)],
+                 aparams_grid=[algo_params(lr=l) for l in lrs])
+    assert rt.ENGINE_STATS["traces"] - before == len(comps) * len(algs)
+
+
+# ---------------------------------------------------------------------------
+# State plumbing
+# ---------------------------------------------------------------------------
+def test_init_fl_state_allocates_algorithm_state():
+    params0, _, _ = _make_problem()
+    s = fls.init_fl_state(params0, 8)
+    assert s.server_opt is None and s.ctrl is None
+    s = fls.init_fl_state(params0, 8, algo="scaffold")
+    assert s.ctrl.shape == (8, D)
+    assert s.server_opt.shape == (D,)
+    s = fls.init_fl_state(params0, 8, algo="fedadam", use_ef=True)
+    assert s.client_error.shape == (8, D)
+    assert s.server_opt.m["w"].shape == (D,)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        s = fls.init_fl_state(params0, 8, server="slowmo")
+    assert s.server_opt.momentum["w"].shape == (D,)
+
+
+def test_hfl_rejects_server_side_algorithms():
+    params0, loss_fn, make_batches = _make_problem()
+    from repro.core.hierarchy import HFLConfig
+    with pytest.raises(ValueError, match="client-side"):
+        rt.run_hfl(rt.SimConfig(n_devices=6, rounds=2, algorithm="scaffold"),
+                   HFLConfig(n_clusters=2, inter_cluster_period=2),
+                   loss_fn, params0, make_batches)

@@ -10,10 +10,11 @@ import pytest
 
 from benchmarks.common import make_linear_problem
 from repro.core import scheduling, wireless
-from repro.core.compression import (compression_params, sparse_message_bits,
-                                    topk_sparsify)
+from repro.core.compression import compression_params, sparse_message_bits
 from repro.core.hierarchy import HFLConfig
 from repro.fl import runtime as rt
+
+AP01 = rt.algo_params(lr=0.1)
 
 
 def _make_problem():
@@ -26,7 +27,7 @@ def test_scan_host_parity(policy):
     """The lax.scan engine and the legacy host loop produce identical
     per-round masks and losses at a fixed seed."""
     params0, loss_fn, make_batches = _make_problem()
-    cfg = rt.SimConfig(n_devices=8, n_scheduled=3, rounds=12, lr=0.1,
+    cfg = rt.SimConfig(n_devices=8, n_scheduled=3, rounds=12, algo_params=AP01,
                        policy=policy, seed=5)
     scan_logs = rt.run_simulation(cfg, loss_fn, params0, make_batches,
                                   engine="scan")
@@ -44,7 +45,7 @@ def test_scan_host_parity(policy):
 def test_all_policies_run_in_scan_engine():
     params0, loss_fn, make_batches = _make_problem()
     for pol in scheduling.policy_names():
-        cfg = rt.SimConfig(n_devices=6, n_scheduled=3, rounds=3, lr=0.1,
+        cfg = rt.SimConfig(n_devices=6, n_scheduled=3, rounds=3, algo_params=AP01,
                            policy=pol)
         logs = rt.run_simulation(cfg, loss_fn, params0, make_batches)
         assert len(logs) == 3
@@ -56,7 +57,7 @@ def test_engine_cache_no_retrace():
     """Repeated runs with the same static config reuse the compiled engine:
     one trace, one compiled program — not one dispatch per round."""
     params0, loss_fn, make_batches = _make_problem()
-    cfg = rt.SimConfig(n_devices=8, n_scheduled=3, rounds=7, lr=0.1,
+    cfg = rt.SimConfig(n_devices=8, n_scheduled=3, rounds=7, algo_params=AP01,
                        policy="random", seed=11)
     rt.run_simulation(cfg, loss_fn, params0, make_batches)  # compile
     before = rt.ENGINE_STATS["traces"]
@@ -68,7 +69,7 @@ def test_engine_cache_no_retrace():
 def test_run_sweep_shapes_and_determinism():
     params0, loss_fn, make_batches = _make_problem()
     rounds, n = 5, 8
-    cfg = rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds, lr=0.1,
+    cfg = rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds, algo_params=AP01,
                        policy="random")
     batches = rt.stack_batches(make_batches, rounds, n)
     wcfgs = [wireless.WirelessConfig(n_devices=n),
@@ -100,7 +101,7 @@ def test_run_sweep_shapes_and_determinism():
 
     # sweep variant 0 (seed 0, default wcfg) matches the single-run engine
     _, single = rt.run_simulation_scan(
-        rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds, lr=0.1,
+        rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds, algo_params=AP01,
                      policy="random", seed=0),
         loss_fn, params0, batches, wcfg=wcfgs[0])
     np.testing.assert_array_equal(out["random"].participation[0],
@@ -111,7 +112,7 @@ def test_run_sweep_shapes_and_determinism():
 
 def test_sweep_rejects_mixed_static_fields():
     params0, loss_fn, make_batches = _make_problem()
-    cfg = rt.SimConfig(n_devices=8, n_scheduled=3, rounds=2, lr=0.1)
+    cfg = rt.SimConfig(n_devices=8, n_scheduled=3, rounds=2, algo_params=AP01)
     batches = rt.stack_batches(make_batches, 2, 8)
     with pytest.raises(ValueError, match="static"):
         rt.run_sweep(cfg, loss_fn, params0, batches, seeds=[0],
@@ -139,7 +140,7 @@ def test_eval_batch_inside_scan_matches_host_eval_fn():
         return float(loss_fn(p, eval_batch)[0])
     eval_fn.eval_batch = eval_batch
 
-    cfg = rt.SimConfig(n_devices=8, n_scheduled=3, rounds=6, lr=0.1,
+    cfg = rt.SimConfig(n_devices=8, n_scheduled=3, rounds=6, algo_params=AP01,
                        policy="round_robin", seed=2)
     compiled = rt.run_simulation(cfg, loss_fn, params0, make_batches,
                                  eval_fn=eval_fn)
@@ -162,7 +163,7 @@ def _cfg(compression="none", cparams=None, **kw):
     kw.setdefault("n_devices", 8)
     kw.setdefault("n_scheduled", 3)
     kw.setdefault("rounds", 8)
-    kw.setdefault("lr", 0.1)
+    kw.setdefault("algo_params", AP01)
     kw.setdefault("policy", "random")
     kw.setdefault("seed", 7)
     kw.setdefault("model_bits", 32.0 * D)  # payload == the actual d-dim
@@ -224,10 +225,10 @@ def test_compression_interacts_with_deadline_policy():
     base = dict(policy="deadline", deadline_s=1.0, n_scheduled=8,
                 model_bits=32.0 * D, comp_latency_s=1e-3, seed=1, rounds=6)
     comp = rt.run_simulation(
-        rt.SimConfig(n_devices=8, lr=0.1, compression="topk",
+        rt.SimConfig(n_devices=8, algo_params=AP01, compression="topk",
                      compression_params=compression_params(k=1), **base),
         loss_fn, params0, make_batches, wcfg=wcfg, engine="scan")
-    none = rt.run_simulation(rt.SimConfig(n_devices=8, lr=0.1, **base),
+    none = rt.run_simulation(rt.SimConfig(n_devices=8, algo_params=AP01, **base),
                              loss_fn, params0, make_batches, wcfg=wcfg,
                              engine="scan")
     assert sum(c.n_scheduled for c in comp) > sum(u.n_scheduled for u in none)
@@ -254,7 +255,7 @@ def test_sweep_compression_axis_one_trace_per_pair():
     (policy, compressor-name) pair."""
     params0, loss_fn, make_batches = _make_problem()
     rounds, n = 4, 8
-    cfg = rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds, lr=0.1,
+    cfg = rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds, algo_params=AP01,
                        model_bits=32.0 * D)
     batches = rt.stack_batches(make_batches, rounds, n)
     wcfgs = [wireless.WirelessConfig(n_devices=n),
@@ -287,24 +288,31 @@ def test_sweep_compression_axis_one_trace_per_pair():
     assert rt.ENGINE_STATS["traces"] - before == 2 * 3
 
 
-def test_legacy_callable_compressor_deprecated_host_only():
+def test_legacy_callable_compressor_removed():
+    """The deprecated opaque-callable compressor was removed after its one
+    deprecation release: SimConfig no longer has the field at all."""
+    with pytest.raises(TypeError):
+        rt.SimConfig(n_devices=8, compressor=lambda g: g)
+
+
+def test_deprecated_lr_server_fields_map_onto_registry():
+    """SimConfig.lr / SimConfig.server are accepted for one release: they
+    warn and map onto algorithm/algo_params, bitwise-matching the new API."""
     params0, loss_fn, make_batches = _make_problem()
-    comp = lambda g: topk_sparsify(g, max(1, g.size // 8))  # noqa: E731
-    cfg = rt.SimConfig(n_devices=8, n_scheduled=4, rounds=5, lr=0.1,
-                       compressor=comp)
-    with pytest.warns(DeprecationWarning, match="compressor"):
-        logs = rt.run_simulation(cfg, loss_fn, params0, make_batches)
-    assert len(logs) == 5
-    with pytest.warns(DeprecationWarning, match="compressor"):
-        with pytest.raises(ValueError, match="registry"):
-            rt.run_simulation(cfg, loss_fn, params0, make_batches,
-                              engine="scan")
-    # setting both interfaces is rejected up front, not mid-trace
-    both = rt.SimConfig(n_devices=8, n_scheduled=4, rounds=5, lr=0.1,
-                        compression="topk", compressor=comp)
-    with pytest.warns(DeprecationWarning, match="compressor"):
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        old = rt.SimConfig(n_devices=8, n_scheduled=3, rounds=5, lr=0.1,
+                           server="slowmo", seed=4)
+    assert old.algorithm == "slowmo"
+    assert old.lr is None and old.server is None
+    new = rt.SimConfig(n_devices=8, n_scheduled=3, rounds=5, seed=4,
+                       algorithm="slowmo", algo_params=AP01)
+    lo = rt.run_simulation(old, loss_fn, params0, make_batches)
+    ln = rt.run_simulation(new, loss_fn, params0, make_batches)
+    np.testing.assert_array_equal([l.loss for l in lo], [l.loss for l in ln])
+    # conflicting explicit algorithm + deprecated server is rejected
+    with pytest.warns(DeprecationWarning):
         with pytest.raises(ValueError, match="both"):
-            rt.run_simulation(both, loss_fn, params0, make_batches)
+            rt.SimConfig(algorithm="scaffold", server="adam")
 
 
 def test_hfl_scan_host_parity():
@@ -320,7 +328,7 @@ def test_hfl_scan_host_parity():
     def eval_host(p):  # opaque -> routes to the host loop
         return float(loss_fn(p, eval_batch)[0])
 
-    cfg = rt.SimConfig(n_devices=12, rounds=9, lr=0.1, seed=3)
+    cfg = rt.SimConfig(n_devices=12, rounds=9, algo_params=AP01, seed=3)
     hcfg = HFLConfig(n_clusters=3, inter_cluster_period=3)
     scan = rt.run_hfl(cfg, hcfg, loss_fn, params0, make_batches,
                       eval_fn=eval_scan)

@@ -1,5 +1,5 @@
 """Integration: FL converges on a learnable problem with every major
-configuration of the paper's toolbox."""
+configuration of the paper's toolbox (algorithm registry x compression)."""
 import functools
 
 import jax
@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.compression import qsgd, scaled_sign, topk_sparsify
+from repro.core.compression import compression_params, get_compressor
 from repro.core.hierarchy import HFLConfig
 from repro.core.topology import laplacian_mixing, ring, torus_2d
 from repro.fl import runtime as rt
@@ -17,42 +17,34 @@ from repro.fl.decentralized import consensus_step, gossip_round
 from benchmarks.common import make_linear_problem
 
 D = 24
+AP01 = rt.algo_params(lr=0.1)
 
 
 def _make_problem():
     return make_linear_problem(d=D)
 
 
-@pytest.mark.parametrize("compression,server", [
-    ("none", "avg"),
-    ("topk", "avg"),
-    ("scaled_sign", "avg"),
-    ("qsgd", "avg"),
+@pytest.mark.parametrize("compression,algorithm", [
+    ("none", "fedavg"),
+    ("topk", "fedavg"),
+    ("scaled_sign", "fedavg"),
+    ("qsgd", "fedavg"),
+    ("none", "fedavg_m"),
+    ("none", "fedprox"),
+    ("none", "scaffold"),
+    ("topk", "scaffold"),
     ("none", "slowmo"),
-    ("none", "adam"),
+    ("none", "fedadam"),
+    ("none", "fedyogi"),
 ])
-def test_fl_converges(compression, server):
+def test_fl_converges(compression, algorithm):
     params0, loss_fn, make_batches, _ = _make_problem()
-    cfg = rt.SimConfig(n_devices=8, n_scheduled=4, rounds=40, lr=0.1,
+    cfg = rt.SimConfig(n_devices=8, n_scheduled=4, rounds=40,
                        policy="random", compression=compression,
                        compression_params=rt.compression.compression_params(
                            k=D // 8, levels=16),
-                       server=server)
-    logs = rt.run_simulation(cfg, loss_fn, params0, make_batches)
-    assert logs[-1].loss < logs[0].loss * 0.3, (logs[0].loss, logs[-1].loss)
-
-
-@pytest.mark.filterwarnings("ignore::DeprecationWarning")
-@pytest.mark.parametrize("compressor", [
-    lambda g: topk_sparsify(g, max(1, g.size // 8)),
-    scaled_sign,
-    lambda g: qsgd(jax.random.PRNGKey(0), g, 16),
-])
-def test_fl_converges_legacy_callable(compressor):
-    """Deprecated opaque-callable path (host engine) still converges."""
-    params0, loss_fn, make_batches, _ = _make_problem()
-    cfg = rt.SimConfig(n_devices=8, n_scheduled=4, rounds=40, lr=0.1,
-                       policy="random", compressor=compressor)
+                       algorithm=algorithm,
+                       algo_params=rt.algo_params(lr=0.1, momentum=0.5))
     logs = rt.run_simulation(cfg, loss_fn, params0, make_batches)
     assert logs[-1].loss < logs[0].loss * 0.3, (logs[0].loss, logs[-1].loss)
 
@@ -67,20 +59,38 @@ def test_pssgd_round():
     assert float(jnp.linalg.norm(params["w"] - w_star)) < 0.5
 
 
+def test_pssgd_round_registry_compression():
+    """pssgd_round's compression now goes through the registry (name +
+    CompressionParams), not an opaque callable — and still converges."""
+    params0, loss_fn, make_batches, w_star = _make_problem()
+    params = params0
+    for t in range(60):
+        b = make_batches(t, 8)
+        b1 = jax.tree.map(lambda v: v[:, 0], b)
+        params, loss = fls.pssgd_round(
+            params, b1, loss_fn, lr=0.1, compression="topk",
+            cparams=compression_params(k=D // 2),
+            key=jax.random.PRNGKey(t))
+    assert float(jnp.linalg.norm(params["w"] - w_star)) < 0.8
+
+
 def test_double_ef_round():
-    """Alg. 3 uplink+downlink EF: still converges."""
+    """Alg. 3 uplink+downlink EF on the registry path: still converges."""
     params0, loss_fn, make_batches, _ = _make_problem()
-    comp = lambda g: topk_sparsify(g, max(1, g.size // 8))  # noqa: E731
     state = fls.init_fl_state(params0, 8, use_ef=True, double_ef=True)
     round_fn = jax.jit(functools.partial(
-        fls.fl_round, loss_fn=loss_fn, lr=0.1, compressor=comp))
+        fls.fl_round, loss_fn=loss_fn, algo="fedavg", aparams=AP01,
+        compress_fn=get_compressor("topk"),
+        cparams=compression_params(k=max(1, D // 8))))
     first = last = None
     for t in range(40):
-        state, m = round_fn(state, make_batches(t, 8))
+        state, m = round_fn(state, make_batches(t, 8),
+                            key=jax.random.PRNGKey(t))
         if first is None:
             first = float(m["loss"])
         last = float(m["loss"])
     assert last < first * 0.3
+    assert float(m["uplink_bits"]) > 0
 
 
 def test_decentralized_matches_centralized_limit():
@@ -111,7 +121,7 @@ def test_consensus_step_preserves_mean():
 
 def test_hfl_converges_and_tracks_fl():
     params0, loss_fn, make_batches, _ = _make_problem()
-    cfg = rt.SimConfig(n_devices=12, rounds=30, lr=0.1)
+    cfg = rt.SimConfig(n_devices=12, rounds=30, algo_params=AP01)
     logs = rt.run_hfl(cfg, HFLConfig(n_clusters=3, inter_cluster_period=3),
                       loss_fn, params0, make_batches)
     assert logs[-1].loss < logs[0].loss * 0.3
@@ -122,8 +132,8 @@ def test_scheduling_policies_all_run():
     from repro.core.scheduling import policy_names
     params0, loss_fn, make_batches, _ = _make_problem()
     for pol in policy_names():
-        cfg = rt.SimConfig(n_devices=6, n_scheduled=3, rounds=3, lr=0.1,
-                           policy=pol)
+        cfg = rt.SimConfig(n_devices=6, n_scheduled=3, rounds=3,
+                           algo_params=AP01, policy=pol)
         logs = rt.run_simulation(cfg, loss_fn, params0, make_batches,
                                  engine="host")
         assert len(logs) == 3
