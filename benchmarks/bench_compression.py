@@ -55,20 +55,25 @@ def main() -> None:
         logs = out[(cfg.policy, name)]
         clock, loss = logs.latency_s[0], logs.loss[0]
         bpp = float(logs.uplink_bits[0, 0]) / logs.n_scheduled[0, 0] / d
-        emit(f"compression.{name}.final_loss", 0.0, f"{loss[-1]:.4f}")
-        emit(f"compression.{name}.wallclock_s", 0.0, f"{clock[-1]:.1f}")
-        emit(f"compression.{name}.bits_per_param", 0.0, f"{bpp:.3f}")
+        emit(f"compression.{name}.final_loss", 0.0, f"{loss[-1]:.4f}",
+             value=float(loss[-1]))
+        emit(f"compression.{name}.wallclock_s", 0.0, f"{clock[-1]:.1f}",
+             value=float(clock[-1]))
+        emit(f"compression.{name}.bits_per_param", 0.0, f"{bpp:.3f}",
+             value=bpp)
         emit(f"compression.{name}.uplink_reduction", 0.0,
-             f"{32.0 / max(bpp, 1e-9):.1f}x")
+             f"{32.0 / max(bpp, 1e-9):.1f}x", value=32.0 / max(bpp, 1e-9))
         # the tradeoff point: loss reached within the shared time budget
+        loss_at_t = float(np.interp(t_budget, clock, loss))
         emit(f"compression.{name}.loss_at_{t_budget:.0f}s", 0.0,
-             f"{np.interp(t_budget, clock, loss):.4f}")
+             f"{loss_at_t:.4f}", value=loss_at_t)
 
     # Alg. 4 coding vs naive index coding
     for phi in (0.01, 0.001):
         nnz = int(D_REF * phi)
         gain = naive_sparse_bits(D_REF, nnz) / sparse_message_bits(D_REF, nnz)
-        emit(f"coding.alg4_vs_naive_phi{phi}", 0.0, f"{gain:.2f}x")
+        emit(f"coding.alg4_vs_naive_phi{phi}", 0.0, f"{gain:.2f}x",
+             value=gain)
     emit("compression.us_per_round", us, "timing")
 
 

@@ -22,11 +22,13 @@ def regime(gamma_db: float, tag: str) -> None:
     t_rs = w.rounds_required(u_rs)
     t_rr = w.rounds_required_rr(u_rr, K, N)
     t_pf = w.rounds_required(u_pf)
-    emit(f"rsrrpf.{tag}.U_rs", 0.0, f"{u_rs:.4f}")
-    emit(f"rsrrpf.{tag}.U_rr_scheduled", 0.0, f"{u_rr:.4f}")
-    emit(f"rsrrpf.{tag}.U_pf", 0.0, f"{u_pf:.4f}")
-    emit(f"rsrrpf.{tag}.T_pf_over_T_rr", 0.0, f"{t_pf / t_rr:.3f}")
-    emit(f"rsrrpf.{tag}.T_pf_over_T_rs", 0.0, f"{t_pf / t_rs:.3f}")
+    emit(f"rsrrpf.{tag}.U_rs", 0.0, f"{u_rs:.4f}", value=u_rs)
+    emit(f"rsrrpf.{tag}.U_rr_scheduled", 0.0, f"{u_rr:.4f}", value=u_rr)
+    emit(f"rsrrpf.{tag}.U_pf", 0.0, f"{u_pf:.4f}", value=u_pf)
+    emit(f"rsrrpf.{tag}.T_pf_over_T_rr", 0.0, f"{t_pf / t_rr:.3f}",
+         value=t_pf / t_rr)
+    emit(f"rsrrpf.{tag}.T_pf_over_T_rs", 0.0, f"{t_pf / t_rs:.3f}",
+         value=t_pf / t_rs)
 
 
 def main() -> None:

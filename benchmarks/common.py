@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.data import SyntheticLMDataset, dirichlet_partition
 
-ROWS = []
+ROWS = []  # structured (name, us_per_call, value, csv_row) tuples
 
 # --fast (benchmarks/run.py): cap round counts for smoke runs
 FAST = False
@@ -29,9 +29,18 @@ def bench_rounds(n: int) -> int:
     return min(n, FAST_ROUNDS) if FAST else n
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
+def emit(name: str, us_per_call: float, derived: str,
+         value: float = None) -> None:
+    """Record one benchmark row.
+
+    ``us_per_call`` is the timing signal; ``value`` is the recorded *metric*
+    for non-timing rows (a final loss, a speedup, ...). ``benchmarks.run``
+    writes ``value`` when given, else ``us_per_call`` (timing rows) — never
+    a module-level timing number under a metric key, which is how every
+    ``fig1.*`` entry once ended up holding one identical value.
+    """
     row = f"{name},{us_per_call:.1f},{derived}"
-    ROWS.append(row)
+    ROWS.append((name, us_per_call, value, row))
     print(row)
 
 

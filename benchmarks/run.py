@@ -32,11 +32,18 @@ MODULES = [
 
 
 def write_json(path: str) -> None:
+    """Write the machine-readable table from ``common.ROWS``.
+
+    Metric rows record their actual per-metric ``value`` (final losses,
+    speedups, ...); timing rows record ``us_per_call``. Rows with neither a
+    value nor a positive timing (string-valued deriveds) are skipped — they
+    carry no numeric signal.
+    """
     table = {}
-    for row in common.ROWS:
-        name, us, _ = row.split(",", 2)
-        # derived-only rows emit us_per_call=0; they carry no timing signal
-        if float(us) > 0:
+    for name, us, value, _ in common.ROWS:
+        if value is not None:
+            table[name] = float(value)
+        elif us > 0:
             table[name] = float(us)
     with open(path, "w") as f:
         json.dump(table, f, indent=2, sort_keys=True)

@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""CI benchmark-regression gate.
+
+Diffs a freshly generated ``--fast`` smoke table (``benchmarks.run --fast
+--out <new>``) against the committed baseline
+(``benchmarks/BENCH_engine_fast.baseline.json`` — the default smoke output
+path ``BENCH_engine_fast.json`` stays git-ignored so local smoke runs never
+dirty the tree) and exits non-zero when any *gated* metric regresses by
+more than the tolerance. Gated keys default to ``engine.scan_us_per_round`` and every
+``algorithms.*`` entry — the timing rows where a regression means the
+compiled engine got slower, not that a loss curve wiggled.
+
+The default tolerance is 2x: shared CI runners are noisy, so the gate only
+trips on step-change regressions (an accidental retrace per round, a host
+sync inside the scan, ...), not on scheduler jitter. Refreshing the
+baseline intentionally = rerun ``python -m benchmarks.run --fast --out
+benchmarks/BENCH_engine_fast.baseline.json`` and commit the diff (see
+benchmarks/README.md).
+
+Escape hatch: a commit message containing ``[bench-skip]`` skips the gate
+(for known-slow refactors that land with a baseline refresh). On
+pull_request CI events the head commit message is not in the event payload,
+so put ``[bench-skip]`` in the PR *title* instead — the workflow feeds it
+through ``--commit-message`` (the PR body is deliberately not scanned).
+
+Usage (CI)::
+
+    python -m benchmarks.run --fast --out /tmp/bench_new.json
+    python scripts/check_bench.py --new /tmp/bench_new.json
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import subprocess
+import sys
+from typing import Dict, List, Sequence, Tuple
+
+DEFAULT_GATED = ("engine.scan_us_per_round", "algorithms.*")
+SKIP_TOKEN = "[bench-skip]"
+
+
+def compare(baseline: Dict[str, float], new: Dict[str, float],
+            tolerance: float, patterns: Sequence[str] = DEFAULT_GATED
+            ) -> Tuple[List[str], List[str]]:
+    """Returns ``(failures, notes)``: failures are gated metrics where
+    ``new > tolerance * baseline``; notes cover skipped/missing keys."""
+    failures: List[str] = []
+    notes: List[str] = []
+    for key in sorted(baseline):
+        if not any(fnmatch.fnmatch(key, p) for p in patterns):
+            continue
+        base = baseline[key]
+        if key not in new:
+            notes.append(f"gated key {key!r} missing from the new table "
+                         "(module failed or was renamed) — not gated")
+            continue
+        if base <= 0:
+            notes.append(f"gated key {key!r} has non-positive baseline "
+                         f"{base}; skipping")
+            continue
+        ratio = new[key] / base
+        if ratio > tolerance:
+            failures.append(
+                f"{key}: {new[key]:.1f} vs baseline {base:.1f} "
+                f"({ratio:.2f}x > {tolerance:.2f}x tolerance)")
+        else:
+            notes.append(f"{key}: {ratio:.2f}x (ok)")
+    for key in sorted(new):
+        if key in baseline or not any(fnmatch.fnmatch(key, p)
+                                      for p in patterns):
+            continue
+        notes.append(f"new gated key {key!r} has no baseline entry — "
+                     "refresh the baseline to start gating it")
+    return failures, notes
+
+
+def _head_commit_message() -> str:
+    try:
+        return subprocess.run(["git", "log", "-1", "--format=%B"],
+                              capture_output=True, text=True,
+                              check=True).stdout
+    except Exception:  # noqa: BLE001 — outside a repo: no escape hatch
+        return ""
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline",
+                    default="benchmarks/BENCH_engine_fast.baseline.json",
+                    help="committed baseline table")
+    ap.add_argument("--new", default="/tmp/bench_new.json",
+                    help="freshly generated --fast table")
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="max allowed new/baseline ratio on gated metrics "
+                         "(default 2.0: noise-tolerant on shared runners)")
+    ap.add_argument("--gate", action="append", default=None,
+                    help="fnmatch pattern for gated keys (repeatable; "
+                         f"default: {', '.join(DEFAULT_GATED)})")
+    ap.add_argument("--commit-message", default=None,
+                    help="commit message to scan for the [bench-skip] "
+                         "escape hatch (default: git log -1)")
+    args = ap.parse_args(argv)
+
+    msg = (args.commit_message if args.commit_message is not None
+           else _head_commit_message())
+    if SKIP_TOKEN in msg:
+        print(f"check_bench: {SKIP_TOKEN} in commit message; skipping gate")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+
+    patterns = args.gate if args.gate else list(DEFAULT_GATED)
+    failures, notes = compare(baseline, new, args.tolerance, patterns)
+    for note in notes:
+        print(f"check_bench: {note}")
+    if failures:
+        print(f"check_bench: {len(failures)} benchmark regression(s) beyond "
+              f"{args.tolerance:.2f}x:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  REGRESSION {f_}", file=sys.stderr)
+        print("  (intentional? refresh benchmarks/BENCH_engine_fast."
+              f"baseline.json or commit with {SKIP_TOKEN})", file=sys.stderr)
+        return 1
+    print("check_bench: all gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

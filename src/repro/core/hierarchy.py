@@ -23,11 +23,19 @@ PyTree = Any
 class HFLConfig:
     n_clusters: int = 7
     inter_cluster_period: int = 4        # H in Alg. 9
+    # --- wireless-aware engine (fl/runtime.py run_hfl default path) -------
+    # Devices talk to their nearest SBS over the fading channel layer
+    # (per-cluster ChannelParams -> snr/shannon_rate/comm_latency); the
+    # SBS<->MBS backhaul is a wired fronthaul at a fixed rate.
+    backhaul_rate_bps: float = 1e9       # SBS->MBS fronthaul (per SBS link)
+    deploy_radius_m: float = 750.0       # device deployment disk radius
+    sbs_pitch_m: float = 500.0           # hex SBS grid pitch
+    # --- legacy analytic latency model (hfl_round_latency, Table I) -------
     fronthaul_speedup: float = 100.0     # MBS<->SBS vs MU<->SBS link speed
     uplink_sparsity: float = 0.01        # MU->SBS (99% sparsification)
     downlink_sparsity: float = 0.10      # SBS->MU
     sbs_up_sparsity: float = 0.10        # SBS->MBS
-    sbs_down_sparsity: float = 0.10      # MBS->SBS
+    sbs_down_sparsity: float = 0.10      # MBS<->SBS
     mbs_rate_penalty: float = 6.0        # MU<->MBS rate is this much worse
                                          # than MU<->SBS (distance/path loss)
 
@@ -41,11 +49,46 @@ def assign_clusters_hex(positions_xy: np.ndarray, centers_xy: np.ndarray
 
 def hex_centers(n_clusters: int = 7, pitch_m: float = 500.0) -> np.ndarray:
     """Center cell + 6 neighbours (the chapter's 7-hex layout)."""
+    if not 1 <= n_clusters <= 7:
+        raise ValueError(
+            f"hex_centers supports the chapter's 7-hex layout (center + 6 "
+            f"neighbours); n_clusters={n_clusters} would duplicate center "
+            "positions (the angle wraps after 6 neighbours), leaving "
+            "permanently empty clusters")
     pts = [(0.0, 0.0)]
     for k in range(n_clusters - 1):
         ang = 2 * np.pi * k / 6
         pts.append((pitch_m * np.cos(ang), pitch_m * np.sin(ang)))
     return np.asarray(pts[:n_clusters])
+
+
+def hfl_geometry_jax(key: jax.Array, hcfg: HFLConfig, n_devices: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                jnp.ndarray]:
+    """Device deployment for the wireless-aware HFL engine (traceable).
+
+    Samples ``n_devices`` uniformly in the deployment disk, assigns each to
+    its nearest SBS on the hex grid, and returns
+
+    ``(cluster_ids (N,) int32, dist_to_sbs (N,) m, member (L, N) bool,
+    cluster_sizes (L,) float32)``
+
+    — all jnp, so the whole setup lives inside the compiled engine and a
+    seed sweep re-deploys per variant under ``vmap``.
+    """
+    centers = jnp.asarray(hex_centers(hcfg.n_clusters, hcfg.sbs_pitch_m),
+                          jnp.float32)
+    k_r, k_t = jax.random.split(key)
+    theta = jax.random.uniform(k_t, (n_devices,)) * (2.0 * jnp.pi)
+    r = hcfg.deploy_radius_m * jnp.sqrt(jax.random.uniform(k_r, (n_devices,)))
+    pos = jnp.stack([r * jnp.cos(theta), r * jnp.sin(theta)], axis=-1)
+    d = jnp.linalg.norm(pos[:, None, :] - centers[None, :, :], axis=-1)
+    cluster_ids = jnp.argmin(d, axis=1).astype(jnp.int32)
+    dist_to_sbs = jnp.maximum(jnp.min(d, axis=1), 1.0)
+    member = jax.nn.one_hot(cluster_ids, hcfg.n_clusters,
+                            dtype=jnp.float32).T.astype(bool)      # (L, N)
+    cluster_sizes = jnp.sum(member.astype(jnp.float32), axis=1)    # (L,)
+    return cluster_ids, dist_to_sbs, member, cluster_sizes
 
 
 # ---------------------------------------------------------------------------

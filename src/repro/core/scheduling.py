@@ -236,9 +236,13 @@ class PolicyConfig:
 PolicyFn = Callable[[PolicyConfig, RoundState], jnp.ndarray]
 
 
-def _topk_mask_jax(score: jnp.ndarray, k: int) -> jnp.ndarray:
+def topk_mask_jax(score: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Boolean mask of the k highest scores (ties broken by index). Shared
+    by the score-ranked policies and the HFL engine's cluster-aware random
+    scheduler (fl/runtime.py)."""
     idx = jnp.argsort(-score)[:k]
     return jnp.zeros(score.shape[0], bool).at[idx].set(True)
+
 
 
 def _random_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
@@ -255,11 +259,11 @@ def _round_robin_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
 
 
 def _best_channel_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
-    return _topk_mask_jax(st.snr_lin, pcfg.n_scheduled)
+    return topk_mask_jax(st.snr_lin, pcfg.n_scheduled)
 
 
 def _latency_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
-    return _topk_mask_jax(-(st.comm_lat + st.comp_lat), pcfg.n_scheduled)
+    return topk_mask_jax(-(st.comm_lat + st.comp_lat), pcfg.n_scheduled)
 
 
 def _pf_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
@@ -267,18 +271,18 @@ def _pf_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
     *time-averaged* SNR. The engine carries the EMA across rounds — the
     legacy host path's scalar-mean proxy degenerated to best-channel."""
     ratio = st.snr_lin / jnp.maximum(st.avg_snr, 1e-12)
-    return _topk_mask_jax(ratio, pcfg.n_scheduled)
+    return topk_mask_jax(ratio, pcfg.n_scheduled)
 
 
 def _bn2_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
-    return _topk_mask_jax(st.update_norms, pcfg.n_scheduled)
+    return topk_mask_jax(st.update_norms, pcfg.n_scheduled)
 
 
 def _bc_bn2_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
     k_c = min(2 * pcfg.n_scheduled, pcfg.n_devices)
-    pre = _topk_mask_jax(st.snr_lin, k_c)
+    pre = topk_mask_jax(st.snr_lin, k_c)
     eff = jnp.where(pre, st.update_norms, -jnp.inf)
-    return _topk_mask_jax(eff, pcfg.n_scheduled)
+    return topk_mask_jax(eff, pcfg.n_scheduled)
 
 
 def _bn2_c_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
@@ -286,7 +290,7 @@ def _bn2_c_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:
     bits_per_param = jnp.maximum(
         st.rates * pcfg.deadline_s / d_params, 1e-3)
     fidelity = 1.0 - 2.0 ** (-jnp.minimum(bits_per_param, 32.0))
-    return _topk_mask_jax(st.update_norms * fidelity, pcfg.n_scheduled)
+    return topk_mask_jax(st.update_norms * fidelity, pcfg.n_scheduled)
 
 
 def _deadline_jax(pcfg: PolicyConfig, st: RoundState) -> jnp.ndarray:

@@ -176,6 +176,22 @@ def stack_channel_params(cfgs) -> ChannelParams:
                            for f in ChannelParams._fields))
 
 
+def gather_channel_params(cp: ChannelParams,
+                          idx: jnp.ndarray) -> ChannelParams:
+    """Per-group ChannelParams -> per-device ChannelParams.
+
+    Fields with a leading group axis (e.g. one entry per HFL cluster) are
+    gathered through ``idx`` (the device -> group assignment); scalar fields
+    — a single cell configuration shared by every group — broadcast
+    untouched. The result's fields are elementwise-compatible with per-device
+    ``(N,)`` distance/fading arrays in :func:`snr_jax`.
+    """
+    def g(f):
+        f = jnp.asarray(f)
+        return f[idx] if f.ndim >= 1 else f
+    return ChannelParams(*(g(f) for f in cp))
+
+
 def sample_positions_jax(key: jax.Array, cp: ChannelParams,
                          n_devices: int) -> jnp.ndarray:
     """Uniform in the disk of radius R (distances to the BS at origin)."""

@@ -35,7 +35,13 @@ An entire multi-round simulation compiles into **one XLA program**:
 * ``run_sweep`` vmaps the scanned engine over seed x channel-config x
   compression-level x algorithm-hyperparameter variants (policy, compressor,
   and algorithm *names* iterate in Python — they are static arguments) in
-  **one** compiled call per (policy, compressor-name, algorithm-name) tuple;
+  **one** compiled call per (policy, compressor-name, algorithm-name) tuple,
+  and ``hcfg=`` routes the same grid through the hierarchical engine;
+* hierarchical FL (``run_hfl``) is wireless-aware end to end: per-cluster
+  ``ChannelParams`` price the device->SBS uplink of the compressed payload,
+  each cluster runs the registry scheduling policy over its members, EF and
+  SCAFFOLD ctrl state ride the HFL scan carry, and the periodic SBS->MBS
+  sync ships a separately compressed and priced backhaul payload;
 * compiled engines are cached per static config (``_ENGINE_CACHE``, bounded
   FIFO) so repeated calls never re-trace; on the single-run path the initial
   params are donated (they alias the returned final params, letting XLA run
@@ -67,9 +73,8 @@ from repro.core.algorithms.registry import (AlgoParams, algo_params,
                                             stack_algo_params)
 from repro.core.compression import registry as compression
 from repro.core.compression.registry import CompressionParams
-from repro.core.hierarchy import (HFLConfig, hex_centers, assign_clusters_hex,
-                                  broadcast_to_clients, inter_cluster_average,
-                                  intra_cluster_average)
+from repro.core.hierarchy import (HFLConfig, broadcast_to_clients,
+                                  hfl_geometry_jax, inter_cluster_average)
 from repro.fl import server as fl_server
 
 PyTree = Any
@@ -488,7 +493,8 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
               cparams_grid: Optional[Sequence[CompressionParams]] = None,
               algorithms: Optional[Sequence[str]] = None,
               aparams_grid: Optional[Sequence[AlgoParams]] = None,
-              eval_batch: Optional[Dict[str, jnp.ndarray]] = None
+              eval_batch: Optional[Dict[str, jnp.ndarray]] = None,
+              hcfg: Optional[HFLConfig] = None
               ) -> Dict[Any, SimLogs]:
     """Sweep policies x compressor names x algorithm names x seeds x
     channels x compression levels x algorithm hyperparameters.
@@ -513,6 +519,12 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
     path loss, noise...) vary per variant through ``ChannelParams``,
     compression levels through ``CompressionParams``, and algorithm
     hyperparameters through ``AlgoParams``.
+
+    ``hcfg`` switches the sweep onto the hierarchical engine: every variant
+    runs the wireless-aware HFL scan (per-cluster scheduling, compressed
+    intra-cluster + backhaul pricing; each variant's seed re-deploys the
+    device/SBS geometry), still one compiled call per (policy, compression,
+    algorithm) name tuple.
     """
     wcfgs = list(wcfgs) if wcfgs else [
         wireless.WirelessConfig(n_devices=cfg.n_devices)]
@@ -549,8 +561,13 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
                         else [cfg.algorithm]):
                 cfg_v = dataclasses.replace(cfg, policy=pol, compression=comp,
                                             algorithm=alg)
-                engine = _get_engine(cfg_v, wcfgs[0], loss_fn,
-                                     eval_batch is not None, vmapped=True)
+                if hcfg is not None:
+                    engine = _get_hfl_engine(cfg_v, hcfg, wcfgs[0], loss_fn,
+                                             eval_batch is not None,
+                                             vmapped=True)
+                else:
+                    engine = _get_engine(cfg_v, wcfgs[0], loss_fn,
+                                         eval_batch is not None, vmapped=True)
                 _, outs = engine(keys, chans, cps, aps, init_params, batches,
                                  eval_batch)
                 (losses, clocks, masks, nsched, ubits,
@@ -566,165 +583,475 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
     return results
 
 
+
+
 # ---------------------------------------------------------------------------
-# Hierarchical FL simulation (Alg. 9) — scanned engine
+# Hierarchical FL simulation (Alg. 9) — wireless-aware scanned engine
+#
+# The cluster -> cloud topology runs through the *same* channel/compression/
+# policy machinery as flat FL: every device talks to its nearest SBS over the
+# fading channel layer (per-cluster ChannelParams -> snr_jax /
+# shannon_rate_jax / comm_latency_jax), each cluster runs the registry
+# scheduling policy over its own members, compressed intra-cluster payloads
+# (plus EF / SCAFFOLD ctrl state in the scan carry) price the device->SBS
+# uplink, and the periodic SBS->MBS sync ships a separately-compressed and
+# separately-priced backhaul payload over a fixed-rate fronthaul link.
 # ---------------------------------------------------------------------------
-_HFL_MU_RATE_BPS = 1e7  # MU<->SBS link rate for the latency model (Table I)
+_HFL_ALGOS = ("fedavg", "fedavg_m", "fedprox", "scaffold")
 
 
-def _hfl_setup(cfg: SimConfig, hcfg: HFLConfig):
-    rng = np.random.default_rng(cfg.seed)
-    centers = hex_centers(hcfg.n_clusters)
-    theta = rng.random(cfg.n_devices) * 2 * np.pi
-    r = 750.0 * np.sqrt(rng.random(cfg.n_devices))
-    pos = np.stack([r * np.cos(theta), r * np.sin(theta)], -1)
-    cluster_ids_np = assign_clusters_hex(pos, centers)
-    cluster_ids = jnp.asarray(cluster_ids_np)
-    cluster_sizes = jnp.asarray(np.bincount(cluster_ids_np,
-                                            minlength=hcfg.n_clusters))
-    return cluster_ids, cluster_sizes
-
-
-def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig, loss_fn, has_eval: bool):
-    """Shared HFL round logic for both paths. Returns ``(round_fn, engine)``:
-    ``round_fn`` is one full Alg. 9 round (algorithm client_update ->
-    intra-cluster average -> periodic inter-cluster sync -> broadcast) and
-    ``engine`` scans it — the host loop jits the *same* ``round_fn`` (no
-    re-implementation). The client side comes from the algorithm registry
-    (fedavg/fedavg_m/fedprox); Alg. 9 aggregates raw models, so server-side
-    optimizers and control-variate algorithms don't apply here.
-    """
-    h = hcfg.inter_cluster_period
+def _check_hfl_config(cfg: SimConfig) -> None:
     algo = algo_registry.get_algorithm(cfg.algorithm)
-    if algo.name not in ("fedavg", "fedavg_m", "fedprox"):
+    if algo.name not in _HFL_ALGOS:
         raise ValueError(
-            f"run_hfl supports client-side algorithms only "
-            f"(fedavg/fedavg_m/fedprox), not {algo.name!r}: Alg. 9 "
-            "aggregates raw models, so server optimizers and control "
-            "variates have no place to live")
+            f"run_hfl supports client-side algorithms "
+            f"({'/'.join(_HFL_ALGOS)}), not {algo.name!r}: Alg. 9 aggregates "
+            "raw cluster models, so server-side optimizer state (slowmo/"
+            "fedadam/fedyogi) has no SBS or MBS slot to live in. SCAFFOLD "
+            "is supported with cluster-level server control variates.")
+    if cfg.double_ef:
+        raise ValueError(
+            "run_hfl does not support double_ef: HFL has no single PS "
+            "downlink to carry server-side EF state — each SBS broadcasts "
+            "its raw cluster model. Drop double_ef (uplink EF still "
+            "applies) or use the flat engine.")
 
-    def round_fn(cluster_ids, cluster_sizes, client_params, t, aparams,
-                 batches):
-        def local_one(p, b):
-            delta, _, loss = algo.client_update(loss_fn, aparams, p, b, None)
-            p_new = jax.tree.map(
-                lambda pp, d: (pp.astype(jnp.float32) + d).astype(pp.dtype),
-                p, delta)
-            return p_new, loss
 
-        def sync(cm):
-            g = inter_cluster_average(cm, cluster_sizes)
-            return jax.tree.map(
-                lambda gg: jnp.broadcast_to(
-                    gg[None], (hcfg.n_clusters,) + gg.shape), g)
+def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
+                  wcfg: wireless.WirelessConfig, loss_fn, has_eval: bool):
+    """Shared wireless-aware HFL round logic for both engines. Returns
+    ``(init_carry, make_step, engine)`` exactly like :func:`_make_sim_fns`
+    (the host loop jits the same step the scanned engine scans, and the
+    engine signature matches the flat one so ``run_sweep`` can vmap it).
 
-        new_params, losses = jax.vmap(local_one)(client_params, batches)
-        cluster_models = intra_cluster_average(new_params, cluster_ids,
-                                               hcfg.n_clusters)
-        cluster_models = lax.cond((t + 1) % h == 0, sync,
-                                  lambda cm: cm, cluster_models)
-        client_params = broadcast_to_clients(cluster_models, cluster_ids)
-        return client_params, cluster_models, jnp.mean(losses)
+    One round (Alg. 9 + §III wireless):
 
-    def engine(cluster_ids, cluster_sizes, client_params0, aparams,
-               batches_all, eval_batch):
-        ENGINE_STATS["traces"] += 1
+    1. every device draws fading against its *own* SBS (distance from the
+       jnp geometry, per-cluster ``ChannelParams``) and the compressed
+       payload prices its device->SBS uplink via ``comm_latency_jax``;
+    2. each cluster schedules its members with the registry policy, with
+       ``cfg.n_scheduled`` as the *per-cluster* budget: score-based
+       policies see an intra-cluster view of the round state (out-of-
+       cluster devices carry -inf-grade scores, so top-k picks
+       min(k, |C_l|) members); the index-based ``random``/``round_robin``
+       use cluster-aware twins (random member k-subset / rotation over
+       member ranks) because a global permutation doesn't factor through
+       the masked score view;
+    3. scheduled clients' EF-compressed deltas average into their cluster
+       model (``aparams.server_lr`` scaled, exactly the flat server_update);
+    4. every ``hcfg.inter_cluster_period`` rounds each SBS uplinks its
+       compressed cluster-model delta over the ``backhaul_rate_bps``
+       fronthaul; the MBS averages (population-weighted) and broadcasts.
 
-        def step(client_params, xs):
+    The synchronous round time is the slowest scheduled device's
+    ``comm + comp`` (clusters operate in parallel), plus the backhaul time
+    on sync rounds. Logged ``uplink_bits`` holds intra-cluster plus
+    backhaul bits-on-the-wire.
+    """
+    n = cfg.n_devices
+    n_clusters = hcfg.n_clusters
+    period = hcfg.inter_cluster_period
+    pcfg = _policy_cfg(cfg, wcfg)
+    policy_fn = scheduling.get_policy(cfg.policy)
+    _check_hfl_config(cfg)
+    algo = algo_registry.get_algorithm(cfg.algorithm)
+    comp_active = cfg.compression != "none"
+    compress_fn = (compression.get_compressor(cfg.compression)
+                   if comp_active else None)
+
+    def init_carry(init_params):
+        d = fl_server.flat_dim(init_params)
+        cm = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (n_clusters,) + p.shape),
+            init_params)
+        gm = jax.tree.map(jnp.asarray, init_params)
+        ef = jnp.zeros((n, d), jnp.float32) if comp_active else None
+        ctrl = jnp.zeros((n, d), jnp.float32) if algo.uses_ctrl else None
+        cc = (jnp.zeros((n_clusters, d), jnp.float32) if algo.uses_ctrl
+              else None)
+        return (cm, gm, ef, ctrl, cc, jnp.float32(0.0),
+                jnp.zeros(n, jnp.float32), jnp.ones(n, jnp.float32),
+                jnp.zeros(n, jnp.float32))
+
+    def make_step(chan: wireless.ChannelParams, cparams: CompressionParams,
+                  aparams: AlgoParams, geo, k_rounds: jax.Array, eval_batch):
+        cluster_ids, dist, member, cluster_sizes = geo
+        chan_dev = wireless.gather_channel_params(chan, cluster_ids)
+        member_f = member.astype(jnp.float32)                       # (L, N)
+        w_cluster = cluster_sizes / jnp.maximum(jnp.sum(cluster_sizes), 1.0)
+
+        def step(carry, xs):
+            cm, gm, ef, ctrl, cc, clock, ages, norms, avg_snr = carry
             t, batches = xs
-            client_params, cluster_models, loss = round_fn(
-                cluster_ids, cluster_sizes, client_params, t, aparams,
-                batches)
+            kt = jax.random.fold_in(k_rounds, t)
+            kf, kc, kp, kn, kz = jax.random.split(kt, 5)
+
+            # --- channel draw + intra-cluster uplink pricing -------------
+            fading = wireless.sample_fading_jax(kf, n)
+            snr_lin = wireless.snr_jax(dist, fading, chan_dev)
+            rates = wireless.shannon_rate_jax(
+                snr_lin, chan_dev.bandwidth_hz / cfg.n_scheduled)
+            comp_lat = cfg.comp_latency_s * jax.random.exponential(kc, (n,))
+            d_model = fl_server.flat_dim(gm)
+            payload_scale = cfg.model_bits / (32.0 * d_model)
+            if comp_active:
+                msg_bits = payload_scale * compression.uplink_bits_jax(
+                    cfg.compression, cparams, d_model)
+            else:
+                msg_bits = jnp.float32(cfg.model_bits)
+            bits_dev = msg_bits * algo.uplink_factor
+            comm_lat = wireless.comm_latency_jax(bits_dev, rates)
+            avg_snr = jnp.where(t == 0, snr_lin,
+                                0.9 * avg_snr + 0.1 * snr_lin)
+
+            # --- per-cluster scheduling (registry policy) ----------------
+            rstate = scheduling.RoundState(
+                t=t, key=kp, snr_lin=snr_lin, avg_snr=avg_snr, rates=rates,
+                comm_lat=comm_lat, comp_lat=comp_lat, ages=ages,
+                update_norms=norms)
+            keys_l = jax.random.split(kp, n_clusters)
+            k_sched = cfg.n_scheduled
+
+            if cfg.policy == "random":
+                # cluster-aware twin of the registry policy: a random
+                # k-subset of *each cluster's members* (the global
+                # permutation's semantics don't factor through the masked
+                # per-cluster score view below)
+                def sched_one(m, k):
+                    score = jnp.where(m, jax.random.uniform(k, (n,)),
+                                      -jnp.inf)
+                    return scheduling.topk_mask_jax(score, k_sched) & m
+            elif cfg.policy == "round_robin":
+                # per-cluster rotation over each cluster's member ranks —
+                # exactly the flat G = |C_l|/K group cycling, per cluster
+                rank = jnp.cumsum(member_f, axis=1) - 1.0          # (L, N)
+                n_groups = jnp.maximum(
+                    jnp.floor(cluster_sizes / k_sched), 1.0)       # (L,)
+
+                def sched_one(m, k, r, g_l):
+                    g = jnp.mod(jnp.float32(t), g_l)
+                    return m & (r >= g * k_sched) & (r < (g + 1) * k_sched)
+            else:
+                def sched_one(m, k):
+                    # intra-cluster view: non-members look unschedulable
+                    # to every score-based policy (zero SNR/norm, infinite
+                    # latency), so top-k picks min(k, |C_l|) members
+                    stl = rstate._replace(
+                        key=k,
+                        snr_lin=jnp.where(m, snr_lin, 0.0),
+                        avg_snr=jnp.where(m, avg_snr, 1.0),
+                        rates=jnp.where(m, rates, 1e-9),
+                        comm_lat=jnp.where(m, comm_lat, jnp.inf),
+                        comp_lat=jnp.where(m, comp_lat, jnp.inf),
+                        update_norms=jnp.where(m, norms, 0.0))
+                    return policy_fn(pcfg, stl) & m
+
+            if cfg.policy == "round_robin":
+                masks_l = jax.vmap(sched_one)(member, keys_l, rank, n_groups)
+            else:
+                masks_l = jax.vmap(sched_one)(member, keys_l)
+            mask = jnp.any(masks_l, axis=0)
+            ages = scheduling.update_ages_jax(ages, mask)
+            mask_f = mask.astype(jnp.float32)
+
+            # --- local updates from each device's cluster model ----------
+            client_params = broadcast_to_clients(cm, cluster_ids)
+            if algo.uses_ctrl:
+                ci_tree = algo_registry.unflatten_rows(ctrl, gm)
+                cdev_tree = algo_registry.unflatten_rows(cc[cluster_ids], gm)
+
+                def one(p, b, ci, cd):
+                    return algo.client_update(loss_fn, aparams, p, b,
+                                              (ci, cd))
+
+                deltas, ctrl_deltas, losses = jax.vmap(one)(
+                    client_params, batches, ci_tree, cdev_tree)
+                ctrl_flat, _ = fl_server.flatten_clients(ctrl_deltas)
+            else:
+                def one(p, b):
+                    return algo.client_update(loss_fn, aparams, p, b, None)
+
+                deltas, _, losses = jax.vmap(one)(client_params, batches)
+                ctrl_flat = None
+
+            # --- client-side compression + EF in message space -----------
+            flat, _ = fl_server.flatten_clients(deltas)          # (N, D)
+            ctrl_wire = ctrl_flat
+            if comp_active:
+                k_up, k_ctrl, k_bh = jax.random.split(kz, 3)
+                flat = flat + ef
+                keys_up = jax.random.split(k_up, n)
+                wire, bits = jax.vmap(compress_fn, in_axes=(None, 0, 0))(
+                    cparams, keys_up, flat)
+                ef = flat - wire
+                flat = wire
+                if ctrl_flat is not None:
+                    keys_c = jax.random.split(k_ctrl, n)
+                    ctrl_wire, cbits = jax.vmap(
+                        compress_fn, in_axes=(None, 0, 0))(
+                            cparams, keys_c, ctrl_flat)
+                    bits = bits + cbits
+                ubits_intra = payload_scale * jnp.sum(bits * mask_f)
+            else:
+                k_bh = kz
+                ubits_intra = bits_dev * jnp.sum(mask_f)
+
+            # --- SBS aggregation: masked per-cluster delta mean ----------
+            wgt = member_f * mask_f[None, :]                     # (L, N)
+            cnt = jnp.sum(wgt, axis=1)                           # (L,)
+            mean_delta = (wgt @ flat) / jnp.maximum(cnt, 1.0)[:, None]
+            delta_tree = algo_registry.unflatten_rows(mean_delta, gm)
+            cm = jax.tree.map(
+                lambda m_, d_: (m_.astype(jnp.float32)
+                                + aparams.server_lr * d_).astype(m_.dtype),
+                cm, delta_tree)
+
+            # --- SCAFFOLD: cluster-level server control variates ---------
+            # c_l = mean over the cluster's c_i stays invariant: scheduled
+            # clients advance c_i by the *transmitted* ctrl delta, and the
+            # SBS integrates the same quantity scaled by 1/|C_l|.
+            if algo.uses_ctrl:
+                ctrl = ctrl + ctrl_wire * mask_f[:, None]
+                cc = cc + ((wgt @ ctrl_wire)
+                           / jnp.maximum(cluster_sizes, 1.0)[:, None])
+
+            # --- periodic inter-cluster sync over the SBS->MBS backhaul --
+            # lax.cond skips the (L, D) flatten/compress work entirely on
+            # the period-1 non-sync rounds of the single-run path (vmapped
+            # sweeps lower cond to select, where both branches run anyway)
+            sync = ((t + 1) % period) == 0
+
+            def do_sync(ops):
+                cm_, gm_, key = ops
+                cm_flat, _ = fl_server.flatten_clients(cm_)      # (L, D)
+                gm_flat = algo_registry.flatten_vec(gm_)
+                bh_deltas = cm_flat - gm_flat[None, :]
+                if comp_active:
+                    keys_bh = jax.random.split(key, n_clusters)
+                    bh_wire, bh_bits = jax.vmap(
+                        compress_fn, in_axes=(None, 0, 0))(
+                            cparams, keys_bh, bh_deltas)
+                    bh_bits_sbs = payload_scale * bh_bits        # (L,)
+                else:
+                    bh_wire = bh_deltas
+                    bh_bits_sbs = jnp.full((n_clusters,), cfg.model_bits,
+                                           jnp.float32)
+                gm_new = jax.tree.map(
+                    lambda g, gn: gn.astype(g.dtype), gm_,
+                    algo_registry.unflatten_vec(
+                        gm_flat + w_cluster @ bh_wire, gm_))
+                cm_new = jax.tree.map(
+                    lambda c_, g_: jnp.broadcast_to(
+                        g_[None], c_.shape).astype(c_.dtype), cm_, gm_new)
+                # parallel per-SBS fronthaul links: one backhaul transfer
+                # per SBS (bit cost is data-independent, so all L are equal)
+                return (cm_new, gm_new,
+                        jnp.max(bh_bits_sbs) / hcfg.backhaul_rate_bps,
+                        jnp.sum(bh_bits_sbs))
+
+            def no_sync(ops):
+                cm_, gm_, _ = ops
+                return cm_, gm_, jnp.float32(0.0), jnp.float32(0.0)
+
+            cm, gm, bh_time, ubits_bh = lax.cond(sync, do_sync, no_sync,
+                                                 (cm, gm, k_bh))
+            ubits = ubits_intra + ubits_bh
+
+            # --- wall clock: slowest scheduled device + backhaul ---------
+            total = comm_lat + comp_lat
+            slowest = jnp.argmax(jnp.where(mask, total, -jnp.inf))
+            any_sched = jnp.any(mask)
+            comm_s = jnp.where(any_sched, comm_lat[slowest], 0.0)
+            comp_s = jnp.where(any_sched, comp_lat[slowest], 0.0)
+            clock = clock + comm_s + comp_s + bh_time
+
+            loss = jnp.mean(losses)
             if has_eval:
-                loss = loss_fn(inter_cluster_average(cluster_models,
-                                                     cluster_sizes),
+                loss = loss_fn(inter_cluster_average(cm, cluster_sizes),
                                eval_batch)[0]
-            return client_params, loss
+            norms = 0.9 * norms + 0.1 * jax.random.exponential(kn, (n,))
+            return (cm, gm, ef, ctrl, cc, clock, ages, norms, avg_snr), (
+                loss, clock, mask, jnp.sum(mask), ubits, comm_s, comp_s)
 
+        return step
+
+    def engine(key, chan, cparams, aparams, init_params, batches_all,
+               eval_batch):
+        ENGINE_STATS["traces"] += 1  # python side effect: runs at trace only
+        k_geo, k_rounds = jax.random.split(key)
+        geo = hfl_geometry_jax(k_geo, hcfg, n)
+        step = make_step(chan, cparams, aparams, geo, k_rounds, eval_batch)
         ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
-        client_params, losses = lax.scan(step, client_params0,
-                                         (ts, batches_all))
-        return client_params, losses
+        carry, outs = lax.scan(step, init_carry(init_params),
+                               (ts, batches_all))
+        cm = carry[0]
+        final = jax.tree.map(
+            lambda p0, f: f.astype(p0.dtype), init_params,
+            inter_cluster_average(cm, geo[3]))
+        return final, outs
 
-    return round_fn, engine
+    return init_carry, make_step, engine
 
 
-_HFL_CACHE: Dict[Tuple, Callable] = {}
+def _hfl_engine_key(cfg: SimConfig, hcfg: HFLConfig,
+                    wcfg: wireless.WirelessConfig, loss_fn, has_eval: bool,
+                    tag: str) -> Tuple:
+    # HFLConfig is a frozen (hashable) dataclass; its continuous fields are
+    # compiled in statically — sweeping them means one engine per HFLConfig.
+    return _engine_key(cfg, wcfg, loss_fn, has_eval, tag) + (hcfg,)
+
+
+def _get_hfl_engine(cfg: SimConfig, hcfg: HFLConfig,
+                    wcfg: wireless.WirelessConfig, loss_fn, has_eval: bool,
+                    *, vmapped: bool = False) -> Callable:
+    def make():
+        _, _, engine = _make_hfl_fns(cfg, hcfg, wcfg, loss_fn, has_eval)
+        if vmapped:
+            return jax.jit(jax.vmap(engine,
+                                    in_axes=(0, 0, 0, 0, None, None, None)))
+        # no donation: the broadcast to (L, ...) cluster models copies the
+        # initial params anyway, so there is no aliasable output buffer
+        return jax.jit(engine)
+
+    return _cached(_ENGINE_CACHE,
+                   _hfl_engine_key(cfg, hcfg, wcfg, loss_fn, has_eval,
+                                   "hfl-sweep" if vmapped else "hfl-single"),
+                   make)
+
+
+def _get_hfl_host_step(cfg: SimConfig, hcfg: HFLConfig,
+                       wcfg: wireless.WirelessConfig, loss_fn,
+                       has_eval: bool) -> Callable:
+    """Jitted per-round HFL step with the run-specific values (channel
+    params, geometry, round key, eval batch) as *arguments* — shared across
+    runs of the same static config, exactly like :func:`_get_host_step`."""
+    def make():
+        _, make_step, _ = _make_hfl_fns(cfg, hcfg, wcfg, loss_fn, has_eval)
+
+        def host_step(chan, cparams, aparams, geo, k_rounds, eval_batch,
+                      carry, xs):
+            return make_step(chan, cparams, aparams, geo, k_rounds,
+                             eval_batch)(carry, xs)
+
+        return jax.jit(host_step)
+
+    return _cached(_ENGINE_CACHE,
+                   _hfl_engine_key(cfg, hcfg, wcfg, loss_fn, has_eval,
+                                   "hfl-host-step"), make)
+
+
+def _resolve_hfl_channel(cfg: SimConfig, hcfg: HFLConfig, wcfg, cluster_wcfgs
+                         ) -> Tuple[wireless.WirelessConfig,
+                                    wireless.ChannelParams]:
+    """Resolve the HFL channel inputs: a single cell config shared by every
+    cluster (scalar ChannelParams fields), or one WirelessConfig per cluster
+    (fields gain a leading (L,) axis, gathered per device in the engine).
+    Returns ``(static wcfg, ChannelParams)``.
+
+    Note: device placement — and therefore every device->SBS *distance* —
+    comes from the hex geometry (``hcfg.deploy_radius_m`` /
+    ``hcfg.sbs_pitch_m``), not from ``cell_radius_m``; the radiometric
+    fields (tx power, path-loss exponent, noise, bandwidth, ...) are what
+    vary per cluster here.
+    """
+    if wcfg is not None and cluster_wcfgs is not None:
+        raise ValueError("pass wcfg= or cluster_wcfgs=, not both")
+    if cluster_wcfgs is not None:
+        ws = list(cluster_wcfgs)
+        if len(ws) != hcfg.n_clusters:
+            raise ValueError(
+                f"cluster_wcfgs needs one WirelessConfig per cluster "
+                f"({hcfg.n_clusters}), got {len(ws)}")
+        statics = (ws[0].n_devices, ws[0].n_subchannels)
+        for w in ws:
+            if (w.n_devices, w.n_subchannels) != statics:
+                raise ValueError("cluster_wcfgs must share static fields "
+                                 "(n_devices, n_subchannels)")
+            if cfg.policy == "age" and w.bandwidth_hz != ws[0].bandwidth_hz:
+                raise ValueError(
+                    "cluster_wcfgs must share static bandwidth_hz for the "
+                    "'age' policy (its sub-band bandwidth compiles in "
+                    "statically)")
+        return ws[0], wireless.stack_channel_params(ws)
+    w = wcfg or wireless.WirelessConfig(n_devices=cfg.n_devices)
+    return w, wireless.channel_params(w)
 
 
 def run_hfl(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
             sample_client_batches: Callable[[int, int], Dict[str, jnp.ndarray]],
-            eval_fn: Optional[Callable[[PyTree], float]] = None
-            ) -> List[RoundLog]:
-    """HFL (intra-cluster averaging every round, inter-cluster every H) as a
-    single scanned program. Same eval contract as :func:`run_simulation`."""
+            eval_fn: Optional[Callable[[PyTree], float]] = None, *,
+            wcfg: Optional[wireless.WirelessConfig] = None,
+            cluster_wcfgs: Optional[Sequence[wireless.WirelessConfig]] = None,
+            engine: Optional[str] = None) -> List[RoundLog]:
+    """Wireless-aware HFL (Alg. 9) as a single scanned program.
+
+    Intra-cluster averaging runs every round over the fading device->SBS
+    channel (per-cluster scheduling + compressed, priced uplinks);
+    inter-cluster sync runs every ``hcfg.inter_cluster_period`` rounds over
+    the ``hcfg.backhaul_rate_bps`` fronthaul. Same eval/engine contract as
+    :func:`run_simulation`; ``cluster_wcfgs`` gives each SBS its own cell
+    configuration (one entry per cluster — radiometric fields like tx
+    power/path loss/bandwidth; device->SBS distances come from the
+    ``hcfg`` hex geometry, so ``cell_radius_m`` is inert here).
+    ``cfg.n_scheduled`` is the *per-cluster* scheduling budget.
+    """
+    if engine not in (None, "scan", "host"):
+        raise ValueError(f"unknown engine {engine!r}; use 'scan' or 'host'")
+    _check_hfl_config(cfg)
     if cfg.rounds == 0:
         return []
+    wcfg_stat, chan = _resolve_hfl_channel(cfg, hcfg, wcfg, cluster_wcfgs)
     eval_batch = getattr(eval_fn, "eval_batch", None) if eval_fn else None
-    if eval_fn is not None and eval_batch is None:
+    opaque_eval = eval_fn is not None and eval_batch is None
+    if engine == "scan" and opaque_eval:
+        raise ValueError(
+            "engine='scan' needs an in-program eval: attach eval_fn."
+            "eval_batch (logged loss becomes loss_fn(params, eval_batch)) "
+            "or drop engine= to let the host loop serve the opaque eval_fn")
+    if engine == "host" or opaque_eval:
         return _run_hfl_host(cfg, hcfg, loss_fn, init_params,
-                             sample_client_batches, eval_fn)
-
-    cluster_ids, cluster_sizes = _hfl_setup(cfg, hcfg)
-    client_params0 = jax.tree.map(
-        lambda p: jnp.broadcast_to(p[None], (cfg.n_devices,) + p.shape),
-        init_params)
+                             sample_client_batches, eval_fn, eval_batch,
+                             chan, wcfg_stat)
     batches = stack_batches(sample_client_batches, cfg.rounds, cfg.n_devices)
+    cparams = _resolve_cparams(cfg, init_params)
     aparams = _resolve_aparams(cfg)
-
-    key = ("hfl-engine", cfg.rounds, cfg.n_devices, cfg.algorithm,
-           hcfg.n_clusters, hcfg.inter_cluster_period, loss_fn,
-           eval_batch is not None)
-    engine = _cached(_HFL_CACHE, key,
-                     lambda: jax.jit(_make_hfl_fns(
-                         cfg, hcfg, loss_fn, eval_batch is not None)[1]))
-    _, losses = engine(cluster_ids, cluster_sizes, client_params0, aparams,
-                       batches, eval_batch)
-    losses = jax.device_get(losses)
-
-    hfl_lat, _ = hfl_round_latency_step(cfg, hcfg, _HFL_MU_RATE_BPS, 0)
-    return [RoundLog(t, hfl_lat * (t + 1), float(losses[t]), cfg.n_devices,
-                     np.ones(cfg.n_devices, bool))
-            for t in range(cfg.rounds)]
+    eng = _get_hfl_engine(cfg, hcfg, wcfg_stat, loss_fn,
+                          eval_batch is not None)
+    key = jax.random.PRNGKey(cfg.seed)
+    _, outs = eng(key, chan, cparams, aparams, init_params, batches,
+                  eval_batch)
+    losses, clocks, masks, nsched, ubits, comm_s, comp_s = jax.device_get(outs)
+    return SimLogs(loss=losses, latency_s=clocks, n_scheduled=nsched,
+                   participation=masks, uplink_bits=ubits, comm_s=comm_s,
+                   comp_s=comp_s).to_round_logs()
 
 
-def _run_hfl_host(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
-                  sample_client_batches, eval_fn) -> List[RoundLog]:
+def _run_hfl_host(cfg: SimConfig, hcfg: HFLConfig, loss_fn,
+                  init_params: PyTree, sample_client_batches, eval_fn,
+                  eval_batch, chan: wireless.ChannelParams,
+                  wcfg_stat: wireless.WirelessConfig) -> List[RoundLog]:
     """Per-round HFL dispatch loop over the *same* round step the scanned
     engine uses (host-side eval_fn support; parity baseline)."""
-    cluster_ids, cluster_sizes = _hfl_setup(cfg, hcfg)
-    client_params = jax.tree.map(
-        lambda p: jnp.broadcast_to(p[None], (cfg.n_devices,) + p.shape),
-        init_params)
+    has_eval = eval_batch is not None
+    init_carry, _, _ = _make_hfl_fns(cfg, hcfg, wcfg_stat, loss_fn, has_eval)
+    step = _get_hfl_host_step(cfg, hcfg, wcfg_stat, loss_fn, has_eval)
+    key = jax.random.PRNGKey(cfg.seed)
+    k_geo, k_rounds = jax.random.split(key)
+    geo = hfl_geometry_jax(k_geo, hcfg, cfg.n_devices)
+    cparams = _resolve_cparams(cfg, init_params)
     aparams = _resolve_aparams(cfg)
 
-    key = ("hfl-step", cfg.n_devices, cfg.algorithm, hcfg.n_clusters,
-           hcfg.inter_cluster_period, loss_fn)
-    step = _cached(_HFL_CACHE, key,
-                   lambda: jax.jit(_make_hfl_fns(cfg, hcfg, loss_fn,
-                                                 has_eval=False)[0]))
-
+    carry = init_carry(init_params)
     logs: List[RoundLog] = []
-    clock = 0.0
-    mu_rate = _HFL_MU_RATE_BPS
     for t in range(cfg.rounds):
-        batches = sample_client_batches(t, cfg.n_devices)
-        client_params, cluster_models, _ = step(
-            cluster_ids, cluster_sizes, client_params, jnp.int32(t), aparams,
-            batches)
-        hfl_lat, _ = hfl_round_latency_step(cfg, hcfg, mu_rate, t)
-        clock += hfl_lat
-        # run_hfl only routes here for an opaque eval_fn; the no-eval case
-        # runs through the scanned engine
-        lv = eval_fn(inter_cluster_average(cluster_models, cluster_sizes))
-        logs.append(RoundLog(t, clock, lv, cfg.n_devices,
-                             np.ones(cfg.n_devices, bool)))
+        bt = sample_client_batches(t, cfg.n_devices)
+        carry, (loss, clock, mask, nsched, ubits, comm_s, comp_s) = step(
+            chan, cparams, aparams, geo, k_rounds, eval_batch, carry,
+            (jnp.int32(t), bt))
+        lv = float(loss)
+        if eval_fn is not None and not has_eval:
+            lv = eval_fn(inter_cluster_average(carry[0], geo[3]))
+        logs.append(RoundLog(t, float(clock), lv, int(nsched),
+                             np.asarray(mask), float(ubits), float(comm_s),
+                             float(comp_s)))
     return logs
-
-
-def hfl_round_latency_step(cfg: SimConfig, hcfg: HFLConfig, mu_rate: float,
-                           t: int):
-    from repro.core.hierarchy import hfl_round_latency
-    hfl_per_period, fl_per_period = hfl_round_latency(cfg.model_bits, mu_rate, hcfg)
-    return hfl_per_period / hcfg.inter_cluster_period, \
-        fl_per_period / hcfg.inter_cluster_period

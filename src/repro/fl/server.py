@@ -37,9 +37,10 @@ PyTree = Any
 flat_dim = algorithms.flat_dim
 
 
-def _flatten_clients(tree: PyTree) -> Tuple[jnp.ndarray, Callable]:
+def flatten_clients(tree: PyTree) -> Tuple[jnp.ndarray, Callable]:
     """Stacked (N, ...) leaves -> one (N, D) float32 message matrix, plus the
-    inverse (which restores shapes and dtypes)."""
+    inverse (which restores shapes and dtypes). Shared message-space layout
+    of the flat-FL and hierarchical-FL engines (fl/runtime.py)."""
     leaves, treedef = jax.tree.flatten(tree)
     n = leaves[0].shape[0]
     flat = jnp.concatenate(
@@ -166,7 +167,7 @@ def fl_round(state: FLState, stacked_batches: Dict[str, jnp.ndarray],
 
         deltas, ctrl_deltas, losses = jax.vmap(one, in_axes=(None, 0, 0))(
             state.params, stacked_batches, ci_tree)
-        ctrl_flat, _ = _flatten_clients(ctrl_deltas)  # (N, D) message space
+        ctrl_flat, _ = flatten_clients(ctrl_deltas)  # (N, D) message space
     else:
         def one(p, b):
             return a.client_update(loss_fn, ap, p, b, None)
@@ -185,7 +186,7 @@ def fl_round(state: FLState, stacked_batches: Dict[str, jnp.ndarray],
     ctrl_wire = ctrl_flat  # what the server receives for the ctrl update
     if compress_fn is not None:
         k_up, k_down, k_ctrl = jax.random.split(key, 3)
-        flat, unflatten = _flatten_clients(deltas)
+        flat, unflatten = flatten_clients(deltas)
         if client_error is not None:
             flat = flat + client_error
         keys = jax.random.split(k_up, flat.shape[0])
@@ -279,7 +280,7 @@ def pssgd_round(params: PyTree, stacked_batches: Dict[str, jnp.ndarray],
                 "pssgd_round needs key= when compression != 'none' "
                 "(stochastic compressors must see fresh randomness each "
                 "round)")
-        flat, unflatten = _flatten_clients(grads)
+        flat, unflatten = flatten_clients(grads)
         keys = jax.random.split(key, flat.shape[0])
         comp, _ = jax.vmap(compress_fn, in_axes=(None, 0, 0))(
             cparams, keys, flat)

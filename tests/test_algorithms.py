@@ -372,9 +372,12 @@ def test_init_fl_state_allocates_algorithm_state():
 
 
 def test_hfl_rejects_server_side_algorithms():
+    """SCAFFOLD is HFL-supported (cluster-level control variates) since the
+    wireless-aware engine; server-optimizer algorithms still have no SBS/MBS
+    state slot and are rejected."""
     params0, loss_fn, make_batches = _make_problem()
     from repro.core.hierarchy import HFLConfig
     with pytest.raises(ValueError, match="client-side"):
-        rt.run_hfl(rt.SimConfig(n_devices=6, rounds=2, algorithm="scaffold"),
+        rt.run_hfl(rt.SimConfig(n_devices=6, rounds=2, algorithm="slowmo"),
                    HFLConfig(n_clusters=2, inter_cluster_period=2),
                    loss_fn, params0, make_batches)

@@ -1,0 +1,124 @@
+"""Benchmark harness regression coverage: per-metric value recording in
+``benchmarks.run`` (distinct keys must record distinct values — a runner
+bug once wrote one module-level timing under every metric key) and the
+``scripts/check_bench.py`` CI regression gate.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+from benchmarks import common
+from benchmarks import run as bench_run
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "scripts"))
+import check_bench  # noqa: E402
+
+
+@pytest.fixture
+def rows(monkeypatch):
+    monkeypatch.setattr(common, "ROWS", [])
+    return common.ROWS
+
+
+def test_write_json_records_distinct_per_metric_values(rows, tmp_path):
+    """Distinct metric keys record their own values, not one shared
+    module-level timing number."""
+    module_us = 31034.2  # the old bug: this landed under every fig1.* key
+    common.emit("fig1.us_per_round", module_us, "timing")
+    common.emit("fig1.random_final_loss", 0.0, "3.1415", value=3.1415)
+    common.emit("fig1.channel_aware_final_loss", 0.0, "2.7182", value=2.7182)
+    common.emit("fig1.latency_speedup_chan", 0.0, "1.5x", value=1.5)
+    out = tmp_path / "bench.json"
+    bench_run.write_json(str(out))
+    table = json.loads(out.read_text())
+    assert table["fig1.us_per_round"] == pytest.approx(module_us)
+    assert table["fig1.random_final_loss"] == pytest.approx(3.1415)
+    assert table["fig1.channel_aware_final_loss"] == pytest.approx(2.7182)
+    assert table["fig1.latency_speedup_chan"] == pytest.approx(1.5)
+    metric_values = [table[k] for k in table if k != "fig1.us_per_round"]
+    assert len(set(metric_values)) == len(metric_values)
+    assert module_us not in metric_values
+
+
+def test_write_json_skips_string_and_zero_rows(rows, tmp_path):
+    common.emit("fig2.best_policy", 0.0, "bn2_c")        # string metric
+    common.emit("fig2.us_per_round", 12.5, "timing")
+    out = tmp_path / "bench.json"
+    bench_run.write_json(str(out))
+    table = json.loads(out.read_text())
+    assert table == {"fig2.us_per_round": 12.5}
+
+
+# ---------------------------------------------------------------------------
+# scripts/check_bench.py — the CI benchmark-regression gate
+# ---------------------------------------------------------------------------
+BASE = {"engine.scan_us_per_round": 100.0,
+        "algorithms.fedavg.us_per_round": 80.0,
+        "fig1.random_final_loss": 3.14}  # not a gated key
+
+
+def test_check_bench_passes_within_tolerance():
+    new = {"engine.scan_us_per_round": 150.0,
+           "algorithms.fedavg.us_per_round": 120.0,
+           "fig1.random_final_loss": 999.0}
+    failures, _ = check_bench.compare(BASE, new, tolerance=2.0)
+    assert failures == []
+
+
+def test_check_bench_fails_beyond_tolerance():
+    new = {"engine.scan_us_per_round": 250.0,
+           "algorithms.fedavg.us_per_round": 80.0}
+    failures, _ = check_bench.compare(BASE, new, tolerance=2.0)
+    assert len(failures) == 1
+    assert "engine.scan_us_per_round" in failures[0]
+    # a looser tolerance admits the same numbers
+    failures, _ = check_bench.compare(BASE, new, tolerance=3.0)
+    assert failures == []
+
+
+def test_check_bench_gates_every_algorithms_metric():
+    new = dict(BASE, **{"algorithms.fedavg.us_per_round": 500.0})
+    failures, _ = check_bench.compare(BASE, new, tolerance=2.0)
+    assert len(failures) == 1
+    assert "algorithms.fedavg.us_per_round" in failures[0]
+
+
+def test_check_bench_ungated_metrics_never_fail():
+    new = dict(BASE, **{"fig1.random_final_loss": 1e9})
+    failures, _ = check_bench.compare(BASE, new, tolerance=2.0)
+    assert failures == []
+
+
+def test_check_bench_missing_key_is_note_not_failure():
+    new = {"algorithms.fedavg.us_per_round": 80.0}
+    failures, notes = check_bench.compare(BASE, new, tolerance=2.0)
+    assert failures == []
+    assert any("missing" in n for n in notes)
+
+
+def test_check_bench_notes_new_gated_keys_without_baseline():
+    """A gated metric present only in the new table (e.g. a just-added
+    algorithm benchmark) is surfaced, not silently ignored."""
+    new = dict(BASE, **{"algorithms.newalgo.us_per_round": 500.0})
+    failures, notes = check_bench.compare(BASE, new, tolerance=2.0)
+    assert failures == []
+    assert any("newalgo" in n and "no baseline" in n for n in notes)
+
+
+def test_check_bench_main_exit_codes(tmp_path):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(BASE))
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(BASE))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(
+        dict(BASE, **{"engine.scan_us_per_round": 1000.0})))
+    argv = ["--baseline", str(base), "--commit-message", "normal commit"]
+    assert check_bench.main(argv + ["--new", str(good)]) == 0
+    assert check_bench.main(argv + ["--new", str(bad)]) == 1
+    # the [bench-skip] escape hatch green-lights the same regression
+    assert check_bench.main(
+        ["--baseline", str(base), "--new", str(bad),
+         "--commit-message", "slow refactor [bench-skip]"]) == 0

@@ -1,0 +1,247 @@
+"""Wireless-aware hierarchical FL engine (fl/runtime.py run_hfl):
+device->SBS channel pricing, per-cluster scheduling/channels, compressed
+intra-cluster + backhaul payload accounting, EF/ctrl scan-carry state,
+scan/host parity, and the HFL path of run_sweep (one trace per tuple).
+"""
+import numpy as np
+import pytest
+
+from benchmarks.common import make_linear_problem
+from repro.core import wireless
+from repro.core.compression import compression_params, sparse_message_bits
+from repro.core.hierarchy import HFLConfig
+from repro.fl import runtime as rt
+
+AP01 = rt.algo_params(lr=0.1)
+D = 16  # flat message dim of the d=16 linear problem (one (16,) leaf)
+HCFG = HFLConfig(n_clusters=3, inter_cluster_period=3)
+
+
+def _make_problem():
+    params, loss_fn, make_batches, _ = make_linear_problem(d=16)
+    return params, loss_fn, make_batches
+
+
+def _cfg(**kw):
+    kw.setdefault("n_devices", 12)
+    kw.setdefault("n_scheduled", 3)
+    kw.setdefault("rounds", 9)
+    kw.setdefault("algo_params", AP01)
+    kw.setdefault("policy", "best_channel")
+    kw.setdefault("seed", 3)
+    kw.setdefault("model_bits", 32.0 * D)
+    return rt.SimConfig(**kw)
+
+
+@pytest.mark.parametrize("compression", ["none", "topk"])
+def test_hfl_scan_host_bitwise_parity(compression):
+    """The scanned HFL engine and the host loop (same jitted step) agree
+    bitwise: identical masks, losses, clocks, and uplink bits."""
+    params0, loss_fn, make_batches = _make_problem()
+    cfg = _cfg(compression=compression,
+               compression_params=compression_params(k=3))
+    scan = rt.run_hfl(cfg, HCFG, loss_fn, params0, make_batches)
+    host = rt.run_hfl(cfg, HCFG, loss_fn, params0, make_batches,
+                      engine="host")
+    assert len(scan) == len(host) == cfg.rounds
+    for s, h in zip(scan, host):
+        np.testing.assert_array_equal(s.participation, h.participation)
+        assert s.n_scheduled == h.n_scheduled
+        assert s.loss == h.loss
+        assert s.latency_s == h.latency_s
+        assert s.uplink_bits == h.uplink_bits
+
+
+def test_hfl_latency_is_channel_driven_not_constant():
+    """No Table-I constants on the default path: per-round latency comes
+    from the fading device->SBS channel, so round times vary."""
+    params0, loss_fn, make_batches = _make_problem()
+    logs = rt.run_hfl(_cfg(), HCFG, loss_fn, params0, make_batches)
+    deltas = np.diff([0.0] + [log.latency_s for log in logs])
+    assert len(set(np.round(deltas, 9))) > 1
+    # each round's clock increment is the bottleneck comm+comp split, plus
+    # the backhaul transfer on sync rounds
+    for log, dt in zip(logs, deltas):
+        assert dt >= log.comm_s + log.comp_s - 1e-6
+    # masks are real: best_channel schedules exactly min(k, |C_l|) per
+    # cluster every round
+    import jax
+    from repro.core.hierarchy import hfl_geometry_jax
+    k_geo, _ = jax.random.split(jax.random.PRNGKey(3))
+    _, _, _, sizes = hfl_geometry_jax(k_geo, HCFG, 12)
+    exact = sum(min(3, int(s)) for s in np.asarray(sizes))
+    assert 0 < exact < 12
+    assert all(log.n_scheduled == exact for log in logs)
+
+
+def test_hfl_compression_shortens_rounds_and_prices_backhaul():
+    """Compressed payloads shorten HFL rounds through comm_latency_jax, and
+    sync rounds bill the separate SBS->MBS backhaul payload."""
+    params0, loss_fn, make_batches = _make_problem()
+    k = 2
+    comp = rt.run_hfl(_cfg(policy="random", compression="topk",
+                           compression_params=compression_params(k=k)),
+                      HCFG, loss_fn, params0, make_batches)
+    none = rt.run_hfl(_cfg(policy="random"), HCFG, loss_fn, params0,
+                      make_batches)
+    h = HCFG.inter_cluster_period
+    for c, u in zip(comp, none):
+        # same seed + random policy -> identical schedules, cheaper uplink
+        np.testing.assert_array_equal(c.participation, u.participation)
+        assert c.latency_s < u.latency_s
+        assert c.comm_s < u.comm_s
+        sync = (c.round + 1) % h == 0
+        msg = sparse_message_bits(D, k)
+        intra = msg * c.n_scheduled
+        bh = msg * HCFG.n_clusters if sync else 0.0
+        np.testing.assert_allclose(c.uplink_bits, intra + bh, rtol=1e-5)
+        u_intra = 32.0 * D * u.n_scheduled
+        u_bh = 32.0 * D * HCFG.n_clusters if sync else 0.0
+        np.testing.assert_allclose(u.uplink_bits, u_intra + u_bh, rtol=1e-5)
+    # compression still learns
+    assert comp[-1].loss < comp[0].loss
+
+
+def test_hfl_per_cluster_channels():
+    """cluster_wcfgs gives each SBS its own cell: degrading one cluster's
+    tx power slows the synchronous round clock."""
+    params0, loss_fn, make_batches = _make_problem()
+    cfg = _cfg(policy="random", model_bits=1e7)
+    strong = [wireless.WirelessConfig(n_devices=12) for _ in range(3)]
+    weak = [wireless.WirelessConfig(n_devices=12),
+            wireless.WirelessConfig(n_devices=12, tx_power_dbm=-25.0),
+            wireless.WirelessConfig(n_devices=12)]
+    ls = rt.run_hfl(cfg, HCFG, loss_fn, params0, make_batches,
+                    cluster_wcfgs=strong)
+    lw = rt.run_hfl(cfg, HCFG, loss_fn, params0, make_batches,
+                    cluster_wcfgs=weak)
+    # same geometry/schedule (random policy + same seed), weaker uplinks
+    np.testing.assert_array_equal(ls[-1].participation,
+                                  lw[-1].participation)
+    assert lw[-1].latency_s > ls[-1].latency_s
+    with pytest.raises(ValueError, match="one WirelessConfig per cluster"):
+        rt.run_hfl(cfg, HCFG, loss_fn, params0, make_batches,
+                   cluster_wcfgs=strong[:2])
+    with pytest.raises(ValueError, match="not both"):
+        rt.run_hfl(cfg, HCFG, loss_fn, params0, make_batches,
+                   wcfg=strong[0], cluster_wcfgs=strong)
+
+
+def test_hfl_per_cluster_scheduling_budget():
+    """cfg.n_scheduled caps each *cluster*: every policy schedules at most
+    min(k, |C_l|) members per cluster — and the score-based policies plus
+    the cluster-aware random/round_robin twins schedule exactly that."""
+    import jax
+
+    params0, loss_fn, make_batches = _make_problem()
+    k_geo, _ = jax.random.split(jax.random.PRNGKey(3))
+    from repro.core.hierarchy import hfl_geometry_jax
+    _, _, member, sizes = hfl_geometry_jax(k_geo, HCFG, 12)
+    member = np.asarray(member)
+    exact = sum(min(2, int(s)) for s in np.asarray(sizes))
+    for pol in ("best_channel", "latency", "random", "round_robin"):
+        logs = rt.run_hfl(_cfg(n_scheduled=2, rounds=4, policy=pol),
+                          HCFG, loss_fn, params0, make_batches)
+        for log in logs:
+            assert log.n_scheduled == exact, pol
+            # never more than k from any one cluster
+            per_cluster = member @ log.participation
+            assert (per_cluster <= 2).all(), pol
+
+
+def test_hfl_scaffold_carries_ctrl_and_bills_double():
+    """SCAFFOLD rides the HFL carry (per-client c_i + cluster-level c_l)
+    and its second uplink message doubles the priced bits."""
+    params0, loss_fn, make_batches = _make_problem()
+    sc = rt.run_hfl(_cfg(policy="random", rounds=6, algorithm="scaffold",
+                         algo_params=rt.algo_params(lr=0.05)),
+                    HCFG, loss_fn, params0, make_batches)
+    fa = rt.run_hfl(_cfg(policy="random", rounds=6, algorithm="fedavg",
+                         algo_params=rt.algo_params(lr=0.05)),
+                    HCFG, loss_fn, params0, make_batches)
+    np.testing.assert_array_equal(sc[0].participation, fa[0].participation)
+    # non-sync round: exactly 2x the bits; scaffold's slower uplink shows
+    # in the clock under identical schedules
+    np.testing.assert_allclose(sc[0].uplink_bits, 2.0 * fa[0].uplink_bits,
+                               rtol=1e-6)
+    assert sc[0].latency_s > fa[0].latency_s
+    assert sc[-1].loss < sc[0].loss
+
+
+def test_hfl_rejects_server_side_algorithms():
+    params0, loss_fn, make_batches = _make_problem()
+    for alg in ("slowmo", "fedadam", "fedyogi"):
+        with pytest.raises(ValueError, match="client-side"):
+            rt.run_hfl(_cfg(algorithm=alg), HCFG, loss_fn, params0,
+                       make_batches)
+
+
+def test_hfl_rejects_double_ef():
+    """double_ef would silently no-op on the HFL path (no single PS
+    downlink), so it is rejected instead."""
+    params0, loss_fn, make_batches = _make_problem()
+    with pytest.raises(ValueError, match="double_ef"):
+        rt.run_hfl(_cfg(compression="topk", double_ef=True), HCFG, loss_fn,
+                   params0, make_batches)
+
+
+def test_hfl_sweep_one_trace_per_tuple():
+    """run_sweep over an HFL config compiles exactly one engine per
+    (policy, compression, algorithm) tuple — the ENGINE_STATS no-retrace
+    acceptance property, extended to the hierarchical path."""
+    params0, loss_fn, make_batches = _make_problem()
+    rounds, n = 4, 12
+    cfg = rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds,
+                       algo_params=AP01, model_bits=32.0 * D)
+    batches = rt.stack_batches(make_batches, rounds, n)
+    cps = [compression_params(k=2), compression_params(k=8)]
+    sweep_kw = dict(seeds=[0, 1], policies=["random", "best_channel"],
+                    compressions=["none", "topk"], cparams_grid=cps,
+                    algorithms=["fedavg", "fedprox"],
+                    aparams_grid=[rt.algo_params(lr=0.05),
+                                  rt.algo_params(lr=0.1)], hcfg=HCFG)
+    before = rt.ENGINE_STATS["traces"]
+    out = rt.run_sweep(cfg, loss_fn, params0, batches, **sweep_kw)
+    assert rt.ENGINE_STATS["traces"] - before == 2 * 2 * 2
+    assert set(out) == {(p, c, a) for p in ("random", "best_channel")
+                        for c in ("none", "topk")
+                        for a in ("fedavg", "fedprox")}
+    v = 2 * len(cps) * 2  # seeds x cparams x aparams
+    for logs in out.values():
+        assert logs.loss.shape == (v, rounds)
+        assert logs.participation.shape == (v, rounds, n)
+        assert np.isfinite(logs.loss).all()
+    # within a variant row, k=2 costs fewer uplink bits than k=8
+    # (variants ordered product(seeds, wcfgs, cparams, aparams))
+    ub = out[("random", "topk", "fedavg")].uplink_bits
+    ub = ub.reshape(2, len(cps), 2, rounds).sum(-1)  # (seed, cp, ap)
+    assert (ub[:, 0] < ub[:, 1]).all()
+    # repeated identical sweep: no re-trace
+    rt.run_sweep(cfg, loss_fn, params0, batches, **sweep_kw)
+    assert rt.ENGINE_STATS["traces"] - before == 2 * 2 * 2
+
+
+def test_hex_centers_rejects_more_than_seven_clusters():
+    """The 7-hex layout wraps its neighbour angle after 6: an 8th cluster
+    would silently duplicate a center and stay permanently empty."""
+    from repro.core.hierarchy import hex_centers
+    with pytest.raises(ValueError, match="7-hex"):
+        hex_centers(8)
+    centers = hex_centers(7)
+    assert centers.shape == (7, 2)
+    assert len({tuple(np.round(c, 6)) for c in centers}) == 7
+
+
+def test_hfl_sweep_seeds_redeploy_geometry():
+    """Each sweep seed re-deploys the device/SBS geometry inside the
+    compiled engine, so different seeds schedule different device sets."""
+    params0, loss_fn, make_batches = _make_problem()
+    rounds, n = 3, 12
+    cfg = rt.SimConfig(n_devices=n, n_scheduled=2, rounds=rounds,
+                       algo_params=AP01, policy="best_channel",
+                       model_bits=32.0 * D)
+    batches = rt.stack_batches(make_batches, rounds, n)
+    out = rt.run_sweep(cfg, loss_fn, params0, batches, seeds=[0, 1, 2],
+                       hcfg=HCFG)
+    p = out["best_channel"].participation
+    assert (p[0] != p[1]).any() or (p[0] != p[2]).any()
