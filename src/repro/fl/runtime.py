@@ -258,10 +258,6 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
             else:
                 bits_dev = jnp.float32(cfg.model_bits * algo.uplink_factor)
             comm_lat = wireless.comm_latency_jax(bits_dev, rates)
-            # deliberate per-round slowdown: bench-gate demonstration only
-            comm_lat = comm_lat + 0.0 * lax.fori_loop(
-                0, 20000, lambda i, a: a + jnp.sum(jnp.sin(comm_lat + i)),
-                jnp.float32(0.0))
             # per-device time-averaged SNR (PF's denominator), seeded with
             # the first observation
             avg_snr = jnp.where(t == 0, snr_lin,
