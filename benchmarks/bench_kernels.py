@@ -1,15 +1,26 @@
 """Pallas kernel timings (interpret mode on CPU — indicative, the real
-target is TPU) vs the pure-jnp oracle, plus compiled-oracle throughput."""
+target is TPU) vs the pure-jnp oracle, plus compiled-oracle throughput.
+
+The ``kernel.*_pallas`` rows time the row-batched kernels through
+``resolve_mode(None)`` — exactly the path the fleet engine's
+``rows_compressor`` dispatches to above ``KERNEL_DISPATCH_MIN_ELEMS``:
+Mosaic Pallas on TPU, the compiled-jnp mirror of the same tiling on CPU.
+The ``kernel.*_interpret_4m`` rows run the identical size through Pallas
+interpret mode (the correctness path); the dispatch path must beat it."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.kernels import block_topk, qsgd_quantize, sign_ef_compress
-from repro.kernels import ref
+from repro.kernels import (block_topk, qsgd_quantize, qsgd_rows, ref,
+                           resolve_mode, sign_ef_compress, sign_ef_rows,
+                           topk_rows)
 
 SIZE = 1 << 18  # 256k elements
+BIG = 1 << 22   # 4M elements: above KERNEL_DISPATCH_MIN_ELEMS, so the
+                # engine's rows_compressor takes the kernel path here
+BIG_D = 1024    # row width for the row-batched kernels
 
 
 def main() -> None:
@@ -40,6 +51,31 @@ def main() -> None:
     emit("kernel.qsgd_pallas_interpret", us, "correctness-path")
     us = time_fn(lambda: sign_ef_compress(x, e, interpret=True), iters=3)
     emit("kernel.sign_ef_pallas_interpret", us, "correctness-path")
+
+    # --- row-batched kernels at engine-dispatch size (4M elements) ---
+    mode = resolve_mode(None)
+    tag = ("tpu-mosaic" if mode == "pallas" else "cpu-jit-mirror")
+    rows = jax.random.normal(jax.random.PRNGKey(1), (BIG // BIG_D, BIG_D))
+    erow = jnp.zeros_like(rows)
+    urow = jax.random.uniform(jax.random.PRNGKey(2), rows.shape)
+
+    us = time_fn(lambda: topk_rows(rows, 10), iters=5)
+    emit("kernel.topk_pallas", us, f"{BIG / us:.0f}elem/us;dispatch={tag}")
+    us = time_fn(lambda: qsgd_rows(rows, urow, 256), iters=5)
+    emit("kernel.qsgd_pallas", us, f"{BIG / us:.0f}elem/us;dispatch={tag}")
+    us = time_fn(lambda: sign_ef_rows(rows, erow), iters=5)
+    emit("kernel.sign_ef_pallas", us, f"{BIG / us:.0f}elem/us;dispatch={tag}")
+
+    # same size through interpret mode: the dispatch rows must beat these
+    us = time_fn(lambda: topk_rows(rows, 10, mode="interpret"),
+                 iters=2, warmup=1)
+    emit("kernel.topk_interpret_4m", us, "correctness-path")
+    us = time_fn(lambda: qsgd_rows(rows, urow, 256, mode="interpret"),
+                 iters=2, warmup=1)
+    emit("kernel.qsgd_interpret_4m", us, "correctness-path")
+    us = time_fn(lambda: sign_ef_rows(rows, erow, mode="interpret"),
+                 iters=2, warmup=1)
+    emit("kernel.sign_ef_interpret_4m", us, "correctness-path")
 
 
 if __name__ == "__main__":

@@ -15,9 +15,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_algorithms, bench_compression, bench_hfl,
-                        bench_kernels, bench_rs_rr_pf, bench_scheduling,
-                        bench_update_aware)
+from benchmarks import (bench_algorithms, bench_compression, bench_fleet,
+                        bench_hfl, bench_kernels, bench_rs_rr_pf,
+                        bench_scheduling, bench_update_aware)
 from benchmarks import common, roofline
 
 MODULES = [
@@ -28,6 +28,7 @@ MODULES = [
     ("algorithms(registry)", bench_algorithms),
     ("rs_rr_pf(eqs50-56)", bench_rs_rr_pf),
     ("kernels", bench_kernels),
+    ("fleet(chunked-engine)", bench_fleet),
 ]
 
 

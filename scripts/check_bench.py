@@ -6,9 +6,13 @@ Diffs a freshly generated ``--fast`` smoke table (``benchmarks.run --fast
 (``benchmarks/BENCH_engine_fast.baseline.json`` — the default smoke output
 path ``BENCH_engine_fast.json`` stays git-ignored so local smoke runs never
 dirty the tree) and exits non-zero when any *gated* metric regresses by
-more than the tolerance. Gated keys default to ``engine.scan_us_per_round`` and every
-``algorithms.*`` entry — the timing rows where a regression means the
-compiled engine got slower, not that a loss curve wiggled.
+more than the tolerance. Gated keys default to ``engine.scan_us_per_round``,
+every ``algorithms.*`` and ``fleet.*`` entry, and the ``kernel.*_pallas``
+dispatch-path rows — the timing/throughput rows where a regression means the
+compiled engine got slower, not that a loss curve wiggled. Most gated rows
+are timings (lower is better); ``fleet.rounds_per_s*`` rows are throughput
+(higher is better) and trip the gate when they *fall* below
+``baseline / tolerance``.
 
 The default tolerance is 2x: shared CI runners are noisy, so the gate only
 trips on step-change regressions (an accidental retrace per round, a host
@@ -37,7 +41,14 @@ import subprocess
 import sys
 from typing import Dict, List, Sequence, Tuple
 
-DEFAULT_GATED = ("engine.scan_us_per_round", "algorithms.*")
+DEFAULT_GATED = ("engine.scan_us_per_round", "algorithms.*", "fleet.*",
+                 "kernel.*_pallas")
+# fnmatch is full-string, so "kernel.*_pallas" gates the dispatch-path rows
+# (kernel.topk_pallas, ...) without catching kernel.*_pallas_interpret.
+
+# Gated metrics where *larger* is the good direction (throughput rows):
+# these regress when new < baseline / tolerance.
+HIGHER_IS_BETTER = ("fleet.rounds_per_s*",)
 SKIP_TOKEN = "[bench-skip]"
 
 
@@ -60,11 +71,19 @@ def compare(baseline: Dict[str, float], new: Dict[str, float],
             notes.append(f"gated key {key!r} has non-positive baseline "
                          f"{base}; skipping")
             continue
-        ratio = new[key] / base
+        hib = any(fnmatch.fnmatch(key, p) for p in HIGHER_IS_BETTER)
+        if hib and new[key] <= 0:
+            notes.append(f"gated key {key!r} has non-positive new value "
+                         f"{new[key]}; skipping")
+            continue
+        # throughput rows regress downward; timing rows regress upward —
+        # either way the bad direction makes `ratio` exceed the tolerance
+        ratio = base / new[key] if hib else new[key] / base
         if ratio > tolerance:
+            direction = "slower (throughput fell)" if hib else "slower"
             failures.append(
                 f"{key}: {new[key]:.1f} vs baseline {base:.1f} "
-                f"({ratio:.2f}x > {tolerance:.2f}x tolerance)")
+                f"({ratio:.2f}x {direction} > {tolerance:.2f}x tolerance)")
         else:
             notes.append(f"{key}: {ratio:.2f}x (ok)")
     for key in sorted(new):

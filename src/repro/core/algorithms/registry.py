@@ -132,13 +132,15 @@ def sgd_steps(loss_fn, params: PyTree, batches: PyTree, lr,
     gradient each step — the FedProx proximal term or the SCAFFOLD control
     correction. Returns (delta = theta_H - theta_0, final params, mean loss).
     """
-    grad_fn = jax.grad(lambda p, b: loss_fn(p, b)[0])
+    # one fused forward+backward per step: value_and_grad reuses the
+    # primal for the logged loss instead of a second forward pass (the
+    # extra pass showed up as a per-round outlier in bench_algorithms)
+    vg_fn = jax.value_and_grad(lambda p, b: loss_fn(p, b)[0])
     vel0 = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
 
     def step(carry, batch):
         p, vel = carry
-        g = grad_fn(p, batch)
-        loss = loss_fn(p, batch)[0]
+        loss, g = vg_fn(p, batch)
         if extra_grad is not None:
             g = jax.tree.map(lambda gg, e: gg.astype(jnp.float32) + e,
                              g, extra_grad(p))

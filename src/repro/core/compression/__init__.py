@@ -11,11 +11,13 @@ from repro.core.compression.sparsify import (  # noqa: F401
 from repro.core.compression.quantize import (  # noqa: F401
     qsgd, ternary, sign_compress, scaled_sign, blockwise_scaled_sign)
 from repro.core.compression.error_feedback import (  # noqa: F401
-    ef_compress, init_error_state, tree_ef_compress, tree_init_error)
+    SparseEF, densify_rows, ef_compress, init_error_state, init_sparse_error,
+    sparsify_rows, tree_ef_compress, tree_init_error)
 from repro.core.compression.coding import (  # noqa: F401
     encode_positions, decode_positions, elias_gamma_bits, elias_gamma_bits_jax,
     sparse_bits_jax, sparse_message_bits)
 from repro.core.compression.registry import (  # noqa: F401
-    CompressionParams, compression_params, compressor_names,
-    default_compression_params, get_compressor, stack_compression_params,
+    KERNEL_DISPATCH_MIN_ELEMS, CompressionParams, compression_params,
+    compressor_names, default_compression_params, get_compressor,
+    kernel_dispatch, rows_compressor, stack_compression_params,
     uplink_bits_jax)

@@ -7,15 +7,59 @@ Generic over any compressor ``comp(x) -> (compressed, meta)``; works on flat
 arrays or whole gradient pytrees (leaf-wise). The same wrapper implements the
 PS-side (downlink) EF of Alg. 3 lines 16-20 — it is the identical recursion
 applied to the aggregated message.
+
+Fleet-scale state: :class:`SparseEF` stores the per-client EF matrix as
+``(N, S)`` top-magnitude (value, index) pairs instead of a dense ``(N, D)``
+matrix — O(N·S) memory for the top-k compressor family, where a handful of
+residual slots per client captures most of the EF mass. Truncation makes
+this an *approximate* EF mode (the exact eq. 21 residual of a top-k message
+is dense); the truncation is per-row, so it is exactly chunk-invariant and
+the engine's chunked/unchunked bitwise parity still holds within the mode.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 Compressor = Callable[[jnp.ndarray], Tuple[jnp.ndarray, Any]]
+
+
+class SparseEF(NamedTuple):
+    """Top-S sparse EF state: per row, S (value, index) pairs."""
+    values: jnp.ndarray    # (N, S) state dtype (fp32 or bf16)
+    indices: jnp.ndarray   # (N, S) int32 coordinates into the D-dim message
+
+
+def init_sparse_error(n: int, d: int, slots: int,
+                      dtype=jnp.float32) -> SparseEF:
+    if not 1 <= slots <= d:
+        raise ValueError(f"sparse EF needs 1 <= slots <= d, got "
+                         f"slots={slots}, d={d}")
+    return SparseEF(jnp.zeros((n, slots), dtype),
+                    jnp.zeros((n, slots), jnp.int32))
+
+
+def densify_rows(ef: SparseEF, d: int) -> jnp.ndarray:
+    """(N, S) sparse EF -> dense (N, D) fp32 (scatter per row)."""
+    def one(vals, idx):
+        return jnp.zeros(d, jnp.float32).at[idx].set(vals.astype(jnp.float32))
+    return jax.vmap(one)(ef.values, ef.indices)
+
+
+def sparsify_rows(resid: jnp.ndarray, slots: int, dtype=jnp.float32
+                  ) -> SparseEF:
+    """Dense (N, D) residual -> top-|.| (N, S) sparse EF (truncated).
+
+    Per-row ``lax.top_k`` on |resid|, so the result depends only on each
+    row's own values — chunk-invariant by construction.
+    """
+    def one(r):
+        _, idx = jax.lax.top_k(jnp.abs(r), slots)
+        return r[idx].astype(dtype), idx.astype(jnp.int32)
+    vals, idx = jax.vmap(one)(resid.astype(jnp.float32))
+    return SparseEF(vals, idx)
 
 
 def init_error_state(x: jnp.ndarray) -> jnp.ndarray:

@@ -181,6 +181,70 @@ def compressor_names() -> Tuple[str, ...]:
     return tuple(_REGISTRY)
 
 
+# ---------------------------------------------------------------------------
+# Batched row compression (the engine's chunked client pass) + kernel dispatch
+# ---------------------------------------------------------------------------
+# Above this many total elements (full client pass N * D, NOT the per-chunk
+# block size — so chunked and unchunked runs of the same problem take the
+# same code path), kernel-backed operators route to the repro.kernels row
+# APIs: real Pallas on TPU, the compiled-jnp kernel mirror elsewhere
+# (pl.pallas_call(interpret=False) is TPU-only in this jax build). Below the
+# threshold the vmapped registry operator wins — kernel padding/dispatch
+# overhead isn't worth it on toy messages.
+KERNEL_DISPATCH_MIN_ELEMS = 1 << 20
+_KERNEL_BACKED = ("topk", "qsgd", "scaled_sign")
+
+
+def kernel_dispatch(name: str, total_elems: int) -> bool:
+    """Static (trace-time) decision: does this operator run on the kernel
+    row path for a client pass of ``total_elems`` = N * D elements?"""
+    return name in _KERNEL_BACKED and total_elems >= KERNEL_DISPATCH_MIN_ELEMS
+
+
+def rows_compressor(name: str, total_elems: int = 0, *,
+                    kernel_mode: str | None = None) -> Callable:
+    """Batched compressor over client rows: ``(cparams, keys (B, 2),
+    rows (B, D)) -> (compressed (B, D), bits (B,))``.
+
+    ``keys`` must be per-*client* keys (``fold_in(key, client_id)``), so the
+    result of row i never depends on which rows share its batch — the
+    chunk-invariance contract of the fleet engine. Kernel-backed operators
+    (top-k bisection, QSGD, scaled-sign) dispatch to ``repro.kernels`` when
+    :func:`kernel_dispatch` fires; ``kernel_mode`` forces the kernel path's
+    execution mode ("pallas"/"interpret"/"jit", see kernels.ops) for
+    benchmarks and tests.
+    """
+    op = get_compressor(name)  # validates the name up front
+    if not kernel_dispatch(name, total_elems):
+        return jax.vmap(op, in_axes=(None, 0, 0))
+    from repro.kernels import ops as kernel_ops  # deferred: keep core import-light
+
+    if name == "topk":
+        def rows_fn(cp, keys, rows):
+            d = rows.shape[1]
+            nnz = _nnz(cp.k, d)
+            comp = kernel_ops.topk_rows(rows, nnz, mode=kernel_mode)
+            bits = jnp.broadcast_to(sparse_bits_jax(d, nnz), (rows.shape[0],))
+            return comp, bits
+    elif name == "qsgd":
+        def rows_fn(cp, keys, rows):
+            u = jax.vmap(lambda k: jax.random.uniform(
+                k, (rows.shape[1],), jnp.float32))(keys)
+            comp = kernel_ops.qsgd_rows(rows, u, cp.levels, mode=kernel_mode)
+            bits = jnp.broadcast_to(
+                uplink_bits_jax("qsgd", cp, rows.shape[1]), (rows.shape[0],))
+            return comp, bits
+    else:  # scaled_sign (the EF-fused variant lives in fl_round)
+        def rows_fn(cp, keys, rows):
+            comp, _ = kernel_ops.sign_ef_rows(
+                rows, jnp.zeros_like(rows, jnp.float32), mode=kernel_mode)
+            bits = jnp.broadcast_to(
+                uplink_bits_jax("scaled_sign", cp, rows.shape[1]),
+                (rows.shape[0],))
+            return comp, bits.astype(jnp.float32)
+    return rows_fn
+
+
 def uplink_bits_jax(name: str, cp: CompressionParams, d: int) -> jnp.ndarray:
     """Bits-on-the-wire for one d-dimensional message — the engine's pricing
     model. Data-independent, so it equals the ``bits`` the compressor itself

@@ -1,3 +1,5 @@
 from repro.data.synthetic import SyntheticLMDataset  # noqa: F401
 from repro.data.partition import dirichlet_partition, shard_partition  # noqa: F401
 from repro.data.pipeline import FederatedLoader, batch_iterator  # noqa: F401
+from repro.data.ondevice import (  # noqa: F401
+    make_linear_datagen, make_token_datagen)

@@ -1,0 +1,97 @@
+"""On-device synthetic batch generators for the fleet-scale engine.
+
+At fleet scale, pre-materializing every round's client batches
+(:func:`repro.fl.runtime.stack_batches`, O(rounds * N * H * B) device
+memory) dominates the simulation footprint long before the model does. A
+``SimConfig.datagen`` replaces the stacked pytree with a pure function
+
+    ``datagen(key, ids) -> pytree with (len(ids), H, ...) leaves``
+
+evaluated *inside* the compiled program, one chunk of clients at a time —
+data residency drops to O(chunk * H * B) regardless of rounds or fleet
+size. ``stack_batches`` remains the small-N parity path: materializing
+``datagen(datagen_round_key(seed, t), arange(N))`` for every round and
+feeding it as the stacked pytree reproduces the datagen run bit for bit.
+
+Contract (chunk-invariance): row ``i`` of the output may depend only on
+``(key, ids[i])`` — never on the batch size or on which other ids share the
+call. Generators here guarantee that by deriving one
+``fold_in(key, client_id)`` key per row (``core.chunking.client_keys``) and
+vmapping a per-client sampler over the keys.
+
+The data ``seed`` argument of the factories below is a plain sweep axis:
+factories with different seeds produce distinct generator *identities*
+(distinct engine-cache keys), so a data-seed study iterates factories in
+Python exactly like a policy or compressor-name axis.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import chunking
+
+
+def make_linear_datagen(w_star: jnp.ndarray, *, local_steps: int = 2,
+                        batch: int = 8, noise: float = 0.01,
+                        seed: Optional[int] = None) -> Callable:
+    """Noisy-linear-regression batches toward a fixed ``w_star`` — the
+    on-device twin of ``benchmarks.common.make_linear_problem``'s host
+    sampler. Returns ``datagen(key, ids) -> {"x": (n, H, B, d),
+    "y": (n, H, B)}``.
+
+    ``seed`` (optional) folds a data-stream tag into every key, so two
+    generators with different seeds draw disjoint fleets from the same
+    engine randomness — the data seed becomes a sweep axis.
+    """
+    w_star = jnp.asarray(w_star, jnp.float32)
+    d = w_star.shape[0]
+
+    def sample_one(k: jax.Array) -> Dict[str, jnp.ndarray]:
+        kx, kn = jax.random.split(k)
+        x = jax.random.normal(kx, (local_steps, batch, d), jnp.float32)
+        y = (x @ w_star
+             + noise * jax.random.normal(kn, (local_steps, batch),
+                                         jnp.float32))
+        return {"x": x, "y": y}
+
+    def datagen(key: jax.Array, ids: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        if seed is not None:
+            key = jax.random.fold_in(key, seed)
+        return jax.vmap(sample_one)(chunking.client_keys(key, ids))
+
+    return datagen
+
+
+def make_token_datagen(vocab: int, *, local_steps: int = 2, batch: int = 16,
+                       seq: int = 16, n_classes: int = 4,
+                       seed: Optional[int] = None) -> Callable:
+    """Uniform-token LM batches shaped like ``SyntheticLMDataset`` rows
+    (``tokens`` (n, H, B, S) int32, ``labels`` (n, H, B, S) int32), with a
+    per-client class id skewing the token marginals — a light-weight
+    non-iid stand-in for the Dirichlet-partitioned host loader at fleet
+    scale. Returns ``datagen(key, ids)``.
+    """
+    def sample_one(k: jax.Array, cid: jnp.ndarray
+                   ) -> Dict[str, jnp.ndarray]:
+        kt, kl = jax.random.split(k)
+        # class-conditional token bias: client class c prefers the token
+        # band [c * vocab / n_classes, (c + 1) * vocab / n_classes)
+        lo = (cid * vocab) // n_classes
+        band = vocab // n_classes
+        in_band = jax.random.bernoulli(kl, 0.5, (local_steps, batch, seq))
+        toks = jax.random.randint(kt, (local_steps, batch, seq), 0, vocab)
+        toks = jnp.where(in_band, lo + jnp.mod(toks, band), toks)
+        labels = jnp.roll(toks, -1, axis=-1)  # next-token targets
+        return {"tokens": toks.astype(jnp.int32),
+                "labels": labels.astype(jnp.int32)}
+
+    def datagen(key: jax.Array, ids: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        if seed is not None:
+            key = jax.random.fold_in(key, seed)
+        cids = jnp.mod(ids, n_classes)
+        return jax.vmap(sample_one)(chunking.client_keys(key, ids), cids)
+
+    return datagen

@@ -67,7 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import scheduling, wireless
+from repro.core import chunking, scheduling, wireless
 from repro.core.algorithms import registry as algo_registry
 from repro.core.algorithms.registry import (AlgoParams, algo_params,
                                             stack_algo_params)
@@ -83,11 +83,28 @@ PyTree = Any
 # and benchmarks can assert the no-retrace property of the engine cache.
 ENGINE_STATS = {"traces": 0}
 
+# domain-separation constant for the on-device data stream: the round key
+# kt already feeds five consumers (fading/compute/policy/norms/compression),
+# so the datagen key is a fold_in of kt under this tag — adding a datagen
+# never shifts the engine's other randomness.
+DATAGEN_FOLD = 0x0DA7A
+
+
+def datagen_round_key(seed: int, t: int) -> jax.Array:
+    """The key the scan engine hands ``SimConfig.datagen`` on round ``t`` of
+    a run with ``SimConfig.seed == seed`` — so hosts/tests can rebuild any
+    round's on-device batches exactly (``datagen(key, ids)``)."""
+    _, k_rounds = jax.random.split(jax.random.PRNGKey(seed))
+    return jax.random.fold_in(jax.random.fold_in(k_rounds, t), DATAGEN_FOLD)
+
 
 @dataclasses.dataclass
 class SimConfig:
     n_devices: int = 40
-    n_scheduled: int = 8
+    # scheduling budget: one global int on the flat engine; on the
+    # hierarchical engine (run_hfl) it is the *per-cluster* budget and may
+    # be a tuple with one entry per cluster (heterogeneous cell budgets)
+    n_scheduled: Any = 8
     rounds: int = 100
     local_steps: int = 1
     # first-class algorithm: a registry *name* (static, engine-cache key)
@@ -108,12 +125,42 @@ class SimConfig:
     compression: str = "none"
     compression_params: Optional[CompressionParams] = None
     double_ef: bool = False          # downlink (PS-side) EF too (Alg. 3/6)
+    # fleet-scale engine knobs: process clients in power-of-two blocks of
+    # chunk_size inside the round (peak temp memory O(chunk*D), bitwise
+    # parity with the unchunked pass); generate client batches on device
+    # (datagen(key, ids) -> (len(ids), H, ...) leaves — row i must depend
+    # only on (key, ids[i])); store per-client message-space state sparsely
+    # (top-k family) and/or in bf16.
+    chunk_size: Optional[int] = None
+    ef_mode: str = "dense"               # "dense" | "sparse" (O(N*slots))
+    ef_slots: Optional[int] = None       # sparse-EF slots (default d // 50)
+    state_dtype: str = "float32"         # "float32" | "bfloat16" EF/ctrl
+    datagen: Optional[Callable] = None   # on-device per-client batch source
     # deprecated (one release): stringly-typed spellings, mapped onto
     # algorithm/algo_params by __post_init__ with a DeprecationWarning
     lr: Optional[float] = None
     server: Optional[str] = None
 
     def __post_init__(self):
+        if isinstance(self.n_scheduled, list):
+            self.n_scheduled = tuple(self.n_scheduled)
+        if self.chunk_size is not None and not chunking.is_pow2(
+                self.chunk_size):
+            raise ValueError(f"SimConfig.chunk_size must be a power of two "
+                             f"(canonical-tree alignment), got "
+                             f"{self.chunk_size}")
+        if self.ef_mode not in ("dense", "sparse"):
+            raise ValueError(f"unknown ef_mode {self.ef_mode!r}; use "
+                             "'dense'/'sparse'")
+        if self.ef_mode == "sparse" and self.compression not in (
+                "topk", "randk", "rtopk"):
+            raise ValueError(
+                "ef_mode='sparse' stores a truncated top-|slots| residual, "
+                "which only approximates EF for the sparsifying compressor "
+                f"family (topk/randk/rtopk), not {self.compression!r}")
+        if self.state_dtype not in ("float32", "bfloat16"):
+            raise ValueError(f"unknown state_dtype {self.state_dtype!r}; "
+                             "use 'float32'/'bfloat16'")
         if self.server is not None:
             mapped = algo_registry.from_server_name(self.server)
             warnings.warn(
@@ -210,22 +257,38 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
     ``(init_carry, make_step, engine)``; ``engine`` is the full scanned run.
     """
     n = cfg.n_devices
+    if isinstance(cfg.n_scheduled, tuple):
+        raise ValueError(
+            "per-cluster n_scheduled tuples are a hierarchical-engine "
+            "feature (run_hfl); the flat engine takes one global budget")
     pcfg = _policy_cfg(cfg, wcfg)
     policy_fn = scheduling.get_policy(cfg.policy)
     algo = algo_registry.get_algorithm(cfg.algorithm)
     comp_active = cfg.compression != "none"
     compress_fn = (compression.get_compressor(cfg.compression)
                    if comp_active else None)
-    round_fn = functools.partial(fl_server.fl_round, loss_fn=loss_fn,
-                                 algo=algo)
+    # chunk >= N degenerates to the unchunked pass (and would otherwise
+    # change the canonical padding); per-client state rows pad to the
+    # chunk-aligned count so the scan can reshape them into (m, chunk, ...)
+    chunk = (cfg.chunk_size
+             if cfg.chunk_size is not None and cfg.chunk_size < n else None)
+    n_rows = chunking.n_blocks(n, chunk) * chunk if chunk else n
+    state_dt = (jnp.bfloat16 if cfg.state_dtype == "bfloat16"
+                else jnp.float32)
+    round_fn = functools.partial(
+        fl_server.fl_round, loss_fn=loss_fn, algo=algo,
+        compression_name=(cfg.compression if comp_active else None),
+        chunk_size=chunk, n_clients=n)
 
     def init_carry(init_params):
         # message-space state rides in the scan carry (inside FLState): the
-        # flat (N, D) EF matrix and, for control-variate algorithms, the
-        # flat (N, D) ctrl matrix + (D,) server control variate.
+        # flat (n_rows, D) EF matrix (dense/SparseEF, fp32/bf16) and, for
+        # control-variate algorithms, the (n_rows, D) ctrl matrix + (D,)
+        # server control variate.
         state0 = fl_server.init_fl_state(
             init_params, n, algo=algo, use_ef=comp_active,
-            double_ef=comp_active and cfg.double_ef)
+            double_ef=comp_active and cfg.double_ef, ef_mode=cfg.ef_mode,
+            ef_slots=cfg.ef_slots, state_dtype=state_dt, n_rows=n_rows)
         state0 = dataclasses.replace(state0, round=jnp.int32(0))
         return (state0, jnp.float32(0.0), jnp.zeros(n, jnp.float32),
                 jnp.ones(n, jnp.float32), jnp.zeros(n, jnp.float32))
@@ -238,6 +301,11 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
             t, batches = xs
             kt = jax.random.fold_in(k_rounds, t)
             kf, kc, kp, kn, kz = jax.random.split(kt, 5)
+            if cfg.datagen is not None:
+                # per-round data key, derived only on the datagen path so
+                # pre-stacked runs keep their exact randomness stream
+                kd = jax.random.fold_in(kt, DATAGEN_FOLD)
+                batches = functools.partial(cfg.datagen, kd)
 
             fading = wireless.sample_fading_jax(kf, n)
             snr_lin = wireless.snr_jax(dist, fading, chan)
@@ -324,7 +392,9 @@ def _engine_key(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
     return (tag, cfg.policy, cfg.rounds, cfg.n_devices, cfg.n_scheduled,
             cfg.model_bits, cfg.comp_latency_s, cfg.deadline_s,
             cfg.age_alpha, cfg.algorithm, cfg.compression, cfg.double_ef,
-            wcfg.n_subchannels, wcfg.bandwidth_hz, loss_fn, has_eval)
+            cfg.chunk_size, cfg.ef_mode, cfg.ef_slots, cfg.state_dtype,
+            cfg.datagen, wcfg.n_subchannels, wcfg.bandwidth_hz, loss_fn,
+            has_eval)
 
 
 _ENGINE_CACHE: Dict[Tuple, Callable] = {}
@@ -383,15 +453,20 @@ def _get_host_step(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
 
 
 def run_simulation_scan(cfg: SimConfig, loss_fn, init_params: PyTree,
-                        batches: PyTree, *,
+                        batches: Optional[PyTree] = None, *,
                         eval_batch: Optional[Dict[str, jnp.ndarray]] = None,
                         wcfg: Optional[wireless.WirelessConfig] = None
                         ) -> Tuple[PyTree, SimLogs]:
     """Run ``cfg.rounds`` rounds as a single compiled ``lax.scan`` call.
 
     ``batches``: pytree with leading ``(rounds, n_devices, H, ...)`` leaves
-    (see :func:`stack_batches`). Returns (final params, stacked logs).
+    (see :func:`stack_batches`), or ``None`` when ``cfg.datagen`` generates
+    batches on device (O(chunk) data residency instead of O(rounds * N)).
+    Returns (final params, stacked logs).
     """
+    if batches is None and cfg.datagen is None:
+        raise ValueError("run_simulation_scan needs batches= (stack_batches) "
+                         "or a SimConfig.datagen")
     wcfg = wcfg or wireless.WirelessConfig(n_devices=cfg.n_devices)
     engine = _get_engine(cfg, wcfg, loss_fn, eval_batch is not None)
     key = jax.random.PRNGKey(cfg.seed)
@@ -444,7 +519,9 @@ def run_simulation(cfg: SimConfig, loss_fn, init_params: PyTree,
         return _run_simulation_host(cfg, loss_fn, init_params,
                                     sample_client_batches, eval_fn,
                                     eval_batch, wcfg)
-    batches = stack_batches(sample_client_batches, cfg.rounds, cfg.n_devices)
+    batches = (None if cfg.datagen is not None else
+               stack_batches(sample_client_batches, cfg.rounds,
+                             cfg.n_devices))
     _, logs = run_simulation_scan(cfg, loss_fn, init_params, batches,
                                   eval_batch=eval_batch, wcfg=wcfg)
     return logs.to_round_logs()
@@ -468,7 +545,8 @@ def _run_simulation_host(cfg: SimConfig, loss_fn, init_params: PyTree,
     carry = init_carry(init_params)
     logs: List[RoundLog] = []
     for t in range(cfg.rounds):
-        bt = sample_client_batches(t, cfg.n_devices)
+        bt = (None if cfg.datagen is not None
+              else sample_client_batches(t, cfg.n_devices))
         carry, (loss, clock, mask, nsched, ubits, comm_s, comp_s) = step(
             chan, cparams, aparams, dist, k_rounds, eval_batch, carry,
             (jnp.int32(t), bt))
@@ -615,6 +693,12 @@ def _check_hfl_config(cfg: SimConfig) -> None:
             "downlink to carry server-side EF state — each SBS broadcasts "
             "its raw cluster model. Drop double_ef (uplink EF still "
             "applies) or use the flat engine.")
+    if (cfg.chunk_size is not None or cfg.datagen is not None
+            or cfg.ef_mode != "dense" or cfg.state_dtype != "float32"):
+        raise ValueError(
+            "run_hfl does not support the fleet-scale knobs (chunk_size/"
+            "datagen/ef_mode='sparse'/state_dtype='bfloat16'); they live on "
+            "the flat engine, whose N is the fleet-scale axis")
 
 
 def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
@@ -651,7 +735,18 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
     n = cfg.n_devices
     n_clusters = hcfg.n_clusters
     period = hcfg.inter_cluster_period
-    pcfg = _policy_cfg(cfg, wcfg)
+    # cfg.n_scheduled is the per-cluster budget: one int shared by every
+    # cluster, or a tuple giving each cluster its own (static) budget
+    per_cluster_k = isinstance(cfg.n_scheduled, tuple)
+    if per_cluster_k and len(cfg.n_scheduled) != n_clusters:
+        raise ValueError(
+            f"per-cluster n_scheduled needs one budget per cluster "
+            f"({n_clusters}), got {len(cfg.n_scheduled)}")
+    ks = (tuple(cfg.n_scheduled) if per_cluster_k
+          else (cfg.n_scheduled,) * n_clusters)
+    pcfg = _policy_cfg(
+        dataclasses.replace(cfg, n_scheduled=ks[0]) if per_cluster_k
+        else cfg, wcfg)
     policy_fn = scheduling.get_policy(cfg.policy)
     _check_hfl_config(cfg)
     algo = algo_registry.get_algorithm(cfg.algorithm)
@@ -689,8 +784,14 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
             # --- channel draw + intra-cluster uplink pricing -------------
             fading = wireless.sample_fading_jax(kf, n)
             snr_lin = wireless.snr_jax(dist, fading, chan_dev)
-            rates = wireless.shannon_rate_jax(
-                snr_lin, chan_dev.bandwidth_hz / cfg.n_scheduled)
+            if per_cluster_k:
+                # each device shares its own cell's uplink budget
+                ks_dev = jnp.asarray(ks, jnp.float32)[cluster_ids]
+                rates = wireless.shannon_rate_jax(
+                    snr_lin, chan_dev.bandwidth_hz / ks_dev)
+            else:
+                rates = wireless.shannon_rate_jax(
+                    snr_lin, chan_dev.bandwidth_hz / cfg.n_scheduled)
             comp_lat = cfg.comp_latency_s * jax.random.exponential(kc, (n,))
             d_model = fl_server.flat_dim(gm)
             payload_scale = cfg.model_bits / (32.0 * d_model)
@@ -710,9 +811,43 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
                 comm_lat=comm_lat, comp_lat=comp_lat, ages=ages,
                 update_norms=norms)
             keys_l = jax.random.split(kp, n_clusters)
-            k_sched = cfg.n_scheduled
+            k_sched = ks[0]
 
-            if cfg.policy == "random":
+            if per_cluster_k:
+                # heterogeneous budgets: each cluster's k_l is *static*
+                # (policies compile the budget in — topk_mask_jax slices
+                # [:k]), so the per-cluster masks unroll in a Python loop
+                # over the (static) cluster count instead of one vmap
+                if cfg.policy == "round_robin":
+                    rank_pc = jnp.cumsum(member_f, axis=1) - 1.0    # (L, N)
+
+                def sched_cluster(l, m, key_l):
+                    k_l = ks[l]
+                    if cfg.policy == "random":
+                        score = jnp.where(m, jax.random.uniform(key_l, (n,)),
+                                          -jnp.inf)
+                        return scheduling.topk_mask_jax(score, k_l) & m
+                    if cfg.policy == "round_robin":
+                        g_l = jnp.maximum(
+                            jnp.floor(cluster_sizes[l] / k_l), 1.0)
+                        g = jnp.mod(jnp.float32(t), g_l)
+                        r = rank_pc[l]
+                        return m & (r >= g * k_l) & (r < (g + 1) * k_l)
+                    stl = rstate._replace(
+                        key=key_l,
+                        snr_lin=jnp.where(m, snr_lin, 0.0),
+                        avg_snr=jnp.where(m, avg_snr, 1.0),
+                        rates=jnp.where(m, rates, 1e-9),
+                        comm_lat=jnp.where(m, comm_lat, jnp.inf),
+                        comp_lat=jnp.where(m, comp_lat, jnp.inf),
+                        update_norms=jnp.where(m, norms, 0.0))
+                    pcfg_l = dataclasses.replace(pcfg, n_scheduled=k_l)
+                    return policy_fn(pcfg_l, stl) & m
+
+                masks_l = jnp.stack([
+                    sched_cluster(l, member[l], keys_l[l])
+                    for l in range(n_clusters)])
+            elif cfg.policy == "random":
                 # cluster-aware twin of the registry policy: a random
                 # k-subset of *each cluster's members* (the global
                 # permutation's semantics don't factor through the masked
@@ -746,10 +881,12 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
                         update_norms=jnp.where(m, norms, 0.0))
                     return policy_fn(pcfg, stl) & m
 
-            if cfg.policy == "round_robin":
-                masks_l = jax.vmap(sched_one)(member, keys_l, rank, n_groups)
-            else:
-                masks_l = jax.vmap(sched_one)(member, keys_l)
+            if not per_cluster_k:
+                if cfg.policy == "round_robin":
+                    masks_l = jax.vmap(sched_one)(member, keys_l, rank,
+                                                  n_groups)
+                else:
+                    masks_l = jax.vmap(sched_one)(member, keys_l)
             mask = jnp.any(masks_l, axis=0)
             ages = scheduling.update_ages_jax(ages, mask)
             mask_f = mask.astype(jnp.float32)
@@ -993,7 +1130,10 @@ def run_hfl(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
     configuration (one entry per cluster — radiometric fields like tx
     power/path loss/bandwidth; device->SBS distances come from the
     ``hcfg`` hex geometry, so ``cell_radius_m`` is inert here).
-    ``cfg.n_scheduled`` is the *per-cluster* scheduling budget.
+    ``cfg.n_scheduled`` is the *per-cluster* scheduling budget — one int
+    shared by every cluster, or a tuple with one budget per cluster
+    (heterogeneous cells; each entry also sets that cell's uplink
+    bandwidth split).
     """
     if engine not in (None, "scan", "host"):
         raise ValueError(f"unknown engine {engine!r}; use 'scan' or 'host'")

@@ -24,11 +24,15 @@ from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core import aggregation as agg
+from repro.core import chunking
 from repro.core.algorithms import registry as algorithms
 from repro.core.algorithms.registry import Algorithm, AlgoParams
+from repro.core.compression import error_feedback
 from repro.core.compression import registry as compression_lib
+from repro.core.compression.error_feedback import SparseEF
 from repro.core.compression.registry import CompressionParams, CompressorFn
 
 PyTree = Any
@@ -62,7 +66,7 @@ def flatten_clients(tree: PyTree) -> Tuple[jnp.ndarray, Callable]:
 @dataclasses.dataclass
 class FLState:
     params: PyTree
-    client_error: Optional[jnp.ndarray]   # (N, D) uplink EF state, or None
+    client_error: Any  # (N, D) uplink EF matrix | SparseEF (N, S) | None
     server_error: Optional[jnp.ndarray]   # (D,) downlink EF state, or None
     server_opt: Any    # algorithm server state: SlowMoState | ServerOptState
     #                    | (D,) SCAFFOLD server control variate | None
@@ -70,24 +74,50 @@ class FLState:
     round: int = 0
 
 
+def default_ef_slots(d: int) -> int:
+    """Default sparse-EF slot count: 2x the default 1% top-k budget, so the
+    truncated residual has headroom around the kept coordinates."""
+    return min(d, max(1, d // 50))
+
+
 def init_fl_state(params: PyTree, n_clients: int, *,
                   algo: Union[str, Algorithm] = "fedavg",
                   use_ef: bool = False, double_ef: bool = False,
-                  server: Optional[str] = None) -> FLState:
-    """``use_ef`` allocates the flat (N, D) client EF matrix, ``double_ef``
-    the (D,) downlink EF vector; the algorithm decides its own server state
-    and whether an (N, D) control-variate matrix joins the carry."""
+                  server: Optional[str] = None, ef_mode: str = "dense",
+                  ef_slots: Optional[int] = None, state_dtype=jnp.float32,
+                  n_rows: Optional[int] = None) -> FLState:
+    """``use_ef`` allocates the per-client EF state, ``double_ef`` the (D,)
+    downlink EF vector; the algorithm decides its own server state and
+    whether an (N, D) control-variate matrix joins the carry.
+
+    Fleet-scale knobs: ``ef_mode="sparse"`` stores the EF matrix as a
+    :class:`SparseEF` of ``ef_slots`` (value, index) pairs per client
+    (O(N·S), top-k compressor family); ``state_dtype`` (fp32/bf16) is the
+    storage dtype of the message-space client state (EF values and SCAFFOLD
+    control variates — compute stays fp32); ``n_rows`` over-allocates the
+    per-client state to the chunk-padded row count of the chunked client
+    pass (defaults to ``n_clients``)."""
     if server is not None:
         warnings.warn(
             "init_fl_state(server=...) is deprecated; pass algo="
             "<algorithm registry name> instead", DeprecationWarning,
             stacklevel=2)
         algo = algorithms.from_server_name(server)
+    if ef_mode not in ("dense", "sparse"):
+        raise ValueError(f"unknown ef_mode {ef_mode!r}; use 'dense'/'sparse'")
     a = algorithms.get_algorithm(algo)
     d = flat_dim(params)
-    client_error = (jnp.zeros((n_clients, d), jnp.float32) if use_ef else None)
+    rows = n_clients if n_rows is None else n_rows
+    if use_ef and ef_mode == "sparse":
+        slots = default_ef_slots(d) if ef_slots is None else ef_slots
+        client_error = error_feedback.init_sparse_error(rows, d, slots,
+                                                        state_dtype)
+    elif use_ef:
+        client_error = jnp.zeros((rows, d), state_dtype)
+    else:
+        client_error = None
     server_error = jnp.zeros(d, jnp.float32) if double_ef else None
-    ctrl = jnp.zeros((n_clients, d), jnp.float32) if a.uses_ctrl else None
+    ctrl = jnp.zeros((rows, d), state_dtype) if a.uses_ctrl else None
     return FLState(params, client_error, server_error,
                    a.init_algo_state(params), ctrl, 0)
 
@@ -133,83 +163,196 @@ def _resolve_algo(algo, aparams, lr, server, server_lr, slowmo_beta, momentum
                else algorithms.default_algo_params())
 
 
-def fl_round(state: FLState, stacked_batches: Dict[str, jnp.ndarray],
-             loss_fn, *, algo: Union[str, Algorithm] = "fedavg",
+def fl_round(state: FLState, stacked_batches, loss_fn, *,
+             algo: Union[str, Algorithm] = "fedavg",
              aparams: Optional[AlgoParams] = None,
              participation: Optional[jnp.ndarray] = None,
              compress_fn: Optional[CompressorFn] = None,
              cparams: Optional[CompressionParams] = None,
              key: Optional[jax.Array] = None,
+             compression_name: Optional[str] = None,
+             chunk_size: Optional[int] = None,
+             n_clients: Optional[int] = None,
              lr=None, server=None, server_lr=None, slowmo_beta=None,
              momentum=None) -> Tuple[FLState, Dict[str, jnp.ndarray]]:
-    """One FL round. stacked_batches leaves: (N, H, ...).
+    """One FL round.
+
+    ``stacked_batches``: a pytree with (N, H, ...) leaves, or a callable
+    ``ids -> pytree`` with (len(ids), H, ...) leaves (on-device data
+    generation; requires ``n_clients``). ``chunk_size`` (a power of two)
+    processes clients in blocks via a ``lax.scan`` — peak temporary memory
+    O(chunk·D) instead of O(N·D) — and is *bitwise* equivalent to the
+    unchunked pass: every cross-client reduction goes through the canonical
+    pairwise tree (``core.chunking.canonical_sum``) and all per-client
+    randomness is keyed by ``fold_in(key, client_id)``, both invariant to
+    how clients are batched. The bitwise guarantee holds when both rounds
+    run under ``jax.jit`` (the engine always does): eagerly, XLA
+    constant-folds transcendentals (e.g. QSGD's ``log2``) with a different
+    evaluator than the compiled scan program, costing the last ulp. With
+    ``chunk_size`` the per-client state (EF/ctrl) must be allocated with
+    ``init_fl_state(n_rows=ceil(N/chunk) * chunk)``.
 
     The algorithm *name* is static; every hyperparameter rides the traced
     ``aparams`` (a vmappable sweep axis). Registry compression
     (``compress_fn``/``cparams``/``key``) flattens each client's delta into
-    one message, applies EF in message space, and reports the
+    one message, applies EF in message space (dense, or truncated-sparse /
+    bf16 when the state was allocated that way), and reports the
     participation-weighted ``metrics["uplink_bits"]`` — control-variate
     algorithms uplink a second message-sized payload (the ctrl delta), which
-    is compressed and billed the same way. The old ``lr=``/``server=``/
-    ``server_lr=``/``slowmo_beta=``/``momentum=`` kwargs are deprecated and
-    map onto the registry for one release.
+    is compressed and billed the same way. Passing ``compression_name``
+    routes large client passes (``N·D >= registry.KERNEL_DISPATCH_MIN_ELEMS``)
+    through the kernel row APIs (real Pallas on TPU). The old ``lr=``/
+    ``server=``/``server_lr=``/``slowmo_beta=``/``momentum=`` kwargs are
+    deprecated and map onto the registry for one release.
     """
     a, ap = _resolve_algo(algo, aparams, lr, server, server_lr, slowmo_beta,
                           momentum)
-
-    # --- client updates (vmapped over the client axis, Alg. 7 line 4) -----
-    if a.uses_ctrl:
-        c_tree = algorithms.unflatten_vec(state.server_opt, state.params)
-        ci_tree = algorithms.unflatten_rows(state.ctrl, state.params)
-
-        def one(p, b, ci):
-            return a.client_update(loss_fn, ap, p, b, (ci, c_tree))
-
-        deltas, ctrl_deltas, losses = jax.vmap(one, in_axes=(None, 0, 0))(
-            state.params, stacked_batches, ci_tree)
-        ctrl_flat, _ = flatten_clients(ctrl_deltas)  # (N, D) message space
+    batch_fn = stacked_batches if callable(stacked_batches) else None
+    if batch_fn is not None:
+        if n_clients is None:
+            raise ValueError("fl_round needs n_clients= when batches come "
+                             "from a callable (on-device) generator")
+        n = n_clients
     else:
-        def one(p, b):
-            return a.client_update(loss_fn, ap, p, b, None)
+        n = jax.tree.leaves(stacked_batches)[0].shape[0]
+    d = flat_dim(state.params)
+    comp_active = compress_fn is not None
 
-        deltas, _, losses = jax.vmap(one, in_axes=(None, 0))(
-            state.params, stacked_batches)
-        ctrl_flat = None
+    ef = state.client_error
+    sparse_ef = isinstance(ef, SparseEF)
+    if sparse_ef:
+        state_dt, ef_slots = ef.values.dtype, ef.values.shape[1]
+    else:
+        state_dt, ef_slots = (ef.dtype if ef is not None else jnp.float32), 0
 
-    # --- client-side compression with error feedback (Alg. 6 lines 8-11) ---
-    # the compressor is vmapped over the client axis: each device compresses
-    # its *own* delta (per-client top-k masks, per-client scales). Every
-    # client compresses (and accrues EF error) whether or not it is
-    # scheduled; the participation mask gates aggregation only.
-    uplink_bits = None
-    client_error = state.client_error
-    ctrl_wire = ctrl_flat  # what the server receives for the ctrl update
-    if compress_fn is not None:
+    rows_fn = fused_sign = None
+    if comp_active:
         k_up, k_down, k_ctrl = jax.random.split(key, 3)
-        flat, unflatten = flatten_clients(deltas)
-        if client_error is not None:
-            flat = flat + client_error
-        keys = jax.random.split(k_up, flat.shape[0])
-        comp, bits = jax.vmap(compress_fn, in_axes=(None, 0, 0))(
-            cparams, keys, flat)
-        if client_error is not None:
-            client_error = flat - comp
-        deltas = unflatten(comp)
-        if ctrl_flat is not None:
-            # the control-variate delta is a second message on the same
-            # uplink: compressed with the same operator (no EF) and billed
-            keys_c = jax.random.split(k_ctrl, ctrl_flat.shape[0])
-            ctrl_wire, ctrl_bits = jax.vmap(compress_fn, in_axes=(None, 0, 0))(
-                cparams, keys_c, ctrl_flat)
-            bits = bits + ctrl_bits
-        uplink_bits = (jnp.sum(bits) if participation is None
-                       else jnp.sum(bits * participation))
+        if compression_name is not None:
+            # kernel dispatch keys on the FULL pass size N·D (a static,
+            # trace-time fact), never the block size — chunked and unchunked
+            # runs of one problem always take the same operator path
+            rows_fn = compression_lib.rows_compressor(compression_name, n * d)
+            fused_sign = (compression_name == "scaled_sign"
+                          and ef is not None and not sparse_ef
+                          and compression_lib.kernel_dispatch(
+                              compression_name, n * d))
+        else:
+            rows_fn = jax.vmap(compress_fn, in_axes=(None, 0, 0))
+    c_tree = (algorithms.unflatten_vec(state.server_opt, state.params)
+              if a.uses_ctrl else None)
+    part = (participation.astype(jnp.float32)
+            if participation is not None else None)
 
-    mean_delta = agg.fedavg(deltas, participation)
+    # --- one block of the client pass (Alg. 6/7 lines 4-11) ---------------
+    # Per-client work only: local updates, message flattening, EF +
+    # compression, then canonical partial sums. Every client compresses
+    # (and accrues EF error) whether or not it is scheduled; participation
+    # gates the sums only. The unchunked pass is this function called once.
+    def client_block(ids, batches_b, part_b, ef_b, ctrl_b):
+        valid = (ids < n).astype(jnp.float32)
+        if a.uses_ctrl:
+            ci_tree = algorithms.unflatten_rows(
+                ctrl_b.astype(jnp.float32), state.params)
+
+            def one(b, ci):
+                return a.client_update(loss_fn, ap, state.params, b,
+                                       (ci, c_tree))
+
+            deltas, ctrl_deltas, losses = jax.vmap(one)(batches_b, ci_tree)
+            ctrl_flat, _ = flatten_clients(ctrl_deltas)
+        else:
+            def one(b):
+                return a.client_update(loss_fn, ap, state.params, b, None)
+
+            deltas, _, losses = jax.vmap(one)(batches_b)
+            ctrl_flat = None
+        flat, _ = flatten_clients(deltas)            # (c, D) message space
+
+        new_ef_b, ctrl_wire, bits = ef_b, ctrl_flat, None
+        if comp_active:
+            keys_up = chunking.client_keys(k_up, ids)
+            if ef_b is None:
+                flat, bits = rows_fn(cparams, keys_up, flat)
+            elif fused_sign:
+                flat, e_new = _kernel_sign_ef(flat, ef_b.astype(jnp.float32))
+                new_ef_b = e_new.astype(state_dt)
+                bits = jnp.broadcast_to(compression_lib.uplink_bits_jax(
+                    "scaled_sign", cparams, d), (flat.shape[0],))
+            else:
+                e_dense = (error_feedback.densify_rows(ef_b, d) if sparse_ef
+                           else ef_b.astype(jnp.float32))
+                corrected = flat + e_dense
+                flat, bits = rows_fn(cparams, keys_up, corrected)
+                resid = corrected - flat
+                new_ef_b = (error_feedback.sparsify_rows(resid, ef_slots,
+                                                         state_dt)
+                            if sparse_ef else resid.astype(state_dt))
+            if ctrl_flat is not None:
+                # the control-variate delta is a second message on the same
+                # uplink: compressed with the same operator (no EF), billed
+                keys_c = chunking.client_keys(k_ctrl, ids)
+                ctrl_wire, cbits = rows_fn(cparams, keys_c, ctrl_flat)
+                bits = bits + cbits
+
+        w = valid if part_b is None else part_b
+        psums = {"delta": chunking.canonical_sum(flat, w),
+                 "loss": chunking.canonical_sum(losses, valid)}
+        if bits is not None:
+            psums["bits"] = chunking.canonical_sum(bits, w)
+        new_ctrl_b = ctrl_b
+        if ctrl_wire is not None:
+            psums["ctrl"] = chunking.canonical_sum(ctrl_wire, w)
+            # only scheduled clients advance their local control variate
+            new_ctrl_b = (ctrl_b.astype(jnp.float32)
+                          + ctrl_wire * w[:, None]).astype(state_dt)
+        return psums, new_ef_b, new_ctrl_b
+
+    if chunk_size is not None and chunk_size < n:
+        chunk = chunk_size
+        m = chunking.n_blocks(n, chunk)
+        npad = m * chunk
+        _check_state_rows(ef, state.ctrl, npad, "chunk_size")
+        part_pad = (None if part is None
+                    else jnp.pad(part, (0, npad - n)).reshape(m, chunk))
+        ef_blocks = _reshape_rows(ef, (m, chunk))
+        ctrl_blocks = _reshape_rows(state.ctrl, (m, chunk))
+
+        def scan_block(_, xs):
+            b, part_b, ef_b, ctrl_b = xs
+            ids = chunking.block_ids(b, chunk)
+            psums, new_ef_b, new_ctrl_b = client_block(
+                ids, batch_fn(ids) if batch_fn is not None
+                else jax.tree.map(lambda x: x[ids], stacked_batches),
+                part_b, ef_b, ctrl_b)
+            return None, (psums, new_ef_b, new_ctrl_b)
+
+        _, (psums_m, ef_m, ctrl_m) = lax.scan(
+            scan_block, None,
+            (jnp.arange(m, dtype=jnp.int32), part_pad, ef_blocks,
+             ctrl_blocks))
+        # block partials are aligned subtrees of the full canonical tree, so
+        # folding them canonically reproduces the unchunked sum bit-for-bit
+        totals = {k: chunking.canonical_sum(v) for k, v in psums_m.items()}
+        client_error = _reshape_rows(ef_m, (npad,), drop=2)
+        new_ctrl = _reshape_rows(ctrl_m, (npad,), drop=2)
+    else:
+        _check_state_rows(ef, state.ctrl, n, "the client count")
+        ids = jnp.arange(n, dtype=jnp.int32)
+        batches = (batch_fn(ids) if batch_fn is not None else stacked_batches)
+        totals, client_error, new_ctrl = client_block(ids, batches, part, ef,
+                                                      state.ctrl)
+
+    # --- aggregation (Alg. 6 line 12): participation-masked mean ----------
+    nsched = jnp.sum(part) if part is not None else None
+    denom = (jnp.float32(n) if part is None else jnp.maximum(nsched, 1.0))
+    mean_delta = algorithms.unflatten_vec(totals["delta"] / denom,
+                                          state.params)
+    uplink_bits = totals.get("bits")
 
     # --- downlink (PS-side) EF compression (Alg. 6 lines 15-17) ---
     server_error = state.server_error
-    if compress_fn is not None and server_error is not None:
+    if comp_active and server_error is not None:
         corrected = algorithms.flatten_vec(mean_delta) + server_error
         c, _ = compress_fn(cparams, k_down, corrected)
         server_error = corrected - c
@@ -220,33 +363,48 @@ def fl_round(state: FLState, stacked_batches: Dict[str, jnp.ndarray],
     # delta — the same quantity the server integrates into c — so
     # c = mean(c_i) stays consistent under lossy compression.
     ctrl_aux = None
-    new_ctrl = state.ctrl
     if a.uses_ctrl:
-        n = ctrl_wire.shape[0]
-        if participation is None:
-            part_frac = jnp.float32(1.0)
-            mean_ctrl_delta = jnp.mean(ctrl_wire, axis=0)
-            new_ctrl = state.ctrl + ctrl_wire
-        else:
-            part = participation.astype(jnp.float32)
-            nsched = jnp.sum(part)
-            part_frac = nsched / n
-            mean_ctrl_delta = (jnp.sum(ctrl_wire * part[:, None], axis=0)
-                               / jnp.maximum(nsched, 1.0))
-            # only scheduled clients advance their local control variate
-            new_ctrl = state.ctrl + ctrl_wire * part[:, None]
-        ctrl_aux = (mean_ctrl_delta, part_frac)
+        part_frac = (jnp.float32(1.0) if part is None else nsched / n)
+        ctrl_aux = (totals["ctrl"] / denom, part_frac)
 
     # --- server update (registry triple) ---
     new_params, new_opt = a.server_update(ap, state.params, mean_delta,
                                           state.server_opt, ctrl_aux)
 
-    metrics = {"loss": jnp.mean(losses),
+    metrics = {"loss": totals["loss"] / n,
                "delta_norm": _global_norm(mean_delta)}
     if uplink_bits is not None:
         metrics["uplink_bits"] = uplink_bits
     return FLState(new_params, client_error, server_error, new_opt,
                    new_ctrl, state.round + 1), metrics
+
+
+def _kernel_sign_ef(flat: jnp.ndarray, e: jnp.ndarray):
+    """Fused scaled-sign + EF via the kernel row API (kernel-dispatch path
+    only; deferred import keeps fl/server free of a hard kernels dep)."""
+    from repro.kernels import ops as kernel_ops
+    return kernel_ops.sign_ef_rows(flat, e)
+
+
+def _reshape_rows(state_rows, lead: Tuple[int, ...], drop: int = 1):
+    """Reshape the ``drop`` leading axes of per-client state (array,
+    SparseEF, or None) to ``lead`` — (N, ...) <-> (m, c, ...) views."""
+    if state_rows is None:
+        return None
+    return jax.tree.map(lambda x: x.reshape(lead + x.shape[drop:]),
+                        state_rows)
+
+
+def _check_state_rows(ef, ctrl, rows: int, why: str) -> None:
+    for name, st in (("client_error", ef), ("ctrl", ctrl)):
+        if st is None:
+            continue
+        got = jax.tree.leaves(st)[0].shape[0]
+        if got != rows:
+            raise ValueError(
+                f"FLState.{name} has {got} rows but {why} requires {rows}; "
+                "allocate it with init_fl_state(n_rows=...) matching the "
+                "chunk-padded client count")
 
 
 def _global_norm(tree: PyTree) -> jnp.ndarray:

@@ -6,4 +6,5 @@ Kernels are TPU-targeted (pl.pallas_call + explicit BlockSpec VMEM tiling)
 and validated in interpret mode on CPU against the pure-jnp oracles in ref.py.
 """
 from repro.kernels.ops import (  # noqa: F401
-    block_topk, qsgd_quantize, sign_ef_compress)
+    block_topk, qsgd_quantize, qsgd_rows, resolve_mode, sign_ef_compress,
+    sign_ef_rows, topk_rows)

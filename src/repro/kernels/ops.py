@@ -3,6 +3,22 @@
 Handle flattening/padding of arbitrary gradient arrays into the (rows, cols)
 tile layout, and expose ``interpret=`` for CPU validation (default: interpret
 on non-TPU backends).
+
+Row-batched APIs (``topk_rows`` / ``qsgd_rows`` / ``sign_ef_rows``) treat
+each row as one client's D-dim message — the layout of the engine's chunked
+client pass — and take the compressor parameters (k, levels) as *traced*
+scalars. They resolve one of three execution modes:
+
+* ``"pallas"``    — real ``pallas_call`` (Mosaic). TPU only: this jax build
+                    raises "Only interpret mode is supported on CPU backend"
+                    for non-interpret pallas_call off-TPU.
+* ``"interpret"`` — pallas interpreter; the CPU correctness/validation path.
+* ``"jit"``       — compiled pure-jnp mirror of the kernel math; the
+                    production fallback everywhere pallas can't lower.
+
+``mode=None`` auto-resolves: "pallas" on TPU, "jit" elsewhere — so the same
+engine dispatches to real kernels on TPU and never pays interpret-mode cost
+on CPU.
 """
 from __future__ import annotations
 
@@ -12,16 +28,26 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.qsgd import qsgd_pallas
-from repro.kernels.sign_ef import sign_ef_pallas
-from repro.kernels.topk_mask import block_topk_pallas
+from repro.kernels.qsgd import qsgd_pallas, qsgd_rows_pallas
+from repro.kernels.sign_ef import sign_ef_pallas, sign_ef_rows_pallas
+from repro.kernels.topk_mask import block_topk_pallas, topk_rows_pallas
 
 _COLS = 1024
 _ROWS_ALIGN = 8
+_ROW_MODES = ("pallas", "interpret", "jit")
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def resolve_mode(mode: str | None) -> str:
+    """Resolve the row-API execution mode (see module docstring)."""
+    if mode is None:
+        return "pallas" if jax.default_backend() == "tpu" else "jit"
+    if mode not in _ROW_MODES:
+        raise ValueError(f"unknown kernel mode {mode!r}; known: {_ROW_MODES}")
+    return mode
 
 
 def _to_tiles(x: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
@@ -73,3 +99,89 @@ def sign_ef_compress(x: jnp.ndarray, e: jnp.ndarray,
     c, e_new = sign_ef_pallas(tiles_x, tiles_e, interpret=interpret)
     return (_from_tiles(c, n, x.shape, jnp.float32),
             _from_tiles(e_new, n, x.shape, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Row-batched APIs: one row = one client message (the chunked client pass)
+# ---------------------------------------------------------------------------
+def _pad_rows(x: jnp.ndarray) -> Tuple[jnp.ndarray, int, int]:
+    """Zero-pad (B, D) to (B', D') with B' % 8 == 0, D' % 128 == 0."""
+    b, d = x.shape
+    bp = (-b) % _ROWS_ALIGN
+    dp = (-d) % 128
+    if bp or dp:
+        x = jnp.pad(x, ((0, bp), (0, dp)))
+    return x, b, d
+
+
+def _topk_rows_jnp(x: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Compiled mirror of the bisection kernel (same math, same N_BISECT)."""
+    absx = jnp.abs(x.astype(jnp.float32))
+    hi = jnp.max(absx, axis=1, keepdims=True)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((absx >= mid).astype(jnp.float32), axis=1,
+                      keepdims=True)
+        take_hi = cnt > k
+        return jnp.where(take_hi, mid, lo), jnp.where(take_hi, hi, mid)
+
+    lo, _ = jax.lax.fori_loop(0, 24, body, (lo, hi))
+    return jnp.where(absx >= lo, x, jnp.zeros_like(x))
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def topk_rows(x: jnp.ndarray, k: jnp.ndarray,
+              mode: str | None = None) -> jnp.ndarray:
+    """Per-row threshold-bisection top-k. x: (B, D); k: traced scalar keep
+    budget shared by every row. Returns (B, D), x.dtype."""
+    mode = resolve_mode(mode)
+    k = jnp.asarray(k, jnp.float32)
+    if mode == "jit":
+        return _topk_rows_jnp(x, k)
+    xp, b, d = _pad_rows(x)
+    out = topk_rows_pallas(xp, k, interpret=(mode == "interpret"))
+    return out[:b, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def qsgd_rows(x: jnp.ndarray, u: jnp.ndarray, levels: jnp.ndarray,
+              mode: str | None = None) -> jnp.ndarray:
+    """Per-row QSGD with per-row L2 norms. x, u: (B, D); u is the caller's
+    stochastic-rounding noise (derived from per-client keys, so results are
+    independent of how rows are batched); levels: traced scalar."""
+    mode = resolve_mode(mode)
+    levels = jnp.maximum(jnp.asarray(levels, jnp.float32), 1.0)
+    norms = jnp.linalg.norm(x.astype(jnp.float32), axis=1, keepdims=True)
+    if mode == "jit":
+        xf = x.astype(jnp.float32)
+        scaled = jnp.abs(xf) / jnp.maximum(norms, 1e-30) * levels
+        lower = jnp.floor(scaled)
+        q = (lower + (u < (scaled - lower)).astype(jnp.float32)) / levels
+        return (jnp.sign(xf) * q * norms).astype(x.dtype)
+    xp, b, d = _pad_rows(x)
+    up, _, _ = _pad_rows(u)
+    np_ = jnp.pad(norms, ((0, xp.shape[0] - b), (0, 0)))
+    out = qsgd_rows_pallas(xp, up, np_, levels,
+                           interpret=(mode == "interpret"))
+    return out[:b, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def sign_ef_rows(x: jnp.ndarray, e: jnp.ndarray, mode: str | None = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused per-row scaled-sign + EF update: c = mean|x+e| * sign(x+e),
+    e' = (x+e) - c. x, e: (B, D). Returns (c, e') fp32."""
+    mode = resolve_mode(mode)
+    if mode == "jit":
+        corrected = x.astype(jnp.float32) + e.astype(jnp.float32)
+        scale = jnp.mean(jnp.abs(corrected), axis=1, keepdims=True)
+        c = scale * jnp.sign(corrected)
+        return c, corrected - c
+    xp, b, d = _pad_rows(x)
+    ep, _, _ = _pad_rows(e.astype(jnp.float32))
+    c, e_new = sign_ef_rows_pallas(xp, ep, jnp.float32(d),
+                                   interpret=(mode == "interpret"))
+    return c[:b, :d], e_new[:b, :d]

@@ -37,3 +37,37 @@ def sign_ef_pallas(x: jnp.ndarray, e: jnp.ndarray, *, block_rows: int = 8,
                    jax.ShapeDtypeStruct(e.shape, jnp.float32)),
         interpret=interpret,
     )(x, e)
+
+
+def _sign_ef_rows_kernel(d_ref, x_ref, e_ref, c_ref, e_out_ref):
+    """Row-message variant: rows may be zero-padded beyond ``d`` real
+    columns, so the L1 scale divides by the *real* message dimension (a
+    (1, 1) scalar operand) instead of the padded column count. Padding
+    columns hold x = e = 0, so sign() keeps them 0 in both outputs."""
+    corrected = x_ref[...].astype(jnp.float32) + e_ref[...]
+    d = d_ref[0, 0]
+    scale = jnp.sum(jnp.abs(corrected), axis=1, keepdims=True) / d
+    c = scale * jnp.sign(corrected)
+    c_ref[...] = c.astype(c_ref.dtype)
+    e_out_ref[...] = (corrected - c).astype(e_out_ref.dtype)
+
+
+def sign_ef_rows_pallas(x: jnp.ndarray, e: jnp.ndarray, d: jnp.ndarray, *,
+                        block_rows: int = 8, interpret: bool = False):
+    """Per-client-row fused scaled-sign + EF. x, e: (rows, cols) where cols
+    may exceed the real message dim ``d`` (zero padding); returns
+    (c fp32, e_new fp32)."""
+    rows, cols = x.shape
+    assert rows % block_rows == 0 and cols % 128 == 0
+    d = jnp.asarray(d, jnp.float32).reshape(1, 1)
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, cols), lambda i: (i, 0))
+    return pl.pallas_call(
+        _sign_ef_rows_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)), spec, spec],
+        out_specs=(spec, spec),
+        out_shape=(jax.ShapeDtypeStruct(x.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(e.shape, jnp.float32)),
+        interpret=interpret,
+    )(d, x, e)

@@ -54,3 +54,48 @@ def block_topk_pallas(x: jnp.ndarray, k: int, *, block_rows: int = 8,
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
     )(x)
+
+
+def _topk_rows_kernel(k_ref, x_ref, o_ref):
+    """Same bisection as :func:`_topk_kernel` but ``k`` arrives as a (1, 1)
+    scalar operand, so a *traced* keep-budget (CompressionParams.k swept by
+    vmap) compiles into one kernel instead of one kernel per k."""
+    x = x_ref[...]
+    k = k_ref[0, 0]  # float; compare counts against it directly
+    absx = jnp.abs(x.astype(jnp.float32))
+    hi = jnp.max(absx, axis=1, keepdims=True)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((absx >= mid).astype(jnp.float32), axis=1,
+                      keepdims=True)
+        take_hi = cnt > k
+        lo = jnp.where(take_hi, mid, lo)
+        hi = jnp.where(take_hi, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, N_BISECT, body, (lo, hi))
+    o_ref[...] = jnp.where(absx >= lo, x, jnp.zeros_like(x))
+
+
+def topk_rows_pallas(x: jnp.ndarray, k: jnp.ndarray, *, block_rows: int = 8,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Per-row top-k with a traced budget. x: (rows, cols); k: () or (1, 1)
+    float — the per-row keep count (same for every row)."""
+    rows, cols = x.shape
+    assert rows % block_rows == 0 and cols % 128 == 0
+    k = jnp.asarray(k, jnp.float32).reshape(1, 1)
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        _topk_rows_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(k, x)
