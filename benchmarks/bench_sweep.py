@@ -1,0 +1,115 @@
+"""Mega-sweep throughput: traced policy axis vs the per-policy loop.
+
+The tentpole deliverable of the one-call mega-sweep: ``run_sweep`` folds
+the scheduling policy into the vmapped variant axis as a traced one-hot
+mixture, so a full 10-policy x seed x lr grid dispatches as **one**
+compiled call instead of one call + one trace per policy. This module
+times both modes *end to end including compilation* from a cold engine
+cache — compile time is exactly what the mixture amortizes (1 trace vs 10)
+and what dominates a fresh parameter study.
+
+Rows:
+
+* ``sweep.variants_per_s`` — headline value row (higher is better, gated):
+  full-grid variants/s through the one-call mixture path, cold cache;
+* ``sweep.loop_variants_per_s`` — the per-policy-loop baseline on the same
+  grid (cold cache);
+* ``sweep.speedup_vs_loop`` — mixture/loop throughput ratio (the
+  acceptance criterion: >= 1.5x at >= 200 variants);
+* ``sweep.cached_us_per_variant`` — steady-state dispatch cost per variant
+  once the engine cache is warm (timing row);
+* ``tune.n_traces`` — engine traces a representative auto-tune costs
+  (deterministic; gated so a tuner change that silently starts retracing
+  trips CI);
+* ``tune.search_us_per_variant`` — wall-clock per simulated variant for
+  that same tune (timing row, gated).
+
+Under ``--fast`` the grid shrinks (keys stay the same; the fast baseline
+only ever diffs against fast runs). The full grid is 10 policies x 4 seeds
+x 5 lrs = 200 variants.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks import common
+from benchmarks.common import bench_rounds, emit, make_linear_problem
+from repro.core import scheduling
+from repro.core.algorithms.registry import algo_params
+from repro.fl import runtime as rt
+from repro.fl import tune as fl_tune
+
+N_DEVICES = 16
+ROUNDS = 20
+
+
+def _grid():
+    if common.FAST:
+        return [0, 1], [0.05, 0.1]          # 10 x 2 x 2 = 40 variants
+    return [0, 1, 2, 3], [0.02, 0.05, 0.1, 0.15, 0.2]  # 200 variants
+
+
+def _timed_sweep(cfg, loss_fn, params, batches, policies, seeds, aps, mode):
+    """End-to-end wall clock for one cold-cache sweep in ``mode``."""
+    rt._ENGINE_CACHE.clear()
+    t0 = time.perf_counter()
+    out = rt.run_sweep(cfg, loss_fn, params, batches, seeds=seeds,
+                       policies=policies, aparams_grid=aps,
+                       policy_mode=mode)
+    # run_sweep device_gets its outputs, so the clock already includes sync
+    dt = time.perf_counter() - t0
+    return dt, out
+
+
+def main() -> None:
+    rounds = bench_rounds(ROUNDS)
+    seeds, lrs = _grid()
+    policies = list(scheduling.policy_names())
+    aps = [algo_params(lr=lr) for lr in lrs]
+    n_variants = len(policies) * len(seeds) * len(aps)
+
+    params, loss_fn, make_batches, _ = make_linear_problem()
+    batches = rt.stack_batches(make_batches, rounds, N_DEVICES)
+    cfg = rt.SimConfig(n_devices=N_DEVICES, n_scheduled=4, rounds=rounds,
+                       compression="topk")
+
+    args = (cfg, loss_fn, params, batches, policies, seeds, aps)
+    dt_loop, _ = _timed_sweep(*args, "loop")
+    dt_mix, _ = _timed_sweep(*args, "mixture")
+    emit("sweep.variants_per_s", 0.0,
+         f"{n_variants}variants;{len(policies)}policies;incl-compile;1-trace",
+         value=n_variants / dt_mix)
+    emit("sweep.loop_variants_per_s", 0.0,
+         f"{n_variants}variants;per-policy-loop;incl-compile;"
+         f"{len(policies)}-traces", value=n_variants / dt_loop)
+    emit("sweep.speedup_vs_loop", 0.0,
+         f"{dt_loop / dt_mix:.2f}x;cold-cache", value=dt_loop / dt_mix)
+
+    # steady state: same mixture call against the now-warm engine cache
+    t0 = time.perf_counter()
+    rt.run_sweep(cfg, loss_fn, params, batches, seeds=seeds,
+                 policies=policies, aparams_grid=aps, policy_mode="mixture")
+    dt_cached = time.perf_counter() - t0
+    emit("sweep.cached_us_per_variant", dt_cached / n_variants * 1e6,
+         f"{n_variants}variants;warm-cache")
+
+    # representative auto-tune on the warm cache: successive halving over
+    # (n_scheduled, compression) groups, traced policy x lr grid inside
+    t0 = time.perf_counter()
+    res = fl_tune.tune(cfg, loss_fn, params, batches, seeds=tuple(seeds),
+                       policies=["random", "best_channel", "latency", "pf"],
+                       compressions=["topk", "none"],
+                       n_scheduled_grid=(2, 4, 8), lr_grid=tuple(lrs))
+    dt_tune = time.perf_counter() - t0
+    emit("tune.n_traces", 0.0,
+         f"best={res.best.policy}/{res.best.compression}"
+         f"/k_sched={res.best.n_scheduled}/lr={res.best.lr};"
+         f"{len(res.history)}rungs", value=float(res.n_traces))
+    emit("tune.search_us_per_variant", dt_tune / res.n_variants * 1e6,
+         f"{res.n_variants}variants;{len(res.history)}rungs")
+
+
+if __name__ == "__main__":
+    main()

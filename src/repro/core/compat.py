@@ -13,7 +13,20 @@ from typing import Any, Callable, Optional, Set
 import jax
 from jax import lax
 
-__all__ = ["axis_size", "shard_map"]
+__all__ = ["axis_size", "make_mesh", "shard_map"]
+
+
+def make_mesh(devices, axis_name: str):
+    """1-D device mesh over ``devices`` with a single named axis.
+
+    ``jax.sharding.Mesh`` over an explicit device array works on every
+    supported JAX; kept here next to :func:`shard_map` so callers have one
+    compat entry point for the mesh idiom.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(list(devices)), (axis_name,))
 
 
 def axis_size(axis) -> int:

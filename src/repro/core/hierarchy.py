@@ -39,6 +39,14 @@ class HFLConfig:
     mbs_rate_penalty: float = 6.0        # MU<->MBS rate is this much worse
                                          # than MU<->SBS (distance/path loss)
 
+    def static_key(self) -> "HFLConfig":
+        """Copy with the *traced* fields zeroed — what the engine cache keys
+        on. ``backhaul_rate_bps`` enters the compiled HFL engine as a traced
+        argument (so backhaul-rate grids share one trace); everything else
+        (cluster count, H, geometry) changes the program shape and stays
+        static."""
+        return dataclasses.replace(self, backhaul_rate_bps=0.0)
+
 
 def assign_clusters_hex(positions_xy: np.ndarray, centers_xy: np.ndarray
                         ) -> np.ndarray:

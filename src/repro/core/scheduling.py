@@ -397,6 +397,48 @@ def policy_names() -> Tuple[str, ...]:
     return tuple(_POLICIES)
 
 
+MixtureFn = Callable[[PolicyConfig, RoundState, jnp.ndarray], jnp.ndarray]
+
+
+def get_policy_mixture(names: Tuple[str, ...]) -> MixtureFn:
+    """One-hot policy mixture: the *traced* twin of :func:`get_policy`.
+
+    ``names`` is the static tuple of enabled policies (it keys the engine
+    cache, so unused policies compile away entirely). The returned function
+    evaluates every enabled policy's mask and selects one by a traced
+    one-hot weight vector ``w`` of shape ``(len(names),)``:
+
+        mixture(pcfg, st, w) -> (N,) bool
+
+    Selection is an exact einsum over {0,1}-valued masks — with a one-hot
+    ``w`` the result is bitwise identical to ``get_policy(names[p])(pcfg,
+    st)``, which is what lets ``fl/runtime.run_sweep`` fold the policy axis
+    into the vmapped variant axis without changing any numbers.
+    """
+    names = tuple(names)
+    if len(names) != len(set(names)):
+        raise ValueError(f"duplicate policy names in mixture: {names}")
+    fns = tuple(get_policy(n) for n in names)
+
+    def mixture(pcfg: PolicyConfig, st: RoundState, w: jnp.ndarray
+                ) -> jnp.ndarray:
+        masks = jnp.stack([fn(pcfg, st) for fn in fns])  # (P, N) bool
+        sel = jnp.einsum("p,pn->n", w.astype(jnp.float32),
+                         masks.astype(jnp.float32))
+        return sel > 0.5
+
+    return mixture
+
+
+def policy_onehot(name: str, names: Tuple[str, ...]) -> jnp.ndarray:
+    """float32 one-hot weight vector selecting ``name`` out of the enabled
+    set ``names`` (the traced companion of a mixture's static name tuple)."""
+    names = tuple(names)
+    if name not in names:
+        raise ValueError(f"policy {name!r} not in enabled set {names}")
+    return jnp.zeros(len(names), jnp.float32).at[names.index(name)].set(1.0)
+
+
 def update_ages_jax(ages: jnp.ndarray, scheduled: jnp.ndarray) -> jnp.ndarray:
     """Age recursion: 0 if scheduled else age+1."""
     return jnp.where(scheduled, 0.0, ages + 1.0)

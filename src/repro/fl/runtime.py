@@ -33,10 +33,16 @@ An entire multi-round simulation compiles into **one XLA program**:
   *inside* the scan — so compression shortens rounds and interacts with the
   deadline/latency/update-aware policies;
 * ``run_sweep`` vmaps the scanned engine over seed x channel-config x
-  compression-level x algorithm-hyperparameter variants (policy, compressor,
-  and algorithm *names* iterate in Python — they are static arguments) in
-  **one** compiled call per (policy, compressor-name, algorithm-name) tuple,
-  and ``hcfg=`` routes the same grid through the hierarchical engine;
+  compression-level x algorithm-hyperparameter x **policy** variants: the
+  policy rides as a traced one-hot mixture weight
+  (``scheduling.get_policy_mixture`` — the static *set* of enabled names
+  keys the engine cache), so a full multi-policy grid is **one** compiled
+  call per (compressor-name, algorithm-name) tuple; ``devices=``/``mesh=``
+  shards the flattened variant axis over a 1-D device mesh via
+  ``core.compat.shard_map`` (pow-of-mesh padding + output slicing keeps
+  ragged grids bitwise identical to the vmap path), and ``hcfg=`` /
+  ``hcfgs=`` route the same grid through the hierarchical engine (the
+  backhaul rate is traced, so rate grids share one trace);
 * hierarchical FL (``run_hfl``) is wireless-aware end to end: per-cluster
   ``ChannelParams`` price the device->SBS uplink of the compressed payload,
   each cluster runs the registry scheduling policy over its members, EF and
@@ -67,7 +73,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import chunking, scheduling, wireless
+from repro.core import chunking, compat, scheduling, wireless
 from repro.core.algorithms import registry as algo_registry
 from repro.core.algorithms.registry import (AlgoParams, algo_params,
                                             stack_algo_params)
@@ -252,9 +258,16 @@ def _resolve_aparams(cfg: SimConfig) -> AlgoParams:
 
 
 def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
-                  has_eval: bool):
+                  has_eval: bool,
+                  policy_axis: Optional[Tuple[str, ...]] = None):
     """Shared round logic for both engines. Returns
     ``(init_carry, make_step, engine)``; ``engine`` is the full scanned run.
+
+    ``policy_axis`` switches the policy from a static name (``cfg.policy``)
+    to a *traced* axis: the engine takes an extra one-hot weight vector
+    ``pol_w`` of shape ``(len(policy_axis),)`` selecting which enabled
+    policy runs (``scheduling.get_policy_mixture``), so a vmapped sweep can
+    carry the policy choice per variant instead of retracing per policy.
     """
     n = cfg.n_devices
     if isinstance(cfg.n_scheduled, tuple):
@@ -262,7 +275,12 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
             "per-cluster n_scheduled tuples are a hierarchical-engine "
             "feature (run_hfl); the flat engine takes one global budget")
     pcfg = _policy_cfg(cfg, wcfg)
-    policy_fn = scheduling.get_policy(cfg.policy)
+    if policy_axis is not None:
+        mixture_fn = scheduling.get_policy_mixture(policy_axis)
+        policy_fn = None
+    else:
+        mixture_fn = None
+        policy_fn = scheduling.get_policy(cfg.policy)
     algo = algo_registry.get_algorithm(cfg.algorithm)
     comp_active = cfg.compression != "none"
     compress_fn = (compression.get_compressor(cfg.compression)
@@ -294,8 +312,8 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
                 jnp.ones(n, jnp.float32), jnp.zeros(n, jnp.float32))
 
     def make_step(chan: wireless.ChannelParams, cparams: CompressionParams,
-                  aparams: AlgoParams, dist: jnp.ndarray, k_rounds: jax.Array,
-                  eval_batch):
+                  aparams: AlgoParams, pol_w, dist: jnp.ndarray,
+                  k_rounds: jax.Array, eval_batch):
         def step(carry, xs):
             state, clock, ages, norms, avg_snr = carry
             t, batches = xs
@@ -335,7 +353,10 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
                 t=t, key=kp, snr_lin=snr_lin, avg_snr=avg_snr, rates=rates,
                 comm_lat=comm_lat, comp_lat=comp_lat, ages=ages,
                 update_norms=norms)
-            mask = policy_fn(pcfg, rstate)
+            if policy_fn is not None:
+                mask = policy_fn(pcfg, rstate)
+            else:
+                mask = mixture_fn(pcfg, rstate, pol_w)
             ages = scheduling.update_ages_jax(ages, mask)
 
             if comp_active:
@@ -368,28 +389,45 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
                 loss, clock, mask, jnp.sum(mask), ubits, comm_s, comp_s)
         return step
 
-    def engine(key, chan, cparams, aparams, init_params, batches_all,
-               eval_batch):
+    def _scan(key, chan, cparams, aparams, pol_w, init_params, batches_all,
+              eval_batch):
         ENGINE_STATS["traces"] += 1  # python side effect: runs at trace only
         k_pos, k_rounds = jax.random.split(key)
         dist = wireless.sample_positions_jax(k_pos, chan, n)
-        step = make_step(chan, cparams, aparams, dist, k_rounds, eval_batch)
+        step = make_step(chan, cparams, aparams, pol_w, dist, k_rounds,
+                         eval_batch)
         ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
         (state, *_), outs = lax.scan(
             step, init_carry(init_params), (ts, batches_all))
         return state.params, outs
 
+    if policy_axis is not None:
+        def engine(key, chan, cparams, aparams, pol_w, init_params,
+                   batches_all, eval_batch):
+            return _scan(key, chan, cparams, aparams, pol_w, init_params,
+                         batches_all, eval_batch)
+    else:
+        def engine(key, chan, cparams, aparams, init_params, batches_all,
+                   eval_batch):
+            return _scan(key, chan, cparams, aparams, None, init_params,
+                         batches_all, eval_batch)
+
     return init_carry, make_step, engine
 
 
 def _engine_key(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
-                has_eval: bool, tag: str) -> Tuple:
+                has_eval: bool, tag: str,
+                policy_axis: Optional[Tuple[str, ...]] = None) -> Tuple:
     # continuous channel / compression / algorithm params are traced
     # (ChannelParams / CompressionParams / AlgoParams); everything the trace
     # specializes on must appear here. Compression and the algorithm are
     # keyed by their static *names*, so two equal configs share one compiled
-    # engine regardless of hyperparameter values.
-    return (tag, cfg.policy, cfg.rounds, cfg.n_devices, cfg.n_scheduled,
+    # engine regardless of hyperparameter values. With a policy mixture the
+    # *set of enabled names* replaces the single policy name in the key.
+    return (tag,
+            ("mix",) + tuple(policy_axis) if policy_axis is not None
+            else cfg.policy,
+            cfg.rounds, cfg.n_devices, cfg.n_scheduled,
             cfg.model_bits, cfg.comp_latency_s, cfg.deadline_s,
             cfg.age_alpha, cfg.algorithm, cfg.compression, cfg.double_ef,
             cfg.chunk_size, cfg.ef_mode, cfg.ef_slots, cfg.state_dtype,
@@ -413,15 +451,39 @@ def _cached(cache: Dict[Tuple, Callable], key: Tuple,
     return fn
 
 
+def _mesh_key(mesh) -> Tuple:
+    if mesh is None:
+        return ()
+    return (tuple(int(d.id) for d in np.asarray(mesh.devices).ravel()),
+            tuple(mesh.axis_names))
+
+
 def _get_engine(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
-                has_eval: bool, *, vmapped: bool = False) -> Callable:
+                has_eval: bool, *, vmapped: bool = False,
+                policy_axis: Optional[Tuple[str, ...]] = None,
+                mesh=None) -> Callable:
     def make():
-        _, _, engine = _make_sim_fns(cfg, wcfg, loss_fn, has_eval)
+        _, _, engine = _make_sim_fns(cfg, wcfg, loss_fn, has_eval,
+                                     policy_axis)
         if vmapped:
+            n_var = 5 if policy_axis is not None else 4
+            in_axes = (0,) * n_var + (None,) * 3
+            vengine = jax.vmap(engine, in_axes=in_axes)
+            if mesh is not None:
+                # shard the flattened variant axis over the 1-D mesh: the
+                # per-variant args split along it, the shared args (initial
+                # params, batches, eval batch) replicate. Callers pad the
+                # variant count to a multiple of the mesh size first
+                # (_pad_variants) and slice the outputs back.
+                from jax.sharding import PartitionSpec as P
+                axis = mesh.axis_names[0]
+                vengine = compat.shard_map(
+                    vengine, mesh=mesh,
+                    in_specs=(P(axis),) * n_var + (P(), P(), P()),
+                    out_specs=(P(axis), P(axis)))
             # broadcast init_params can't alias the per-variant outputs, so
             # there is nothing useful to donate on the sweep path.
-            return jax.jit(jax.vmap(engine,
-                                    in_axes=(0, 0, 0, 0, None, None, None)))
+            return jax.jit(vengine)
         # init_params aliases the returned final params exactly; the
         # wrappers below pass a fresh copy, so donating it is safe and
         # lets XLA run the whole scan in-place on the parameter buffers.
@@ -429,7 +491,8 @@ def _get_engine(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
 
     return _cached(_ENGINE_CACHE,
                    _engine_key(cfg, wcfg, loss_fn, has_eval,
-                               "sweep" if vmapped else "single"), make)
+                               "sweep" if vmapped else "single",
+                               policy_axis) + _mesh_key(mesh), make)
 
 
 def _get_host_step(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
@@ -442,7 +505,7 @@ def _get_host_step(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
 
         def host_step(chan, cparams, aparams, dist, k_rounds, eval_batch,
                       carry, xs):
-            return make_step(chan, cparams, aparams, dist, k_rounds,
+            return make_step(chan, cparams, aparams, None, dist, k_rounds,
                              eval_batch)(carry, xs)
 
         return jax.jit(host_step)
@@ -561,8 +624,99 @@ def _run_simulation_host(cfg: SimConfig, loss_fn, init_params: PyTree,
 
 # ---------------------------------------------------------------------------
 # Fleet-scale sweeps: one vmapped call over seed x channel x compression x
-# algorithm-hyperparameter variants
+# algorithm x policy variants, optionally sharded over a device mesh
 # ---------------------------------------------------------------------------
+# Policies whose decision consumes the *static* per-subchannel bandwidth
+# (PolicyConfig.sub_bw = bandwidth_hz / n_subchannels compiles in) or whose
+# latency/deadline math otherwise specializes on the cell's static
+# bandwidth: a bandwidth grid can't vary under them within one trace.
+_BW_STATIC_POLICIES = ("age", "deadline", "bn2", "bn2_c")
+
+
+def _validate_sweep_wcfgs(wcfgs: Sequence[wireless.WirelessConfig],
+                          policies: Sequence[str]) -> None:
+    """Validate the full wcfg grid once: static fields must match across
+    every entry (not just against the first), and latency-sensitive
+    policies additionally pin ``bandwidth_hz`` static."""
+    ref = wcfgs[0]
+    bw_pols = sorted(set(policies) & set(_BW_STATIC_POLICIES))
+    for i, w in enumerate(wcfgs):
+        if (w.n_devices, w.n_subchannels) != (ref.n_devices,
+                                              ref.n_subchannels):
+            raise ValueError(
+                f"sweep wcfgs must share static fields (n_devices, "
+                f"n_subchannels): wcfgs[{i}] has "
+                f"({w.n_devices}, {w.n_subchannels}), wcfgs[0] has "
+                f"({ref.n_devices}, {ref.n_subchannels})")
+        if bw_pols and w.bandwidth_hz != ref.bandwidth_hz:
+            raise ValueError(
+                f"sweep wcfgs must share static bandwidth_hz for the "
+                f"latency-sensitive policies {bw_pols} (their sub-band "
+                f"bandwidth / deadline pricing compiles in statically): "
+                f"wcfgs[{i}].bandwidth_hz={w.bandwidth_hz} != "
+                f"wcfgs[0].bandwidth_hz={ref.bandwidth_hz}")
+
+
+def _resolve_sweep_mesh(devices, mesh):
+    """Resolve the ``devices=``/``mesh=`` knob to a 1-D mesh or ``None``
+    (single-device vmap). ``devices`` accepts ``"auto"`` (all local
+    devices), an int (first that many), or an explicit device sequence;
+    anything resolving to <= 1 device degrades gracefully to ``None``."""
+    if devices is not None and mesh is not None:
+        raise ValueError("pass devices= or mesh=, not both")
+    if mesh is not None:
+        if len(mesh.axis_names) != 1:
+            raise ValueError(f"run_sweep shards the flattened variant axis "
+                             f"over a 1-D mesh; got axes {mesh.axis_names}")
+        return mesh
+    if devices is None:
+        return None
+    if devices == "auto":
+        devs = jax.devices()
+    elif isinstance(devices, int):
+        avail = jax.devices()
+        if devices > len(avail):
+            raise ValueError(f"devices={devices} but only {len(avail)} "
+                             "local devices are available")
+        devs = avail[:devices]
+    else:
+        devs = list(devices)
+    if len(devs) <= 1:
+        return None
+    return compat.make_mesh(devs, "variants")
+
+
+def _tile_variants(tree: PyTree, reps: int) -> PyTree:
+    """Repeat the leading variant axis ``reps`` times (policy-major order:
+    the whole base grid for policy 0, then policy 1, ...)."""
+    return jax.tree.map(
+        lambda x: jnp.tile(x, (reps,) + (1,) * (x.ndim - 1)), tree)
+
+
+def _pad_variants(tree: PyTree, n_pad: int) -> PyTree:
+    """Pad the leading variant axis with ``n_pad`` copies of variant 0 (the
+    ragged-grid filler for mesh sharding; outputs are sliced back)."""
+    if n_pad == 0:
+        return tree
+    return jax.tree.map(
+        lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (n_pad,) + x.shape[1:])], axis=0),
+        tree)
+
+
+def _dispatch_variants(engine, var_args: Tuple, shared_args: Tuple,
+                       mesh) -> Tuple:
+    """One compiled sweep dispatch: pads the variant axis up to a multiple
+    of the mesh size (ragged grids), calls the engine, slices the padding
+    back off the outputs. Returns the stacked per-round ``outs`` tuple."""
+    v = jax.tree.leaves(var_args[0])[0].shape[0]
+    if mesh is not None:
+        n_pad = (-v) % int(np.asarray(mesh.devices).size)
+        var_args = tuple(_pad_variants(a, n_pad) for a in var_args)
+    _, outs = engine(*var_args, *shared_args)
+    return tuple(o[:v] for o in outs)
+
+
 def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
               seeds: Sequence[int],
               wcfgs: Optional[Sequence[wireless.WirelessConfig]] = None,
@@ -572,18 +726,35 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
               algorithms: Optional[Sequence[str]] = None,
               aparams_grid: Optional[Sequence[AlgoParams]] = None,
               eval_batch: Optional[Dict[str, jnp.ndarray]] = None,
-              hcfg: Optional[HFLConfig] = None
+              hcfg: Optional[HFLConfig] = None,
+              hcfgs: Optional[Sequence[HFLConfig]] = None,
+              policy_mode: str = "mixture",
+              devices=None, mesh=None
               ) -> Dict[Any, SimLogs]:
     """Sweep policies x compressor names x algorithm names x seeds x
     channels x compression levels x algorithm hyperparameters.
 
-    Policies, compressor names, and algorithm *names* iterate in Python
-    (static engine arguments); the seed x channel x
-    :class:`CompressionParams` x :class:`AlgoParams` grid runs as **one**
-    vmapped+compiled call per (policy, compressor-name, algorithm-name)
-    tuple — so a whole learning-rate study (e.g. fedprox over many lr)
-    costs a single trace. Returns ``{policy: SimLogs}``, with the key
-    growing to ``(policy, compression)`` / ``(policy, algorithm)`` /
+    The scheduling policy is a *traced* one-hot mixture axis by default
+    (``policy_mode="mixture"``): the whole seed x channel x compression x
+    algorithm x **policy** grid flattens into a single variant axis and
+    dispatches as **one** vmapped+compiled call per (compressor-name,
+    algorithm-name) tuple — a full 10-policy study costs one trace.
+    ``policy_mode="loop"`` restores the legacy one-call-per-policy
+    baseline (also used automatically for single-policy sweeps and the
+    hierarchical engine, whose per-cluster scheduling branches on the
+    policy name). Either way the *results are bitwise identical*: the
+    mixture selects each variant's mask by an exact one-hot einsum.
+
+    ``devices=`` / ``mesh=`` shards the flattened variant axis over a 1-D
+    device mesh with ``shard_map`` (``devices="auto"`` = all local devices,
+    an int = first that many, or pass an explicit 1-axis ``mesh``). Ragged
+    grids pad up to a multiple of the mesh size with copies of variant 0
+    and the padding is sliced back off, so results are bitwise identical
+    to the single-device vmap path; <= 1 device degrades to plain vmap.
+
+    Compressor and algorithm *names* iterate in Python (static engine
+    arguments). Returns ``{policy: SimLogs}``, with the key growing to
+    ``(policy, compression)`` / ``(policy, algorithm)`` /
     ``(policy, compression, algorithm)`` when the ``compressions`` /
     ``algorithms`` axes are given. Arrays have shape
     ``(len(seeds)*len(wcfgs)*len(cparams_grid)*len(aparams_grid), rounds,
@@ -591,18 +762,21 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
     ``itertools.product(seeds, wcfgs, cparams_grid, aparams_grid)``.
 
     All ``wcfgs`` must share the static fields (``n_devices``,
-    ``n_subchannels``; additionally ``bandwidth_hz`` when sweeping the
-    ``age`` policy, whose per-subchannel bandwidth is a static argument of
-    the compiled engine); the remaining continuous fields (power, radius,
-    path loss, noise...) vary per variant through ``ChannelParams``,
-    compression levels through ``CompressionParams``, and algorithm
-    hyperparameters through ``AlgoParams``.
+    ``n_subchannels``; additionally ``bandwidth_hz`` when sweeping a
+    latency-sensitive policy — see ``_BW_STATIC_POLICIES``); the remaining
+    continuous fields (power, radius, path loss, noise...) vary per
+    variant through ``ChannelParams``, compression levels through
+    ``CompressionParams``, and algorithm hyperparameters through
+    ``AlgoParams``.
 
     ``hcfg`` switches the sweep onto the hierarchical engine: every variant
     runs the wireless-aware HFL scan (per-cluster scheduling, compressed
     intra-cluster + backhaul pricing; each variant's seed re-deploys the
     device/SBS geometry), still one compiled call per (policy, compression,
-    algorithm) name tuple.
+    algorithm) name tuple. ``hcfgs=`` makes the backhaul rate a sweep axis:
+    every entry must share the static fields (``HFLConfig.static_key()``)
+    and the grid grows a trailing ``len(hcfgs)`` product axis whose
+    ``backhaul_rate_bps`` is traced — one engine for the whole rate grid.
     """
     wcfgs = list(wcfgs) if wcfgs else [
         wireless.WirelessConfig(n_devices=cfg.n_devices)]
@@ -613,51 +787,100 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
                     else [_resolve_cparams(cfg, init_params)])
     aparams_list = (list(aparams_grid) if aparams_grid
                     else [_resolve_aparams(cfg)])
-    statics = (wcfgs[0].n_devices, wcfgs[0].n_subchannels)
-    for w in wcfgs:
-        if (w.n_devices, w.n_subchannels) != statics:
-            raise ValueError("sweep wcfgs must share static fields "
-                             "(n_devices, n_subchannels)")
-        if "age" in policies and w.bandwidth_hz != wcfgs[0].bandwidth_hz:
-            raise ValueError(
-                "sweep wcfgs must share static bandwidth_hz for the 'age' "
-                "policy (its sub-band bandwidth compiles in statically)")
+    if policy_mode not in ("mixture", "loop"):
+        raise ValueError(f"unknown policy_mode {policy_mode!r}; "
+                         "use 'mixture' or 'loop'")
+    _validate_sweep_wcfgs(wcfgs, policies)
+    if hcfg is not None and hcfgs is not None:
+        raise ValueError("pass hcfg= or hcfgs=, not both")
+    hlist = (list(hcfgs) if hcfgs is not None
+             else ([hcfg] if hcfg is not None else None))
+    if hlist is not None:
+        if not hlist:
+            raise ValueError("hcfgs= needs at least one HFLConfig")
+        ref = hlist[0].static_key()
+        for i, h in enumerate(hlist):
+            if h.static_key() != ref:
+                raise ValueError(
+                    f"sweep hcfgs must share static fields (everything but "
+                    f"the traced backhaul_rate_bps): hcfgs[{i}] differs "
+                    "from hcfgs[0]")
+    mesh = _resolve_sweep_mesh(devices, mesh)
 
-    grid = list(itertools.product(seeds, wcfgs, cparams_list, aparams_list))
+    grid = list(itertools.product(seeds, wcfgs, cparams_list, aparams_list,
+                                  hlist if hlist is not None else [None]))
     if not grid:
         raise ValueError("run_sweep needs at least one "
                          "(seed, wcfg, cparams, aparams) variant")
-    keys = jnp.stack([jax.random.PRNGKey(s) for s, _, _, _ in grid])
-    chans = wireless.stack_channel_params([w for _, w, _, _ in grid])
-    cps = compression.stack_compression_params([c for _, _, c, _ in grid])
-    aps = stack_algo_params([a for _, _, _, a in grid])
+    keys = jnp.stack([jax.random.PRNGKey(g[0]) for g in grid])
+    chans = wireless.stack_channel_params([g[1] for g in grid])
+    cps = compression.stack_compression_params([g[2] for g in grid])
+    aps = stack_algo_params([g[3] for g in grid])
+    bh = (jnp.asarray([g[4].backhaul_rate_bps for g in grid], jnp.float32)
+          if hlist is not None else None)
+    has_eval = eval_batch is not None
+    shared = (init_params, batches, eval_batch)
+    comp_iter = comp_names if comp_names is not None else [cfg.compression]
+    algo_iter = algo_names if algo_names is not None else [cfg.algorithm]
+
+    def result_key(pol, comp, alg):
+        parts = ((pol,)
+                 + ((comp,) if comp_names is not None else ())
+                 + ((alg,) if algo_names is not None else ()))
+        return parts[0] if len(parts) == 1 else parts
+
+    def to_logs(outs) -> SimLogs:
+        (losses, clocks, masks, nsched, ubits,
+         comm_s, comp_s) = jax.device_get(outs)
+        return SimLogs(loss=losses, latency_s=clocks, n_scheduled=nsched,
+                       participation=masks, uplink_bits=ubits,
+                       comm_s=comm_s, comp_s=comp_s)
+
     results: Dict[Any, SimLogs] = {}
+    use_mixture = (hlist is None and policy_mode == "mixture"
+                   and len(policies) > 1)
+    if use_mixture:
+        # one dispatch for the whole policy set: tile the base grid
+        # policy-major and select each block's policy by a traced one-hot
+        policy_axis = tuple(policies)
+        n_base = len(grid)
+        pol_w = jnp.repeat(jnp.eye(len(policies), dtype=jnp.float32),
+                           n_base, axis=0)
+        var_args = (_tile_variants(keys, len(policies)),
+                    _tile_variants(chans, len(policies)),
+                    _tile_variants(cps, len(policies)),
+                    _tile_variants(aps, len(policies)), pol_w)
+        for comp in comp_iter:
+            for alg in algo_iter:
+                cfg_v = dataclasses.replace(cfg, policy=policies[0],
+                                            compression=comp, algorithm=alg)
+                engine = _get_engine(cfg_v, wcfgs[0], loss_fn, has_eval,
+                                     vmapped=True, policy_axis=policy_axis,
+                                     mesh=mesh)
+                outs = _dispatch_variants(engine, var_args, shared, mesh)
+                arrs = jax.device_get(outs)
+                for p_i, pol in enumerate(policies):
+                    block = tuple(a[p_i * n_base:(p_i + 1) * n_base]
+                                  for a in arrs)
+                    results[result_key(pol, comp, alg)] = to_logs(block)
+        return results
+
     for pol in policies:
-        for comp in (comp_names if comp_names is not None
-                     else [cfg.compression]):
-            for alg in (algo_names if algo_names is not None
-                        else [cfg.algorithm]):
+        for comp in comp_iter:
+            for alg in algo_iter:
                 cfg_v = dataclasses.replace(cfg, policy=pol, compression=comp,
                                             algorithm=alg)
-                if hcfg is not None:
-                    engine = _get_hfl_engine(cfg_v, hcfg, wcfgs[0], loss_fn,
-                                             eval_batch is not None,
-                                             vmapped=True)
+                if hlist is not None:
+                    engine = _get_hfl_engine(cfg_v, hlist[0], wcfgs[0],
+                                             loss_fn, has_eval, vmapped=True,
+                                             mesh=mesh)
+                    var_args = (keys, chans, cps, aps, bh)
                 else:
-                    engine = _get_engine(cfg_v, wcfgs[0], loss_fn,
-                                         eval_batch is not None, vmapped=True)
-                _, outs = engine(keys, chans, cps, aps, init_params, batches,
-                                 eval_batch)
-                (losses, clocks, masks, nsched, ubits,
-                 comm_s, comp_s) = jax.device_get(outs)
-                logs = SimLogs(loss=losses, latency_s=clocks,
-                               n_scheduled=nsched, participation=masks,
-                               uplink_bits=ubits, comm_s=comm_s,
-                               comp_s=comp_s)
-                parts = ((pol,)
-                         + ((comp,) if comp_names is not None else ())
-                         + ((alg,) if algo_names is not None else ()))
-                results[parts[0] if len(parts) == 1 else parts] = logs
+                    engine = _get_engine(cfg_v, wcfgs[0], loss_fn, has_eval,
+                                         vmapped=True, mesh=mesh)
+                    var_args = (keys, chans, cps, aps)
+                outs = _dispatch_variants(engine, var_args, shared, mesh)
+                results[result_key(pol, comp, alg)] = to_logs(outs)
     return results
 
 
@@ -769,7 +992,8 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
                 jnp.zeros(n, jnp.float32))
 
     def make_step(chan: wireless.ChannelParams, cparams: CompressionParams,
-                  aparams: AlgoParams, geo, k_rounds: jax.Array, eval_batch):
+                  aparams: AlgoParams, bh_rate, geo, k_rounds: jax.Array,
+                  eval_batch):
         cluster_ids, dist, member, cluster_sizes = geo
         chan_dev = wireless.gather_channel_params(chan, cluster_ids)
         member_f = member.astype(jnp.float32)                       # (L, N)
@@ -981,9 +1205,11 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
                     lambda c_, g_: jnp.broadcast_to(
                         g_[None], c_.shape).astype(c_.dtype), cm_, gm_new)
                 # parallel per-SBS fronthaul links: one backhaul transfer
-                # per SBS (bit cost is data-independent, so all L are equal)
+                # per SBS (bit cost is data-independent, so all L are equal).
+                # bh_rate is *traced* (see HFLConfig.static_key), so a
+                # backhaul-rate grid sweeps without retracing.
                 return (cm_new, gm_new,
-                        jnp.max(bh_bits_sbs) / hcfg.backhaul_rate_bps,
+                        jnp.max(bh_bits_sbs) / bh_rate,
                         jnp.sum(bh_bits_sbs))
 
             def no_sync(ops):
@@ -1012,12 +1238,13 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
 
         return step
 
-    def engine(key, chan, cparams, aparams, init_params, batches_all,
-               eval_batch):
+    def engine(key, chan, cparams, aparams, bh_rate, init_params,
+               batches_all, eval_batch):
         ENGINE_STATS["traces"] += 1  # python side effect: runs at trace only
         k_geo, k_rounds = jax.random.split(key)
         geo = hfl_geometry_jax(k_geo, hcfg, n)
-        step = make_step(chan, cparams, aparams, geo, k_rounds, eval_batch)
+        step = make_step(chan, cparams, aparams, bh_rate, geo, k_rounds,
+                         eval_batch)
         ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
         carry, outs = lax.scan(step, init_carry(init_params),
                                (ts, batches_all))
@@ -1033,27 +1260,37 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
 def _hfl_engine_key(cfg: SimConfig, hcfg: HFLConfig,
                     wcfg: wireless.WirelessConfig, loss_fn, has_eval: bool,
                     tag: str) -> Tuple:
-    # HFLConfig is a frozen (hashable) dataclass; its continuous fields are
-    # compiled in statically — sweeping them means one engine per HFLConfig.
-    return _engine_key(cfg, wcfg, loss_fn, has_eval, tag) + (hcfg,)
+    # HFLConfig is a frozen (hashable) dataclass; the key holds its
+    # static_key() — the traced backhaul_rate_bps is zeroed out, so a
+    # backhaul-rate grid shares one compiled engine.
+    return _engine_key(cfg, wcfg, loss_fn, has_eval, tag) + (
+        hcfg.static_key(),)
 
 
 def _get_hfl_engine(cfg: SimConfig, hcfg: HFLConfig,
                     wcfg: wireless.WirelessConfig, loss_fn, has_eval: bool,
-                    *, vmapped: bool = False) -> Callable:
+                    *, vmapped: bool = False, mesh=None) -> Callable:
     def make():
         _, _, engine = _make_hfl_fns(cfg, hcfg, wcfg, loss_fn, has_eval)
         if vmapped:
-            return jax.jit(jax.vmap(engine,
-                                    in_axes=(0, 0, 0, 0, None, None, None)))
+            vengine = jax.vmap(engine,
+                               in_axes=(0, 0, 0, 0, 0, None, None, None))
+            if mesh is not None:
+                from jax.sharding import PartitionSpec as P
+                axis = mesh.axis_names[0]
+                vengine = compat.shard_map(
+                    vengine, mesh=mesh,
+                    in_specs=(P(axis),) * 5 + (P(), P(), P()),
+                    out_specs=(P(axis), P(axis)))
+            return jax.jit(vengine)
         # no donation: the broadcast to (L, ...) cluster models copies the
         # initial params anyway, so there is no aliasable output buffer
         return jax.jit(engine)
 
     return _cached(_ENGINE_CACHE,
                    _hfl_engine_key(cfg, hcfg, wcfg, loss_fn, has_eval,
-                                   "hfl-sweep" if vmapped else "hfl-single"),
-                   make)
+                                   "hfl-sweep" if vmapped else "hfl-single")
+                   + _mesh_key(mesh), make)
 
 
 def _get_hfl_host_step(cfg: SimConfig, hcfg: HFLConfig,
@@ -1065,9 +1302,9 @@ def _get_hfl_host_step(cfg: SimConfig, hcfg: HFLConfig,
     def make():
         _, make_step, _ = _make_hfl_fns(cfg, hcfg, wcfg, loss_fn, has_eval)
 
-        def host_step(chan, cparams, aparams, geo, k_rounds, eval_batch,
-                      carry, xs):
-            return make_step(chan, cparams, aparams, geo, k_rounds,
+        def host_step(chan, cparams, aparams, bh_rate, geo, k_rounds,
+                      eval_batch, carry, xs):
+            return make_step(chan, cparams, aparams, bh_rate, geo, k_rounds,
                              eval_batch)(carry, xs)
 
         return jax.jit(host_step)
@@ -1158,7 +1395,8 @@ def run_hfl(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
     eng = _get_hfl_engine(cfg, hcfg, wcfg_stat, loss_fn,
                           eval_batch is not None)
     key = jax.random.PRNGKey(cfg.seed)
-    _, outs = eng(key, chan, cparams, aparams, init_params, batches,
+    _, outs = eng(key, chan, cparams, aparams,
+                  jnp.float32(hcfg.backhaul_rate_bps), init_params, batches,
                   eval_batch)
     losses, clocks, masks, nsched, ubits, comm_s, comp_s = jax.device_get(outs)
     return SimLogs(loss=losses, latency_s=clocks, n_scheduled=nsched,
@@ -1186,8 +1424,8 @@ def _run_hfl_host(cfg: SimConfig, hcfg: HFLConfig, loss_fn,
     for t in range(cfg.rounds):
         bt = sample_client_batches(t, cfg.n_devices)
         carry, (loss, clock, mask, nsched, ubits, comm_s, comp_s) = step(
-            chan, cparams, aparams, geo, k_rounds, eval_batch, carry,
-            (jnp.int32(t), bt))
+            chan, cparams, aparams, jnp.float32(hcfg.backhaul_rate_bps), geo,
+            k_rounds, eval_batch, carry, (jnp.int32(t), bt))
         lv = float(loss)
         if eval_fn is not None and not has_eval:
             lv = eval_fn(inter_cluster_average(carry[0], geo[3]))

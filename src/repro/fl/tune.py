@@ -1,0 +1,254 @@
+"""Sweep-native auto-tuner: "best schedule/compressor for this cell" as
+one call (paper §III design-space studies; ROADMAP item 1).
+
+The compiled mega-sweep (:func:`repro.fl.runtime.run_sweep`) makes the
+*traced* axes — policy, top-k ``k`` (``CompressionParams``), lr
+(``AlgoParams``), seed — nearly free: the whole product grid rides one
+vmapped dispatch and one trace. What still costs a retrace is the *static*
+axes: ``n_scheduled`` and the compressor name compile into the engine. The
+tuner exploits that asymmetry:
+
+* **successive halving over the static axes**: candidate *groups* are the
+  ``(n_scheduled, compression)`` pairs. Each rung evaluates every surviving
+  group with one mega-sweep call (full policy x k x lr traced grid inside)
+  at a growing *fidelity* = number of seeds averaged, then keeps the best
+  ``1/reduction`` fraction of groups. Early rungs are cheap (1 seed);
+  only finalists pay the full-seed evaluation.
+* **binary search refinement over** ``n_scheduled``: with the winning
+  (policy, compression, k, lr) fixed, a discrete slope-probing bisection
+  over ``[1, n_devices]`` finds the budget minimizing the score —
+  ``score(mid) <= score(mid+1)`` keeps the left half (unimodal in the
+  schedule-more-vs-interfere-more trade-off), each probe one small sweep.
+
+Every evaluation goes through the bounded engine cache, so revisited
+static configs — across rungs, across probes, and across repeated
+:func:`tune` calls — add **zero** traces.
+
+Scoring: loss at the latest round whose simulated wall-clock fits
+``budget_s`` (final-round loss when no budget; ``inf`` when a variant
+never fits — infeasible), averaged over seeds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import scheduling, wireless
+from repro.core.algorithms.registry import AlgoParams, algo_params
+from repro.core.compression.registry import (CompressionParams,
+                                             compression_params)
+from repro.fl import runtime as rt
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the tuning space. ``policy``/``k``/``lr`` are traced
+    sweep axes; ``n_scheduled``/``compression`` are static (engine-keyed)."""
+    policy: str
+    compression: str
+    n_scheduled: int
+    k: int
+    lr: float
+
+
+@dataclasses.dataclass
+class RungRecord:
+    rung: int
+    n_seeds: int
+    groups: List[Tuple[int, str]]        # surviving (n_scheduled, comp)
+    best: Candidate
+    best_score: float
+
+
+@dataclasses.dataclass
+class TuneResult:
+    best: Candidate
+    best_score: float
+    history: List[RungRecord]
+    scores: Dict[Candidate, float]       # last (highest-fidelity) score seen
+    refined_n_scheduled: Optional[int]   # binary-search result (None if off)
+    n_traces: int                        # engine traces this tune() caused
+    n_variants: int                      # total simulated variants dispatched
+
+
+def loss_at_budget(logs: rt.SimLogs, budget_s: Optional[float]) -> np.ndarray:
+    """Per-variant score: loss at the last round whose cumulative latency
+    fits ``budget_s`` (final loss if no budget, ``inf`` if no round fits)."""
+    loss = np.asarray(logs.loss)
+    if budget_s is None:
+        return loss[..., -1]
+    lat = np.asarray(logs.latency_s)
+    fits = lat <= budget_s                       # latency is cumulative ->
+    idx = fits.cumsum(-1).argmax(-1)             # index of the last True
+    picked = np.take_along_axis(loss, idx[..., None], axis=-1)[..., 0]
+    return np.where(fits.any(-1), picked, np.inf)
+
+
+def _score_group(cfg: rt.SimConfig, loss_fn, init_params, batches, *,
+                 n_scheduled: int, comp: str, seeds: Sequence[int],
+                 policies: Sequence[str], cps: Sequence[CompressionParams],
+                 k_grid: Sequence[int], aps: Sequence[AlgoParams],
+                 lr_grid: Sequence[float], wcfg, eval_batch, budget_s,
+                 devices, mesh) -> Dict[Candidate, float]:
+    """One mega-sweep call for a (n_scheduled, compression) group: the full
+    policy x k x lr x seed traced grid, scored and seed-averaged."""
+    cfg_g = dataclasses.replace(cfg, n_scheduled=n_scheduled,
+                                compression=comp)
+    out = rt.run_sweep(cfg_g, loss_fn, init_params, batches,
+                       seeds=list(seeds),
+                       wcfgs=[wcfg] if wcfg is not None else None,
+                       policies=list(policies), cparams_grid=list(cps),
+                       aparams_grid=list(aps), eval_batch=eval_batch,
+                       devices=devices, mesh=mesh)
+    scores: Dict[Candidate, float] = {}
+    for pol in policies:
+        s = loss_at_budget(out[pol], budget_s)
+        s = s.reshape(len(seeds), len(cps), len(aps))
+        s = np.where(np.isfinite(s), s, np.inf).mean(axis=0)
+        for i, k in enumerate(k_grid):
+            for j, lr in enumerate(lr_grid):
+                scores[Candidate(pol, comp, n_scheduled, k, lr)] = float(
+                    s[i, j])
+    return scores
+
+
+def _binsearch_n_scheduled(score_fn: Callable[[int], float], lo: int,
+                           hi: int) -> Tuple[int, Dict[int, float]]:
+    """Discrete bisection for a unimodal score: probe the slope at the
+    midpoint (``score(m) <= score(m+1)`` keeps the left half). Returns the
+    argmin over every probed budget plus the probe cache."""
+    cache: Dict[int, float] = {}
+
+    def s(n_s: int) -> float:
+        if n_s not in cache:
+            cache[n_s] = score_fn(n_s)
+        return cache[n_s]
+
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if s(mid) <= s(mid + 1):
+            hi = mid
+        else:
+            lo = mid + 1
+    s(lo), s(hi)
+    best = min(cache, key=lambda n_s: (cache[n_s], n_s))
+    return best, cache
+
+
+def tune(cfg: rt.SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
+         seeds: Sequence[int] = (0, 1, 2),
+         wcfg: Optional[wireless.WirelessConfig] = None,
+         policies: Optional[Sequence[str]] = None,
+         compressions: Optional[Sequence[str]] = None,
+         n_scheduled_grid: Optional[Sequence[int]] = None,
+         k_grid: Optional[Sequence[int]] = None,
+         lr_grid: Optional[Sequence[float]] = None,
+         budget_s: Optional[float] = None,
+         eval_batch=None, reduction: int = 2,
+         refine_n_scheduled: bool = False,
+         devices=None, mesh=None) -> TuneResult:
+    """Auto-tune (policy, compression, n_scheduled, k, lr) for one cell.
+
+    Successive halving over the *static* ``(n_scheduled, compression)``
+    groups — each rung is one compiled mega-sweep per group over the full
+    *traced* policy x k x lr grid, at fidelity = a growing seed count —
+    followed by an optional discrete binary search refining ``n_scheduled``
+    around the winner (``refine_n_scheduled=True``; each probe is a new
+    static budget, i.e. one extra trace the first time it is visited).
+
+    Scores are seed-averaged :func:`loss_at_budget` values (lower is
+    better); ``budget_s`` turns the objective into "best loss reachable
+    within this simulated wall-clock". Returns a :class:`TuneResult`;
+    repeating the same call hits the engine cache and adds zero traces.
+    """
+    policies = (list(policies) if policies
+                else list(scheduling.policy_names()))
+    compressions = (list(compressions) if compressions
+                    else [cfg.compression])
+    n_grid = (sorted(set(n_scheduled_grid)) if n_scheduled_grid
+              else [cfg.n_scheduled])
+    k_grid = sorted(set(k_grid)) if k_grid else [
+        int(rt._resolve_cparams(cfg, init_params).k)]
+    lr_grid = (list(lr_grid) if lr_grid
+               else [float(rt._resolve_aparams(cfg).lr)])
+    seeds = list(seeds)
+    if reduction < 2:
+        raise ValueError(f"reduction must be >= 2, got {reduction}")
+    for n_s in n_grid:
+        if not 1 <= n_s <= cfg.n_devices:
+            raise ValueError(f"n_scheduled_grid entry {n_s} outside "
+                             f"[1, n_devices={cfg.n_devices}]")
+    cps = [compression_params(k=k) for k in k_grid]
+    aps = [algo_params(lr=lr) for lr in lr_grid]
+
+    traces0 = rt.ENGINE_STATS["traces"]
+    n_variants = 0
+    groups: List[Tuple[int, str]] = [
+        (n_s, c) for n_s in n_grid for c in compressions]
+    scores: Dict[Candidate, float] = {}
+    history: List[RungRecord] = []
+    rung = 0
+    while True:
+        fidelity = (len(seeds) if len(groups) == 1
+                    else min(len(seeds), reduction ** rung))
+        rung_seeds = seeds[:fidelity]
+        rung_scores: Dict[Candidate, float] = {}
+        for n_s, comp in groups:
+            got = _score_group(
+                cfg, loss_fn, init_params, batches, n_scheduled=n_s,
+                comp=comp, seeds=rung_seeds, policies=policies, cps=cps,
+                k_grid=k_grid, aps=aps, lr_grid=lr_grid, wcfg=wcfg,
+                eval_batch=eval_batch, budget_s=budget_s, devices=devices,
+                mesh=mesh)
+            rung_scores.update(got)
+            n_variants += len(rung_seeds) * len(policies) * len(cps) * len(aps)
+        scores.update(rung_scores)
+        best_c = min(rung_scores, key=lambda c: (rung_scores[c], repr(c)))
+        history.append(RungRecord(rung=rung, n_seeds=fidelity,
+                                  groups=list(groups), best=best_c,
+                                  best_score=rung_scores[best_c]))
+        if len(groups) == 1 or fidelity >= len(seeds):
+            break
+        # keep the top 1/reduction groups, ranked by their best candidate
+        def group_score(g: Tuple[int, str]) -> float:
+            return min(v for c, v in rung_scores.items()
+                       if (c.n_scheduled, c.compression) == g)
+        keep = max(1, math.ceil(len(groups) / reduction))
+        groups = sorted(groups, key=group_score)[:keep]
+        rung += 1
+
+    final = history[-1]
+    best, best_score = final.best, final.best_score
+
+    refined: Optional[int] = None
+    if refine_n_scheduled:
+        cp = [compression_params(k=best.k)]
+        ap = [algo_params(lr=best.lr)]
+
+        def probe(n_s: int) -> float:
+            nonlocal n_variants
+            got = _score_group(
+                cfg, loss_fn, init_params, batches, n_scheduled=n_s,
+                comp=best.compression, seeds=seeds, policies=[best.policy],
+                cps=cp, k_grid=[best.k], aps=ap, lr_grid=[best.lr],
+                wcfg=wcfg, eval_batch=eval_batch, budget_s=budget_s,
+                devices=devices, mesh=mesh)
+            n_variants += len(seeds)
+            return next(iter(got.values()))
+
+        refined, probes = _binsearch_n_scheduled(probe, 1, cfg.n_devices)
+        if probes[refined] < best_score:
+            best = dataclasses.replace(best, n_scheduled=refined)
+            best_score = probes[refined]
+        for n_s, v in probes.items():
+            scores[dataclasses.replace(best, n_scheduled=n_s)] = v
+
+    return TuneResult(best=best, best_score=best_score, history=history,
+                      scores=scores, refined_n_scheduled=refined,
+                      n_traces=rt.ENGINE_STATS["traces"] - traces0,
+                      n_variants=n_variants)

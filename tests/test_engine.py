@@ -251,8 +251,8 @@ def test_compression_engine_cache_no_retrace():
 
 
 def test_sweep_compression_axis_one_trace_per_pair():
-    """seed x channel x CompressionParams grids run as one vmapped call per
-    (policy, compressor-name) pair."""
+    """seed x channel x CompressionParams x policy grids run as one vmapped
+    call per compressor *name* (the policy axis is a traced mixture)."""
     params0, loss_fn, make_batches = _make_problem()
     rounds, n = 4, 8
     cfg = rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds, algo_params=AP01,
@@ -267,7 +267,7 @@ def test_sweep_compression_axis_one_trace_per_pair():
                        wcfgs=wcfgs, policies=["random", "best_channel"],
                        compressions=["none", "topk", "qsgd"],
                        cparams_grid=cps)
-    assert rt.ENGINE_STATS["traces"] - before == 2 * 3  # policies x names
+    assert rt.ENGINE_STATS["traces"] - before == 3  # one per compressor name
     assert set(out) == {(p, c) for p in ("random", "best_channel")
                         for c in ("none", "topk", "qsgd")}
     v = 2 * len(wcfgs) * len(cps)
@@ -285,7 +285,83 @@ def test_sweep_compression_axis_one_trace_per_pair():
     rt.run_sweep(cfg, loss_fn, params0, batches, seeds=[0, 1], wcfgs=wcfgs,
                  policies=["random", "best_channel"],
                  compressions=["none", "topk", "qsgd"], cparams_grid=cps)
-    assert rt.ENGINE_STATS["traces"] - before == 2 * 3
+    assert rt.ENGINE_STATS["traces"] - before == 3
+    # the legacy per-policy loop still traces once per (policy, name) pair
+    rt.run_sweep(cfg, loss_fn, params0, batches, seeds=[0, 1], wcfgs=wcfgs,
+                 policies=["random", "best_channel"],
+                 compressions=["none", "topk", "qsgd"], cparams_grid=cps,
+                 policy_mode="loop")
+    assert rt.ENGINE_STATS["traces"] - before == 3 + 2 * 3
+
+
+def test_acceptance_mega_sweep_full_grid_one_trace():
+    """Tentpole acceptance: the full seed x channel x compression x
+    algorithm x 10-policy grid compiles **exactly one** trace and runs as
+    one dispatch per (compression, algorithm) name — here one total."""
+    params0, loss_fn, make_batches = _make_problem()
+    rounds, n = 3, 8
+    cfg = rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds,
+                       compression="topk", model_bits=32.0 * D)
+    batches = rt.stack_batches(make_batches, rounds, n)
+    policies = list(scheduling.policy_names())
+    cps = [compression_params(k=2), compression_params(k=6)]
+    aps = [rt.algo_params(lr=0.05), rt.algo_params(lr=0.1)]
+    seeds = [0, 1]
+    before = rt.ENGINE_STATS["traces"]
+    out = rt.run_sweep(cfg, loss_fn, params0, batches, seeds=seeds,
+                       policies=policies, cparams_grid=cps, aparams_grid=aps)
+    assert rt.ENGINE_STATS["traces"] - before == 1
+    assert set(out) == set(policies)
+    v = len(seeds) * len(cps) * len(aps)
+    for logs in out.values():
+        assert logs.loss.shape == (v, rounds)
+        assert np.isfinite(logs.loss).all()
+    # repeat: still one trace total
+    rt.run_sweep(cfg, loss_fn, params0, batches, seeds=seeds,
+                 policies=policies, cparams_grid=cps, aparams_grid=aps)
+    assert rt.ENGINE_STATS["traces"] - before == 1
+
+
+def test_policy_mixture_bitwise_parity_with_loop():
+    """Mixture-mode results are bitwise identical to the per-policy loop
+    for every registry policy (exact one-hot selection inside the scan)."""
+    params0, loss_fn, make_batches = _make_problem()
+    rounds, n = 5, 8
+    cfg = rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds,
+                       algo_params=AP01, model_bits=32.0 * D,
+                       compression="topk")
+    batches = rt.stack_batches(make_batches, rounds, n)
+    policies = list(scheduling.policy_names())
+    kw = dict(seeds=[0, 1], policies=policies)
+    mix = rt.run_sweep(cfg, loss_fn, params0, batches, **kw)
+    loop = rt.run_sweep(cfg, loss_fn, params0, batches, policy_mode="loop",
+                        **kw)
+    for pol in policies:
+        np.testing.assert_array_equal(mix[pol].participation,
+                                      loop[pol].participation)
+        np.testing.assert_array_equal(mix[pol].loss, loop[pol].loss)
+        np.testing.assert_array_equal(mix[pol].latency_s,
+                                      loop[pol].latency_s)
+        np.testing.assert_array_equal(mix[pol].uplink_bits,
+                                      loop[pol].uplink_bits)
+
+
+def test_sweep_devices_one_degrades_to_vmap():
+    """devices=1 (or a 0/1-device request) is the graceful single-device
+    path: same results, no mesh machinery."""
+    params0, loss_fn, make_batches = _make_problem()
+    rounds, n = 3, 8
+    cfg = rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds,
+                       algo_params=AP01)
+    batches = rt.stack_batches(make_batches, rounds, n)
+    kw = dict(seeds=[0, 1], policies=["random", "pf"])
+    ref = rt.run_sweep(cfg, loss_fn, params0, batches, **kw)
+    one = rt.run_sweep(cfg, loss_fn, params0, batches, devices=1, **kw)
+    for pol in kw["policies"]:
+        np.testing.assert_array_equal(ref[pol].loss, one[pol].loss)
+    with pytest.raises(ValueError, match="devices"):
+        rt.run_sweep(cfg, loss_fn, params0, batches,
+                     devices=10_000, **kw)
 
 
 def test_legacy_callable_compressor_removed():

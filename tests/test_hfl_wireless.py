@@ -232,6 +232,68 @@ def test_hex_centers_rejects_more_than_seven_clusters():
     assert len({tuple(np.round(c, 6)) for c in centers}) == 7
 
 
+def test_hfl_sweep_backhaul_grid_one_trace():
+    """hcfgs= sweeps the backhaul rate as a *traced* variant axis: one
+    trace for the whole rate grid, and a slower backhaul shows up as a
+    strictly larger simulated clock on sync rounds (satellite 2)."""
+    import dataclasses
+    params0, loss_fn, make_batches = _make_problem()
+    rounds, n = 6, 12
+    cfg = rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds,
+                       algo_params=AP01, policy="best_channel",
+                       model_bits=32.0 * D)
+    batches = rt.stack_batches(make_batches, rounds, n)
+    hgrid = [dataclasses.replace(HCFG, backhaul_rate_bps=r)
+             for r in (1e5, 1e9)]
+    before = rt.ENGINE_STATS["traces"]
+    out = rt.run_sweep(cfg, loss_fn, params0, batches, seeds=[0, 1],
+                       hcfgs=hgrid)
+    assert rt.ENGINE_STATS["traces"] - before == 1
+    logs = out["best_channel"]
+    v = 2 * len(hgrid)  # product(seeds, hcfgs): hcfgs is the trailing axis
+    assert logs.loss.shape == (v, rounds)
+    lat = np.asarray(logs.latency_s)[:, -1].reshape(2, len(hgrid))
+    assert (lat[:, 0] > lat[:, 1]).all()  # slow backhaul -> later finish
+    # a different same-shape rate grid reuses the engine: still one trace
+    rt.run_sweep(cfg, loss_fn, params0, batches, seeds=[0, 1],
+                 hcfgs=[dataclasses.replace(HCFG, backhaul_rate_bps=r)
+                        for r in (2e6, 5e6)])
+    assert rt.ENGINE_STATS["traces"] - before == 1
+
+
+def test_hfl_sweep_hcfgs_validation():
+    import dataclasses
+    params0, loss_fn, make_batches = _make_problem()
+    rounds, n = 3, 12
+    cfg = rt.SimConfig(n_devices=n, n_scheduled=3, rounds=rounds,
+                       algo_params=AP01, model_bits=32.0 * D)
+    batches = rt.stack_batches(make_batches, rounds, n)
+    with pytest.raises(ValueError, match="hcfg"):
+        rt.run_sweep(cfg, loss_fn, params0, batches, seeds=[0],
+                     hcfg=HCFG, hcfgs=[HCFG])
+    mixed = [HCFG, dataclasses.replace(HCFG, n_clusters=2)]
+    with pytest.raises(ValueError, match="static"):
+        rt.run_sweep(cfg, loss_fn, params0, batches, seeds=[0], hcfgs=mixed)
+
+
+def test_run_hfl_backhaul_rates_share_one_engine():
+    """run_hfl across backhaul rates reuses one compiled engine — the rate
+    is a traced argument, not part of the static key."""
+    import dataclasses
+    params0, loss_fn, make_batches = _make_problem()
+    cfg = _cfg(rounds=6)
+    slow = dataclasses.replace(HCFG, backhaul_rate_bps=1e5)
+    fast = dataclasses.replace(HCFG, backhaul_rate_bps=1e9)
+    logs_s = rt.run_hfl(cfg, slow, loss_fn, params0, make_batches)
+    before = rt.ENGINE_STATS["traces"]
+    logs_f = rt.run_hfl(cfg, fast, loss_fn, params0, make_batches)
+    assert rt.ENGINE_STATS["traces"] == before  # zero new traces
+    assert logs_s[-1].latency_s > logs_f[-1].latency_s
+    # identical scheduling either way: the rate only moves the clock
+    for s, f in zip(logs_s, logs_f):
+        np.testing.assert_array_equal(s.participation, f.participation)
+
+
 def test_hfl_sweep_seeds_redeploy_geometry():
     """Each sweep seed re-deploys the device/SBS geometry inside the
     compiled engine, so different seeds schedule different device sets."""

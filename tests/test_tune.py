@@ -1,0 +1,107 @@
+"""Sweep-native auto-tuner (fl/tune.py): successive halving over static
+(n_scheduled, compression) groups, budgeted scoring, binary-search
+refinement, and the zero-retrace property of repeated tunes.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from benchmarks.common import make_linear_problem
+from repro.fl import runtime as rt
+from repro.fl import tune as fl_tune
+
+N, ROUNDS = 8, 6
+
+
+def _problem():
+    params, loss_fn, make_batches, _ = make_linear_problem(d=16)
+    cfg = rt.SimConfig(n_devices=N, n_scheduled=3, rounds=ROUNDS,
+                       compression="topk")
+    batches = rt.stack_batches(make_batches, ROUNDS, N)
+    return cfg, loss_fn, params, batches
+
+
+def test_loss_at_budget_scoring():
+    """No budget -> final loss; a budget picks the last affordable round;
+    an unaffordable budget scores inf (infeasible variant)."""
+    loss = np.array([[5.0, 4.0, 3.0], [9.0, 8.0, 7.0]])
+    lat = np.array([[1.0, 2.0, 3.0], [1.0, 2.0, 3.0]])  # cumulative
+    logs = rt.SimLogs(loss=loss, latency_s=lat, n_scheduled=None,
+                      participation=None, uplink_bits=None, comm_s=None,
+                      comp_s=None)
+    np.testing.assert_array_equal(
+        fl_tune.loss_at_budget(logs, None), [3.0, 7.0])
+    np.testing.assert_array_equal(
+        fl_tune.loss_at_budget(logs, 2.5), [4.0, 8.0])
+    np.testing.assert_array_equal(
+        fl_tune.loss_at_budget(logs, 0.5), [np.inf, np.inf])
+
+
+def test_tune_picks_best_lr_and_reuses_cache():
+    cfg, loss_fn, params, batches = _problem()
+    kw = dict(seeds=(0, 1), policies=["random", "best_channel"],
+              lr_grid=(0.001, 0.2))
+    res = fl_tune.tune(cfg, loss_fn, params, batches, **kw)
+    # on a well-conditioned linear problem the larger lr clearly wins
+    assert res.best.lr == 0.2
+    assert np.isfinite(res.best_score)
+    assert res.n_traces >= 1 and res.n_variants > 0
+    assert res.best_score == min(res.scores.values())
+    # identical repeat rides the warm engine cache: zero new traces
+    res2 = fl_tune.tune(cfg, loss_fn, params, batches, **kw)
+    assert res2.n_traces == 0
+    assert res2.best == res.best and res2.best_score == res.best_score
+
+
+def test_tune_successive_halving_narrows_groups():
+    cfg, loss_fn, params, batches = _problem()
+    res = fl_tune.tune(cfg, loss_fn, params, batches, seeds=(0, 1, 2, 3),
+                       policies=["random", "latency"],
+                       compressions=["topk", "none"],
+                       n_scheduled_grid=(2, 4), lr_grid=(0.05, 0.1))
+    sizes = [len(r.groups) for r in res.history]
+    assert sizes[0] == 4                      # full (n_sched x comp) grid
+    assert all(a >= b for a, b in zip(sizes, sizes[1:]))
+    assert sizes[-1] < sizes[0]
+    fidelities = [r.n_seeds for r in res.history]
+    assert all(a <= b for a, b in zip(fidelities, fidelities[1:]))
+    assert fidelities[-1] == 4                # finalists pay all seeds
+    assert (res.best.n_scheduled, res.best.compression) in res.history[-1].groups
+
+
+def test_tune_refine_n_scheduled_bounds():
+    cfg, loss_fn, params, batches = _problem()
+    res = fl_tune.tune(cfg, loss_fn, params, batches, seeds=(0,),
+                       policies=["random"], n_scheduled_grid=(4,),
+                       lr_grid=(0.1,), refine_n_scheduled=True)
+    assert res.refined_n_scheduled is not None
+    assert 1 <= res.refined_n_scheduled <= cfg.n_devices
+    assert 1 <= res.best.n_scheduled <= cfg.n_devices
+    # the refined probes were folded into the score table
+    probed = {c.n_scheduled for c in res.scores if c.policy == "random"}
+    assert res.refined_n_scheduled in probed
+
+
+def test_tune_budget_changes_objective():
+    """An infeasibly tight latency budget makes every variant score inf;
+    a loose one reproduces the final-loss objective."""
+    cfg, loss_fn, params, batches = _problem()
+    kw = dict(seeds=(0,), policies=["random"], lr_grid=(0.1,))
+    tight = fl_tune.tune(cfg, loss_fn, params, batches, budget_s=1e-9, **kw)
+    assert tight.best_score == np.inf
+    loose = fl_tune.tune(cfg, loss_fn, params, batches, budget_s=1e9, **kw)
+    free = fl_tune.tune(cfg, loss_fn, params, batches, budget_s=None, **kw)
+    assert loose.best_score == free.best_score
+
+
+def test_tune_validates_inputs():
+    cfg, loss_fn, params, batches = _problem()
+    with pytest.raises(ValueError, match="reduction"):
+        fl_tune.tune(cfg, loss_fn, params, batches, reduction=1)
+    with pytest.raises(ValueError, match="n_scheduled_grid"):
+        fl_tune.tune(cfg, loss_fn, params, batches,
+                     n_scheduled_grid=(0, 4))
+    with pytest.raises(ValueError, match="n_scheduled_grid"):
+        fl_tune.tune(cfg, loss_fn, params, batches,
+                     n_scheduled_grid=(N + 1,))
