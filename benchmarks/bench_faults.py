@@ -1,0 +1,101 @@
+"""Failure-aware engine cost + loss-vs-wall-clock-vs-dropout frontier.
+
+The fault layer (``core/faults.py``) adds churn, dropout, stragglers,
+correlated fading and retransmissions *inside* the compiled scan; this
+module answers two questions:
+
+* what does fault mode cost? ``faults.us_per_round`` times the faulted
+  engine against the fault-free engine on the same config;
+  ``faults.rounds_per_s`` is the gated throughput headline and
+  ``faults.rounds_per_s_overhead`` the faulted/fault-free throughput
+  ratio (1.0 = free; the gate catches it collapsing);
+* what does failure *do to learning*? the ungated ``faults_frontier.*``
+  rows trace final loss and wall clock across a dropout grid x policy
+  pair, all riding one vmapped engine call (the fault axis is traced).
+
+Keys say ``@N=<n>`` so the ``--fast`` smoke numbers never alias the
+tracked full-run numbers.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from benchmarks.common import bench_rounds, emit, make_linear_problem
+from repro.core.faults import fault_params
+from repro.fl import runtime as rt
+
+ROUNDS = 40
+N_FULL = 256
+N_FAST = 64
+DROPOUT_GRID = (0.0, 0.1, 0.3, 0.6)
+POLICIES = ("random", "best_channel")
+
+FAULTS = fault_params(drop_prob=0.2, churn_p_off=0.05, churn_p_on=0.5,
+                      straggler_prob=0.1, straggler_alpha=1.5,
+                      snr_min=1.0, fading_rho=0.5)
+
+
+def _timed(run) -> float:
+    t0 = time.perf_counter()
+    out = run()
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    return time.perf_counter() - t0
+
+
+def main() -> None:
+    n = N_FAST if common.FAST else N_FULL
+    rounds = bench_rounds(ROUNDS)
+    params, loss_fn, make_batches, _ = make_linear_problem()
+    batches = rt.stack_batches(make_batches, rounds, n)
+
+    def cfg_for(faults, retries):
+        return rt.SimConfig(n_devices=n, n_scheduled=max(8, n // 8),
+                            rounds=rounds, policy="random",
+                            algo_params=rt.algo_params(lr=0.1),
+                            faults=faults, max_retries=retries)
+
+    def run(cfg):
+        return rt.run_simulation_scan(
+            cfg, loss_fn, jax.tree.map(jnp.array, params), batches)
+
+    # --- engine overhead: faulted vs fault-free scan ---------------------
+    base_cfg, fault_cfg = cfg_for(None, 0), cfg_for(FAULTS, 2)
+    run(base_cfg)  # compile
+    run(fault_cfg)
+    dt_base = min(_timed(lambda: run(base_cfg)) for _ in range(2))
+    dt_fault = min(_timed(lambda: run(fault_cfg)) for _ in range(2))
+    _, logs = run(fault_cfg)
+    emit(f"faults.us_per_round@N={n}", dt_fault / rounds * 1e6,
+         f"churn+drop+straggler+retx2;surv={int(logs.n_survived[-1])}"
+         f"/{int(logs.n_scheduled[-1])}")
+    emit(f"faults.rounds_per_s@N={n}", 0.0,
+         "faulted scan throughput", value=rounds / dt_fault)
+    emit(f"faults.rounds_per_s_overhead@N={n}", 0.0,
+         f"faulted/fault-free throughput;base={rounds / dt_base:.1f}r/s",
+         value=(rounds / dt_fault) / (rounds / dt_base))
+
+    # --- loss-vs-wall-clock-vs-dropout frontier (one vmapped call/policy,
+    # the dropout axis is a traced FaultParams grid) ----------------------
+    fgrid = [fault_params(drop_prob=p) for p in DROPOUT_GRID]
+    t0 = rt.ENGINE_STATS["traces"]
+    res = rt.run_sweep(cfg_for(fgrid[0], 0), loss_fn, params, batches,
+                       seeds=[0], policies=list(POLICIES),
+                       fparams_grid=fgrid)
+    n_traces = rt.ENGINE_STATS["traces"] - t0
+    for pol in POLICIES:
+        logs = res[pol]
+        for i, p in enumerate(DROPOUT_GRID):
+            emit(f"faults_frontier.loss@{pol},drop={p}", 0.0,
+                 f"wall_clock={logs.latency_s[i, -1]:.1f}s;"
+                 f"traces={n_traces}", value=float(logs.loss[i, -1]))
+            emit(f"faults_frontier.wall_clock_s@{pol},drop={p}", 0.0,
+                 f"surv_mean={logs.n_survived[i].mean():.1f}",
+                 value=float(logs.latency_s[i, -1]))
+
+
+if __name__ == "__main__":
+    main()

@@ -15,9 +15,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_algorithms, bench_compression, bench_fleet,
-                        bench_hfl, bench_kernels, bench_rs_rr_pf,
-                        bench_scheduling, bench_sweep, bench_update_aware)
+from benchmarks import (bench_algorithms, bench_compression, bench_faults,
+                        bench_fleet, bench_hfl, bench_kernels,
+                        bench_rs_rr_pf, bench_scheduling, bench_sweep,
+                        bench_update_aware)
 from benchmarks import common, roofline
 
 MODULES = [
@@ -29,6 +30,7 @@ MODULES = [
     ("rs_rr_pf(eqs50-56)", bench_rs_rr_pf),
     ("kernels", bench_kernels),
     ("fleet(chunked-engine)", bench_fleet),
+    ("faults(failure-aware)", bench_faults),
     # last: it clears the engine cache to time cold-cache compile+dispatch
     ("sweep(mega)", bench_sweep),
 ]

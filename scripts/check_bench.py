@@ -42,16 +42,22 @@ import sys
 from typing import Dict, List, Sequence, Tuple
 
 DEFAULT_GATED = ("engine.scan_us_per_round", "algorithms.*", "fleet.*",
-                 "kernel.*_pallas", "sweep.variants_per_s*", "tune.*")
+                 "kernel.*_pallas", "sweep.variants_per_s*", "tune.*",
+                 "faults.*")
 # fnmatch is full-string, so "kernel.*_pallas" gates the dispatch-path rows
 # (kernel.topk_pallas, ...) without catching kernel.*_pallas_interpret.
 # "sweep.variants_per_s*" gates the mega-sweep headline (one-call mixture
 # throughput) without gating the loop-baseline / speedup diagnostics;
 # "tune.*" gates the auto-tuner's trace count and per-variant search cost.
+# "faults.*" gates the failure-aware engine's cost rows (us_per_round,
+# rounds_per_s, rounds_per_s_overhead) — the literal "." keeps the ungated
+# faults_frontier.* loss/wall-clock diagnostics out, and algorithms.fedbuff
+# is already gated by "algorithms.*".
 
 # Gated metrics where *larger* is the good direction (throughput rows):
 # these regress when new < baseline / tolerance.
-HIGHER_IS_BETTER = ("fleet.rounds_per_s*", "sweep.variants_per_s*")
+HIGHER_IS_BETTER = ("fleet.rounds_per_s*", "sweep.variants_per_s*",
+                    "faults.rounds_per_s*")
 SKIP_TOKEN = "[bench-skip]"
 
 

@@ -33,6 +33,10 @@ Algorithms
 ``slowmo``     server momentum over the pseudo-gradient (Alg. 8).
 ``fedadam``    server Adam on the pseudo-gradient (Reddi et al. 2021).
 ``fedyogi``    server Yogi variant (Reddi et al. 2021).
+``fedbuff``    buffered-async server updates with staleness-discounted
+               client messages (Nguyen et al. 2022); per-client staleness
+               rides the engine's scan carry, and ``buffer_goal=1`` +
+               ``staleness_pow=0`` is bitwise synchronous fedavg.
 """
 from __future__ import annotations
 
@@ -62,14 +66,19 @@ class AlgoParams(NamedTuple):
     beta1: jnp.ndarray         # Adam/Yogi first-moment decay
     beta2: jnp.ndarray         # Adam/Yogi second-moment decay
     eps: jnp.ndarray           # Adam/Yogi denominator floor
+    staleness_pow: jnp.ndarray  # fedbuff (1+tau)^-pow discount (0 = off)
+    buffer_goal: jnp.ndarray    # fedbuff server buffer size before applying
 
 
 def algo_params(lr: float = 0.05, momentum: float = 0.9,
                 prox_mu: float = 0.01, server_lr: float = 1.0,
                 slowmo_beta: float = 0.5, beta1: float = 0.9,
-                beta2: float = 0.99, eps: float = 1e-3) -> AlgoParams:
+                beta2: float = 0.99, eps: float = 1e-3,
+                staleness_pow: float = 0.5,
+                buffer_goal: float = 1.0) -> AlgoParams:
     return AlgoParams(*(jnp.float32(v) for v in (
-        lr, momentum, prox_mu, server_lr, slowmo_beta, beta1, beta2, eps)))
+        lr, momentum, prox_mu, server_lr, slowmo_beta, beta1, beta2, eps,
+        staleness_pow, buffer_goal)))
 
 
 def default_algo_params() -> AlgoParams:
@@ -231,8 +240,38 @@ def _server_yogi(ap: AlgoParams, params, mean_delta, state, ctrl_aux):
                             yogi=True)
 
 
+def _server_fedbuff(ap: AlgoParams, params, mean_delta, state, ctrl_aux):
+    """Buffered-async server update (FedBuff, Nguyen et al. 2022).
+
+    The round's (already staleness-discounted — see the engine's
+    ``faults.staleness_weights`` pass) mean delta accumulates into a flat
+    (D,) buffer; once ``buffer_goal`` rounds have contributed, the server
+    applies ``server_lr * buffer`` and resets. ``buffer_goal == 1`` with
+    ``staleness_pow == 0`` reduces *bitwise* to synchronous fedavg: the
+    buffer holds exactly one round's mean delta and
+    ``unflatten_vec(flatten_vec(x))`` is the identity on the float32
+    message space.
+    """
+    buf, cnt = state
+    buf = buf + flatten_vec(mean_delta)
+    cnt = cnt + 1.0
+    apply = cnt >= ap.buffer_goal
+    new_params = jax.tree.map(
+        lambda p, d: jnp.where(
+            apply,
+            (p.astype(jnp.float32) + ap.server_lr * d).astype(p.dtype), p),
+        params, unflatten_vec(buf, params))
+    buf = jnp.where(apply, jnp.zeros_like(buf), buf)
+    cnt = jnp.where(apply, jnp.float32(0.0), cnt)
+    return new_params, (buf, cnt)
+
+
 def _init_none(params):
     return None
+
+
+def _init_fedbuff(params):
+    return (jnp.zeros(flat_dim(params), jnp.float32), jnp.float32(0.0))
 
 
 def _init_scaffold(params):
@@ -245,7 +284,10 @@ class Algorithm(NamedTuple):
     ``uses_ctrl`` tells the engine to allocate a flat (N, D) control-variate
     matrix in the scan carry; ``uplink_factor`` is how many message-sized
     payloads a client uplinks per round (2 for SCAFFOLD: delta + ctrl delta),
-    which multiplies the priced bits-on-the-wire.
+    which multiplies the priced bits-on-the-wire. ``uses_staleness`` tells
+    the engine to discount each client's aggregated message by the traced
+    ``(1 + staleness)^-staleness_pow`` factor (fedbuff), with per-client
+    staleness tracked in the scan carry next to the ages.
     """
     name: str
     client_update: Callable
@@ -253,6 +295,7 @@ class Algorithm(NamedTuple):
     init_algo_state: Callable
     uses_ctrl: bool = False
     uplink_factor: float = 1.0
+    uses_staleness: bool = False
 
 
 _REGISTRY: Dict[str, Algorithm] = {
@@ -268,6 +311,8 @@ _REGISTRY: Dict[str, Algorithm] = {
                          lambda p: agg.init_server_opt(p)),
     "fedyogi": Algorithm("fedyogi", _client_sgd, _server_yogi,
                          lambda p: agg.init_server_opt(p)),
+    "fedbuff": Algorithm("fedbuff", _client_sgd, _server_fedbuff,
+                         _init_fedbuff, uses_staleness=True),
 }
 
 # deprecated SimConfig.server / fl_round(server=) spellings -> registry names

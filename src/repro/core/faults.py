@@ -1,0 +1,188 @@
+"""Fault injection for the compiled engine (edge-regime robustness).
+
+The source paper's premise is that edge devices are *heterogeneous and
+stochastic*: compute speed and link rate are time-varying, devices appear
+and vanish, uplinks fail. The engine's default mode is the idealized
+round-synchronous world (i.i.d. block fading, every scheduled client
+succeeds); this module supplies the traced fault model that
+``fl/runtime.py`` threads through the scan when ``SimConfig.faults`` is
+set:
+
+* **dropout** — each scheduled client vanishes mid-round with probability
+  ``drop_prob`` (its update, airtime, and state contribution are lost, but
+  its EF / control-variate state carries forward untouched);
+* **churn** — a two-state Gilbert-Elliott availability chain per device
+  (``churn_p_off``: on->off departure, ``churn_p_on``: off->on arrival);
+  the availability mask rides the scan carry and unavailable devices look
+  unschedulable to every policy (``scheduling.masked_round_state``);
+* **stragglers** — with probability ``straggler_prob`` a device's compute
+  latency is multiplied by a heavy-tailed Pareto(``straggler_alpha``)
+  draw (>= 1), modelling background load / thermal throttling;
+* **decode failure + retransmissions** — an uplink whose SNR falls below
+  the linear threshold ``snr_min`` fails to decode; the engine re-samples
+  the channel and re-prices the payload through ``comm_latency_jax`` up to
+  ``SimConfig.max_retries`` times (the retry count is *static*, so the
+  loop unrolls into the trace), billing every failed attempt's airtime;
+* **temporally-correlated fading** — a complex Gauss-Markov (AR(1)) state
+  ``h_t = rho h_{t-1} + sqrt(1-rho^2) w_t`` in the scan carry replaces the
+  i.i.d. per-round exponential power draw (``fading_rho=0`` recovers
+  i.i.d. Rayleigh block fading through the correlated-state machinery).
+
+All of it follows the registry split the engine is built on: there is no
+static fault *name* — :class:`FaultParams` is **fully traced**, so a fault
+grid is one more vmapped sweep axis (seed x channel x compression x
+algorithm x policy x fault) sharing a single compiled engine; only the
+*presence* of faults (``SimConfig.faults is not None``) and the static
+``max_retries`` key the engine cache.
+
+Every per-device draw is keyed ``fold_in(domain-tagged round key,
+client_id)`` (:func:`repro.core.chunking.client_keys`), so draws depend
+only on the (round, tag, client id) triple — invariant to client batching
+(``SimConfig.chunk_size``) and disjoint from the engine's five legacy
+round-key consumers (fading/compute/policy/norms/compression streams are
+bit-identical with faults off).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import chunking
+
+# domain-separation tags: each fault draw folds the round key kt under its
+# own constant, so adding a draw never shifts another stream
+CHURN_FOLD = 0xC4A2
+DROP_FOLD = 0xD209
+STRAGGLER_FOLD = 0x57A6
+FADING_FOLD = 0xFAD0
+RETRY_FOLD = 0x2E72
+DOWNLINK_FOLD = 0xD0DE
+
+
+class FaultParams(NamedTuple):
+    """Traceable (vmappable) fault-model parameters.
+
+    Continuous on purpose — a sweep stacks these along a leading variant
+    axis (:func:`stack_fault_params`) and the engine vmaps over them, so a
+    dropout-rate grid costs zero retraces. The benign defaults (all-zero
+    probabilities, zero decode threshold, uncorrelated fading) make the
+    fault machinery a no-op in expectation.
+    """
+    drop_prob: jnp.ndarray        # per-round mid-round dropout probability
+    churn_p_off: jnp.ndarray      # Gilbert-Elliott on->off departure prob
+    churn_p_on: jnp.ndarray       # Gilbert-Elliott off->on arrival prob
+    straggler_prob: jnp.ndarray   # P(device straggles this round)
+    straggler_alpha: jnp.ndarray  # Pareto tail index of the slowdown (>1)
+    snr_min: jnp.ndarray          # linear SNR decode threshold (0 = always)
+    fading_rho: jnp.ndarray       # Gauss-Markov fading correlation in [0,1)
+
+
+def fault_params(drop_prob: float = 0.0, churn_p_off: float = 0.0,
+                 churn_p_on: float = 1.0, straggler_prob: float = 0.0,
+                 straggler_alpha: float = 2.0, snr_min: float = 0.0,
+                 fading_rho: float = 0.0) -> FaultParams:
+    return FaultParams(*(jnp.float32(v) for v in (
+        drop_prob, churn_p_off, churn_p_on, straggler_prob, straggler_alpha,
+        snr_min, fading_rho)))
+
+
+def default_fault_params() -> FaultParams:
+    return fault_params()
+
+
+def stack_fault_params(ps) -> FaultParams:
+    """Stack params along a leading variant axis (``run_sweep``'s vmap)."""
+    ps = list(ps)
+    return FaultParams(*(jnp.stack([getattr(p, f) for p in ps])
+                         for f in FaultParams._fields))
+
+
+# ---------------------------------------------------------------------------
+# Per-client draws (chunk-invariant: fold_in(tagged key, client_id))
+# ---------------------------------------------------------------------------
+def _client_uniform(key: jax.Array, tag: int, n: int) -> jnp.ndarray:
+    keys = chunking.client_keys(jax.random.fold_in(key, tag),
+                                jnp.arange(n, dtype=jnp.int32))
+    return jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
+
+
+def _client_normal2(key: jax.Array, tag: int, n: int) -> jnp.ndarray:
+    keys = chunking.client_keys(jax.random.fold_in(key, tag),
+                                jnp.arange(n, dtype=jnp.int32))
+    return jax.vmap(lambda k: jax.random.normal(k, (2,)))(keys)
+
+
+def churn_step(fp: FaultParams, kt: jax.Array,
+               avail: jnp.ndarray) -> jnp.ndarray:
+    """One Gilbert-Elliott transition of the (N,) availability mask: an
+    available device departs w.p. ``churn_p_off``, an unavailable one
+    returns w.p. ``churn_p_on``. One uniform per device decides both
+    branches (the chain's two exit events are mutually exclusive by
+    state)."""
+    u = _client_uniform(kt, CHURN_FOLD, avail.shape[0])
+    return jnp.where(avail, u >= fp.churn_p_off, u < fp.churn_p_on)
+
+
+def gauss_markov_fading(fp: FaultParams, kt: jax.Array, fad: jnp.ndarray,
+                        t: jnp.ndarray) -> tuple:
+    """Advance the (N, 2) complex Gauss-Markov fading state and return
+    ``(new_state, power)``. Components are N(0, 1/2), so the power
+    ``re^2 + im^2`` is marginally Exp(1) — the same Rayleigh power law as
+    the i.i.d. baseline — while consecutive rounds correlate with
+    coefficient ``fading_rho``. Round 0 draws the stationary state."""
+    w = _client_normal2(kt, FADING_FOLD, fad.shape[0])
+    rho = fp.fading_rho
+    fresh = jnp.sqrt(0.5) * w
+    nxt = rho * fad + jnp.sqrt((1.0 - rho * rho) * 0.5) * w
+    fad = jnp.where(t == 0, fresh, nxt)
+    return fad, jnp.sum(fad * fad, axis=1)
+
+
+def retry_fading(kt: jax.Array, attempt: int, n: int) -> jnp.ndarray:
+    """Fresh i.i.d. Rayleigh power for retransmission slot ``attempt``
+    (>= 1): each retry happens in a later fading block, independent of the
+    round's Gauss-Markov state (which advances once per round)."""
+    k = jax.random.fold_in(jax.random.fold_in(kt, RETRY_FOLD), attempt)
+    keys = chunking.client_keys(k, jnp.arange(n, dtype=jnp.int32))
+    return jax.vmap(lambda kk: jax.random.exponential(kk, ()))(keys)
+
+
+def downlink_fading(kt: jax.Array, n: int) -> jnp.ndarray:
+    """I.i.d. Rayleigh power for the broadcast (downlink) slot — a
+    separate stream from the uplink draw, tagged so enabling downlink
+    pricing never shifts the engine's other randomness."""
+    keys = chunking.client_keys(jax.random.fold_in(kt, DOWNLINK_FOLD),
+                                jnp.arange(n, dtype=jnp.int32))
+    return jax.vmap(lambda kk: jax.random.exponential(kk, ()))(keys)
+
+
+def dropout_draw(fp: FaultParams, kt: jax.Array, n: int) -> jnp.ndarray:
+    """(N,) bool: True where the device vanishes mid-round."""
+    return _client_uniform(kt, DROP_FOLD, n) < fp.drop_prob
+
+
+def straggler_multiplier(fp: FaultParams, kt: jax.Array,
+                         n: int) -> jnp.ndarray:
+    """(N,) compute-latency multiplier: 1.0 for healthy devices, a
+    Pareto(``straggler_alpha``) draw >= 1 for the ``straggler_prob``
+    fraction that straggle (heavy tail: occasional 10-100x slowdowns)."""
+    k = jax.random.fold_in(kt, STRAGGLER_FOLD)
+    u_sel = _client_uniform(k, 0, n)
+    u_mag = _client_uniform(k, 1, n)
+    pareto = (1.0 - u_mag) ** (-1.0 / jnp.maximum(fp.straggler_alpha, 1e-3))
+    return jnp.where(u_sel < fp.straggler_prob, pareto, 1.0)
+
+
+def staleness_weights(aparams, staleness: jnp.ndarray) -> jnp.ndarray:
+    """FedBuff-style polynomial staleness discount ``(1+tau)^-pow``.
+
+    Guarded so ``staleness_pow == 0`` yields *exactly* 1.0 — multiplying a
+    message row by 1.0 is an IEEE-754 identity, which is what makes
+    fedbuff-with-zero-staleness-weighting bitwise equal to synchronous
+    fedavg (an acceptance test)."""
+    pw = aparams.staleness_pow
+    return jnp.where(pw > 0,
+                     (1.0 + staleness) ** (-pw),
+                     jnp.ones_like(staleness))

@@ -236,6 +236,25 @@ class PolicyConfig:
 PolicyFn = Callable[[PolicyConfig, RoundState], jnp.ndarray]
 
 
+def masked_round_state(st: RoundState, m: jnp.ndarray,
+                       key: jax.Array | None = None) -> RoundState:
+    """View of the round state where devices outside the boolean mask ``m``
+    look unschedulable to every score-based policy: zero SNR and norms,
+    infinite comm/comp latency (so the deadline policy's greedy pass and
+    every top-k ranking skip them). Shared by the HFL engine's per-cluster
+    scheduling and the fault engine's churn availability mask. Index-based
+    policies (random / round_robin) ignore scores — callers must still
+    ``& m`` the returned mask."""
+    st2 = st._replace(
+        snr_lin=jnp.where(m, st.snr_lin, 0.0),
+        avg_snr=jnp.where(m, st.avg_snr, 1.0),
+        rates=jnp.where(m, st.rates, 1e-9),
+        comm_lat=jnp.where(m, st.comm_lat, jnp.inf),
+        comp_lat=jnp.where(m, st.comp_lat, jnp.inf),
+        update_norms=jnp.where(m, st.update_norms, 0.0))
+    return st2 if key is None else st2._replace(key=key)
+
+
 def topk_mask_jax(score: jnp.ndarray, k: int) -> jnp.ndarray:
     """Boolean mask of the k highest scores (ties broken by index). Shared
     by the score-ranked policies and the HFL engine's cluster-aware random

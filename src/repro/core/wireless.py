@@ -76,8 +76,13 @@ def shannon_rate(snr_lin: np.ndarray, bandwidth_hz: float) -> np.ndarray:
 
 
 def comm_latency(bits: float, rate_bps: np.ndarray) -> np.ndarray:
-    """L_comm = d / R (paper §III)."""
-    return bits / np.maximum(rate_bps, 1e-9)
+    """L_comm = d / R (paper §III). A non-positive rate is an *outage*:
+    the payload never arrives, so the latency is ``inf`` (not the absurd
+    finite number a silent rate clamp used to produce) — deadline-aware
+    policies then exclude the device instead of scheduling a phantom."""
+    rate = np.asarray(rate_bps, dtype=np.float64)
+    with np.errstate(divide="ignore"):
+        return np.where(rate > 0.0, bits / np.maximum(rate, 1e-300), np.inf)
 
 
 def subchannel_rate(snr_per_sub: np.ndarray, cfg: WirelessConfig,
@@ -155,6 +160,7 @@ class ChannelParams(NamedTuple):
     tx_power_dbm: jnp.ndarray
     path_loss_exponent: jnp.ndarray
     ref_loss_db: jnp.ndarray
+    bs_power_dbm: jnp.ndarray
 
 
 def channel_params(cfg: WirelessConfig) -> ChannelParams:
@@ -165,6 +171,7 @@ def channel_params(cfg: WirelessConfig) -> ChannelParams:
         tx_power_dbm=jnp.float32(cfg.tx_power_dbm),
         path_loss_exponent=jnp.float32(cfg.path_loss_exponent),
         ref_loss_db=jnp.float32(cfg.ref_loss_db),
+        bs_power_dbm=jnp.float32(cfg.bs_power_dbm),
     )
 
 
@@ -217,6 +224,21 @@ def snr_jax(dist_m: jnp.ndarray, fading: jnp.ndarray, cp: ChannelParams,
     return p * path_gain_jax(dist_m, cp) * fading / n0
 
 
+def downlink_snr_jax(dist_m: jnp.ndarray, fading: jnp.ndarray,
+                     cp: ChannelParams,
+                     bandwidth_hz: jnp.ndarray | float | None = None
+                     ) -> jnp.ndarray:
+    """Broadcast (BS -> device) SNR: the BS transmits at ``bs_power_dbm``
+    over the full cell bandwidth by default (a broadcast needs no
+    orthogonal per-device split). Channel reciprocity holds for the
+    large-scale gain; the small-scale ``fading`` draw is the caller's
+    (downlink slots fade independently of the uplink)."""
+    bw = bandwidth_hz if bandwidth_hz is not None else cp.bandwidth_hz
+    p = 10.0 ** ((cp.bs_power_dbm - 30.0) / 10.0)
+    n0 = 10.0 ** (cp.noise_dbw_per_hz / 10.0) * bw
+    return p * path_gain_jax(dist_m, cp) * fading / n0
+
+
 def shannon_rate_jax(snr_lin: jnp.ndarray,
                      bandwidth_hz: jnp.ndarray | float) -> jnp.ndarray:
     """bits/s (eq. 40 up to the orthogonal-subchannel split)."""
@@ -225,5 +247,10 @@ def shannon_rate_jax(snr_lin: jnp.ndarray,
 
 def comm_latency_jax(bits: jnp.ndarray | float,
                      rate_bps: jnp.ndarray) -> jnp.ndarray:
-    """L_comm = d / R (paper §III)."""
-    return bits / jnp.maximum(rate_bps, 1e-9)
+    """L_comm = d / R (paper §III). Non-positive rate = outage = ``inf``
+    latency (see :func:`comm_latency`); the division is guarded so the
+    dead branch never produces a NaN under ``where``."""
+    rate = jnp.asarray(rate_bps)
+    tiny = jnp.finfo(rate.dtype if jnp.issubdtype(rate.dtype, jnp.floating)
+                     else jnp.float32).tiny
+    return jnp.where(rate > 0.0, bits / jnp.maximum(rate, tiny), jnp.inf)

@@ -73,7 +73,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import chunking, compat, scheduling, wireless
+from repro.core import chunking, compat, faults as faults_lib
+from repro.core import scheduling, wireless
+from repro.core.faults import FaultParams, fault_params, stack_fault_params
 from repro.core.algorithms import registry as algo_registry
 from repro.core.algorithms.registry import (AlgoParams, algo_params,
                                             stack_algo_params)
@@ -142,6 +144,15 @@ class SimConfig:
     ef_slots: Optional[int] = None       # sparse-EF slots (default d // 50)
     state_dtype: str = "float32"         # "float32" | "bfloat16" EF/ctrl
     datagen: Optional[Callable] = None   # on-device per-client batch source
+    # failure-aware engine: a traced FaultParams (core.faults) switches the
+    # scan into fault mode — Gilbert-Elliott churn, mid-round dropout,
+    # Pareto stragglers, SNR-threshold decode failure with up to
+    # max_retries re-priced retransmissions, and Gauss-Markov correlated
+    # fading state in the carry. Only the *presence* of faults and the
+    # static retry bound key the engine cache; every fault probability is
+    # traced, so a fault grid is one more vmapped sweep axis.
+    faults: Optional[FaultParams] = None
+    max_retries: int = 0                 # static retransmission bound
     # deprecated (one release): stringly-typed spellings, mapped onto
     # algorithm/algo_params by __post_init__ with a DeprecationWarning
     lr: Optional[float] = None
@@ -167,6 +178,14 @@ class SimConfig:
         if self.state_dtype not in ("float32", "bfloat16"):
             raise ValueError(f"unknown state_dtype {self.state_dtype!r}; "
                              "use 'float32'/'bfloat16'")
+        if self.max_retries < 0:
+            raise ValueError(f"SimConfig.max_retries must be >= 0, got "
+                             f"{self.max_retries}")
+        if self.faults is not None and not isinstance(self.faults,
+                                                      FaultParams):
+            raise ValueError(
+                "SimConfig.faults must be a core.faults.FaultParams "
+                f"(see fault_params(...)), got {type(self.faults).__name__}")
         if self.server is not None:
             mapped = algo_registry.from_server_name(self.server)
             warnings.warn(
@@ -202,6 +221,11 @@ class RoundLog:
     uplink_bits: float = 0.0   # total scheduled uplink payload this round
     comm_s: float = 0.0        # bottleneck device's upload time
     comp_s: float = 0.0        # bottleneck device's compute time
+    downlink_bits: float = 0.0  # broadcast payload priced this round
+    n_survived: int = 0        # scheduled clients whose update decoded
+    n_dropped: int = 0         # scheduled clients lost to faults
+    retransmissions: float = 0.0   # extra uplink attempts this round
+    staleness_mean: float = 0.0    # mean per-client staleness (fault mode)
 
 
 @dataclasses.dataclass
@@ -215,14 +239,29 @@ class SimLogs:
     uplink_bits: np.ndarray    # (..., rounds) scheduled bits-on-the-wire
     comm_s: np.ndarray         # (..., rounds) comm share of the round time
     comp_s: np.ndarray         # (..., rounds) compute share of the round time
+    # failure-aware fields (None on logs produced by older callers that
+    # construct SimLogs positionally, e.g. persisted tuning studies)
+    downlink_bits: Optional[np.ndarray] = None  # (..., rounds) broadcast bits
+    n_survived: Optional[np.ndarray] = None     # (..., rounds) decoded
+    n_dropped: Optional[np.ndarray] = None      # (..., rounds) lost to faults
+    retransmissions: Optional[np.ndarray] = None  # (..., rounds) extra tx
+    staleness_mean: Optional[np.ndarray] = None   # (..., rounds)
 
     def to_round_logs(self) -> List[RoundLog]:
         if self.loss.ndim != 1:
             raise ValueError("to_round_logs needs unbatched (rounds,) logs")
+
+        def opt(field, t, cast):
+            return cast(field[t]) if field is not None else cast(0)
         return [RoundLog(t, float(self.latency_s[t]), float(self.loss[t]),
                          int(self.n_scheduled[t]), self.participation[t],
                          float(self.uplink_bits[t]), float(self.comm_s[t]),
-                         float(self.comp_s[t]))
+                         float(self.comp_s[t]),
+                         opt(self.downlink_bits, t, float),
+                         opt(self.n_survived, t, int),
+                         opt(self.n_dropped, t, int),
+                         opt(self.retransmissions, t, float),
+                         opt(self.staleness_mean, t, float))
                 for t in range(self.loss.shape[0])]
 
 
@@ -298,6 +337,10 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
         compression_name=(cfg.compression if comp_active else None),
         chunk_size=chunk, n_clients=n)
 
+    # static fault switch: only the *presence* of faults (and the retry
+    # bound) specializes the trace — every probability is traced FaultParams
+    faults_on = cfg.faults is not None
+
     def init_carry(init_params):
         # message-space state rides in the scan carry (inside FLState): the
         # flat (n_rows, D) EF matrix (dense/SparseEF, fp32/bf16) and, for
@@ -308,14 +351,24 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
             double_ef=comp_active and cfg.double_ef, ef_mode=cfg.ef_mode,
             ef_slots=cfg.ef_slots, state_dtype=state_dt, n_rows=n_rows)
         state0 = dataclasses.replace(state0, round=jnp.int32(0))
-        return (state0, jnp.float32(0.0), jnp.zeros(n, jnp.float32),
-                jnp.ones(n, jnp.float32), jnp.zeros(n, jnp.float32))
+        carry = (state0, jnp.float32(0.0), jnp.zeros(n, jnp.float32),
+                 jnp.ones(n, jnp.float32), jnp.zeros(n, jnp.float32))
+        if faults_on:
+            # churn availability (everyone starts online), Gauss-Markov
+            # complex fading state, and per-client staleness counters
+            carry = carry + (jnp.ones(n, dtype=bool),
+                             jnp.zeros((n, 2), jnp.float32),
+                             jnp.zeros(n, jnp.float32))
+        return carry
 
     def make_step(chan: wireless.ChannelParams, cparams: CompressionParams,
-                  aparams: AlgoParams, pol_w, dist: jnp.ndarray,
+                  aparams: AlgoParams, fparams, pol_w, dist: jnp.ndarray,
                   k_rounds: jax.Array, eval_batch):
         def step(carry, xs):
-            state, clock, ages, norms, avg_snr = carry
+            if faults_on:
+                state, clock, ages, norms, avg_snr, avail, fad, stal = carry
+            else:
+                state, clock, ages, norms, avg_snr = carry
             t, batches = xs
             kt = jax.random.fold_in(k_rounds, t)
             kf, kc, kp, kn, kz = jax.random.split(kt, 5)
@@ -325,11 +378,22 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
                 kd = jax.random.fold_in(kt, DATAGEN_FOLD)
                 batches = functools.partial(cfg.datagen, kd)
 
-            fading = wireless.sample_fading_jax(kf, n)
+            if faults_on:
+                # temporally correlated fading replaces the i.i.d. draw;
+                # round 0 draws the stationary distribution so rho=0
+                # recovers the i.i.d. Rayleigh marginal
+                fad, fading = faults_lib.gauss_markov_fading(
+                    fparams, kt, fad, t)
+            else:
+                fading = wireless.sample_fading_jax(kf, n)
             snr_lin = wireless.snr_jax(dist, fading, chan)
             rates = wireless.shannon_rate_jax(
                 snr_lin, chan.bandwidth_hz / cfg.n_scheduled)
             comp_lat = cfg.comp_latency_s * jax.random.exponential(kc, (n,))
+            if faults_on:
+                # heavy-tailed straggler tail on top of the exponential base
+                comp_lat = comp_lat * faults_lib.straggler_multiplier(
+                    fparams, kt, n)
             # uplink pricing: the simulated payload is model_bits scaled by
             # the compressor's bits-per-parameter rate on the actual d-dim
             # message (data-independent, so the policies can price the round
@@ -349,68 +413,177 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
             avg_snr = jnp.where(t == 0, snr_lin,
                                 0.9 * avg_snr + 0.1 * snr_lin)
 
+            if faults_on:
+                # Gilbert-Elliott churn: offline devices are invisible to
+                # the policy (score-masked view) and unschedulable
+                avail = faults_lib.churn_step(fparams, kt, avail)
+
             rstate = scheduling.RoundState(
                 t=t, key=kp, snr_lin=snr_lin, avg_snr=avg_snr, rates=rates,
                 comm_lat=comm_lat, comp_lat=comp_lat, ages=ages,
                 update_norms=norms)
+            rstate_pol = (scheduling.masked_round_state(rstate, avail)
+                          if faults_on else rstate)
             if policy_fn is not None:
-                mask = policy_fn(pcfg, rstate)
+                mask = policy_fn(pcfg, rstate_pol)
             else:
-                mask = mixture_fn(pcfg, rstate, pol_w)
+                mask = mixture_fn(pcfg, rstate_pol, pol_w)
+            if faults_on:
+                # index-based policies (random/round_robin) ignore scores,
+                # so offline devices must be intersected out explicitly
+                mask = mask & avail
+            # staleness snapshot *before* this round's resets: a client
+            # aggregated now contributes an update stale by the rounds it
+            # sat out (fault mode tracks true per-client staleness; the
+            # faults-off proxy is the pre-update scheduling age)
+            stal_pre = stal if faults_on else ages
             ages = scheduling.update_ages_jax(ages, mask)
 
+            if faults_on:
+                # mid-round dropout + SNR-threshold decode failure with up
+                # to max_retries re-priced retransmissions (each re-samples
+                # the channel and re-bills the payload's airtime)
+                dropped = faults_lib.dropout_draw(fparams, kt, n) & mask
+                ok = snr_lin >= fparams.snr_min
+                comm_eff = comm_lat
+                n_retx = jnp.zeros(n, jnp.float32)
+                for r in range(1, cfg.max_retries + 1):
+                    fad_r = faults_lib.retry_fading(kt, r, n)
+                    snr_r = wireless.snr_jax(dist, fad_r, chan)
+                    lat_r = wireless.comm_latency_jax(
+                        bits_dev, wireless.shannon_rate_jax(
+                            snr_r, chan.bandwidth_hz / cfg.n_scheduled))
+                    need = ~ok
+                    comm_eff = comm_eff + jnp.where(need, lat_r, 0.0)
+                    n_retx = n_retx + need.astype(jnp.float32)
+                    ok = ok | (snr_r >= fparams.snr_min)
+                survived = mask & ~dropped & ok
+                part = survived.astype(jnp.float32)
+            else:
+                part = mask.astype(jnp.float32)
+
+            # staleness-aware algorithms (fedbuff) down-weight old updates;
+            # everyone else gets None so the baseline trace is unchanged
+            sw = (faults_lib.staleness_weights(aparams, stal_pre)
+                  if algo.uses_staleness else None)
+            fault_kw = (dict(gate_ef=True, guard_empty=True)
+                        if faults_on else {})
             if comp_active:
                 state, metrics = round_fn(
-                    state, batches, aparams=aparams,
-                    participation=mask.astype(jnp.float32),
-                    compress_fn=compress_fn, cparams=cparams, key=kz)
+                    state, batches, aparams=aparams, participation=part,
+                    compress_fn=compress_fn, cparams=cparams, key=kz,
+                    staleness_weights=sw, **fault_kw)
                 ubits = payload_scale * metrics["uplink_bits"]
+                if faults_on:
+                    # bill undecoded attempts' airtime too: retries plus the
+                    # final failed payload of never-decoded clients
+                    ubits = ubits + bits_dev * jnp.sum(jnp.where(
+                        mask & ~dropped,
+                        n_retx + (~ok).astype(jnp.float32), 0.0))
             else:
                 state, metrics = round_fn(
-                    state, batches, aparams=aparams,
-                    participation=mask.astype(jnp.float32))
-                ubits = bits_dev * jnp.sum(mask)
+                    state, batches, aparams=aparams, participation=part,
+                    staleness_weights=sw, **fault_kw)
+                if faults_on:
+                    ubits = bits_dev * jnp.sum(jnp.where(
+                        mask & ~dropped, 1.0 + n_retx, 0.0))
+                else:
+                    ubits = bits_dev * jnp.sum(mask)
+
+            # downlink pricing (always on): the server broadcast of the
+            # global model opens the round — BS power over the full band,
+            # independent fading, slowest scheduled device gates the sync
+            # barrier. With double EF the broadcast is the compressed
+            # server message instead of the raw model.
+            if comp_active and cfg.double_ef:
+                dl_bits = payload_scale * compression.uplink_bits_jax(
+                    cfg.compression, cparams, d_model)
+            else:
+                dl_bits = jnp.float32(cfg.model_bits)
+            dl_rate = wireless.shannon_rate_jax(
+                wireless.downlink_snr_jax(
+                    dist, faults_lib.downlink_fading(kt, n), chan),
+                chan.bandwidth_hz)
+            dl_lat = wireless.comm_latency_jax(dl_bits, dl_rate)
+            any_sched = jnp.any(mask)
+            dl_s = jnp.max(jnp.where(mask, dl_lat, 0.0))
+            dl_bits_out = jnp.where(any_sched, dl_bits, jnp.float32(0.0))
 
             # wall-clock: synchronous round = slowest scheduled device; the
-            # comm/comp breakdown is that bottleneck device's split
-            total = comm_lat + comp_lat
+            # comm/comp breakdown is that bottleneck device's split. A
+            # dropped client stops consuming the round (the server's
+            # deadline machinery already excluded it), a decode-failed one
+            # still burns its airtime.
+            if faults_on:
+                comm_c = jnp.where(dropped, 0.0, comm_eff)
+                comp_c = jnp.where(dropped, 0.0, comp_lat)
+            else:
+                comm_c, comp_c = comm_lat, comp_lat
+            total = comm_c + comp_c
             slowest = jnp.argmax(jnp.where(mask, total, -jnp.inf))
-            any_sched = jnp.any(mask)
-            comm_s = jnp.where(any_sched, comm_lat[slowest], 0.0)
-            comp_s = jnp.where(any_sched, comp_lat[slowest], 0.0)
-            clock = clock + comm_s + comp_s
+            comm_s = jnp.where(any_sched, comm_c[slowest], 0.0)
+            comp_s = jnp.where(any_sched, comp_c[slowest], 0.0)
+            clock = clock + dl_s + comm_s + comp_s
+
+            if faults_on:
+                stal_log = jnp.mean(stal_pre)
+                stal = jnp.where(survived, 0.0, stal + 1.0)
+                retx_log = jnp.sum(jnp.where(mask & ~dropped, n_retx, 0.0))
+                n_surv = jnp.sum(survived).astype(jnp.int32)
+                n_drop = jnp.sum(mask & ~survived).astype(jnp.int32)
+            else:
+                stal_log = jnp.float32(0.0)
+                retx_log = jnp.float32(0.0)
+                n_surv = jnp.sum(mask).astype(jnp.int32)
+                n_drop = jnp.int32(0)
 
             loss = metrics["loss"]
             if has_eval:
                 loss = loss_fn(state.params, eval_batch)[0]
             # update-aware policies observe last-round delta norms (proxy)
             norms = 0.9 * norms + 0.1 * jax.random.exponential(kn, (n,))
-            return (state, clock, ages, norms, avg_snr), (
-                loss, clock, mask, jnp.sum(mask), ubits, comm_s, comp_s)
+            new_carry = (state, clock, ages, norms, avg_snr)
+            if faults_on:
+                new_carry = new_carry + (avail, fad, stal)
+            return new_carry, (
+                loss, clock, mask, jnp.sum(mask), ubits, comm_s, comp_s,
+                dl_bits_out, n_surv, n_drop, retx_log, stal_log)
         return step
 
-    def _scan(key, chan, cparams, aparams, pol_w, init_params, batches_all,
-              eval_batch):
+    def _scan(key, chan, cparams, aparams, fparams, pol_w, init_params,
+              batches_all, eval_batch):
         ENGINE_STATS["traces"] += 1  # python side effect: runs at trace only
         k_pos, k_rounds = jax.random.split(key)
         dist = wireless.sample_positions_jax(k_pos, chan, n)
-        step = make_step(chan, cparams, aparams, pol_w, dist, k_rounds,
-                         eval_batch)
+        step = make_step(chan, cparams, aparams, fparams, pol_w, dist,
+                         k_rounds, eval_batch)
         ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
         (state, *_), outs = lax.scan(
             step, init_carry(init_params), (ts, batches_all))
         return state.params, outs
 
-    if policy_axis is not None:
+    # fparams rides *before* pol_w so both optional traced axes keep a
+    # stable relative order across the four engine signatures
+    if policy_axis is not None and faults_on:
+        def engine(key, chan, cparams, aparams, fparams, pol_w, init_params,
+                   batches_all, eval_batch):
+            return _scan(key, chan, cparams, aparams, fparams, pol_w,
+                         init_params, batches_all, eval_batch)
+    elif policy_axis is not None:
         def engine(key, chan, cparams, aparams, pol_w, init_params,
                    batches_all, eval_batch):
-            return _scan(key, chan, cparams, aparams, pol_w, init_params,
-                         batches_all, eval_batch)
+            return _scan(key, chan, cparams, aparams, None, pol_w,
+                         init_params, batches_all, eval_batch)
+    elif faults_on:
+        def engine(key, chan, cparams, aparams, fparams, init_params,
+                   batches_all, eval_batch):
+            return _scan(key, chan, cparams, aparams, fparams, None,
+                         init_params, batches_all, eval_batch)
     else:
         def engine(key, chan, cparams, aparams, init_params, batches_all,
                    eval_batch):
-            return _scan(key, chan, cparams, aparams, None, init_params,
-                         batches_all, eval_batch)
+            return _scan(key, chan, cparams, aparams, None, None,
+                         init_params, batches_all, eval_batch)
 
     return init_carry, make_step, engine
 
@@ -431,8 +604,8 @@ def _engine_key(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
             cfg.model_bits, cfg.comp_latency_s, cfg.deadline_s,
             cfg.age_alpha, cfg.algorithm, cfg.compression, cfg.double_ef,
             cfg.chunk_size, cfg.ef_mode, cfg.ef_slots, cfg.state_dtype,
-            cfg.datagen, wcfg.n_subchannels, wcfg.bandwidth_hz, loss_fn,
-            has_eval)
+            cfg.datagen, cfg.faults is not None, cfg.max_retries,
+            wcfg.n_subchannels, wcfg.bandwidth_hz, loss_fn, has_eval)
 
 
 _ENGINE_CACHE: Dict[Tuple, Callable] = {}
@@ -465,8 +638,9 @@ def _get_engine(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
     def make():
         _, _, engine = _make_sim_fns(cfg, wcfg, loss_fn, has_eval,
                                      policy_axis)
+        faults_on = cfg.faults is not None
         if vmapped:
-            n_var = 5 if policy_axis is not None else 4
+            n_var = 4 + (policy_axis is not None) + faults_on
             in_axes = (0,) * n_var + (None,) * 3
             vengine = jax.vmap(engine, in_axes=in_axes)
             if mesh is not None:
@@ -487,7 +661,7 @@ def _get_engine(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
         # init_params aliases the returned final params exactly; the
         # wrappers below pass a fresh copy, so donating it is safe and
         # lets XLA run the whole scan in-place on the parameter buffers.
-        return jax.jit(engine, donate_argnums=(4,))
+        return jax.jit(engine, donate_argnums=(4 + faults_on,))
 
     return _cached(_ENGINE_CACHE,
                    _engine_key(cfg, wcfg, loss_fn, has_eval,
@@ -503,10 +677,16 @@ def _get_host_step(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
     def make():
         _, make_step, _ = _make_sim_fns(cfg, wcfg, loss_fn, has_eval)
 
-        def host_step(chan, cparams, aparams, dist, k_rounds, eval_batch,
-                      carry, xs):
-            return make_step(chan, cparams, aparams, None, dist, k_rounds,
-                             eval_batch)(carry, xs)
+        if cfg.faults is not None:
+            def host_step(chan, cparams, aparams, fparams, dist, k_rounds,
+                          eval_batch, carry, xs):
+                return make_step(chan, cparams, aparams, fparams, None,
+                                 dist, k_rounds, eval_batch)(carry, xs)
+        else:
+            def host_step(chan, cparams, aparams, dist, k_rounds,
+                          eval_batch, carry, xs):
+                return make_step(chan, cparams, aparams, None, None, dist,
+                                 k_rounds, eval_batch)(carry, xs)
 
         return jax.jit(host_step)
 
@@ -537,12 +717,17 @@ def run_simulation_scan(cfg: SimConfig, loss_fn, init_params: PyTree,
     cparams = _resolve_cparams(cfg, init_params)
     aparams = _resolve_aparams(cfg)
     init_copy = jax.tree.map(jnp.array, init_params)  # donated to the engine
-    params, outs = engine(key, chan, cparams, aparams, init_copy, batches,
-                          eval_batch)
-    losses, clocks, masks, nsched, ubits, comm_s, comp_s = jax.device_get(outs)
+    fargs = (cfg.faults,) if cfg.faults is not None else ()
+    params, outs = engine(key, chan, cparams, aparams, *fargs, init_copy,
+                          batches, eval_batch)
+    (losses, clocks, masks, nsched, ubits, comm_s, comp_s, dl_bits,
+     n_surv, n_drop, retx, stal) = jax.device_get(outs)
     return params, SimLogs(loss=losses, latency_s=clocks,
                            n_scheduled=nsched, participation=masks,
-                           uplink_bits=ubits, comm_s=comm_s, comp_s=comp_s)
+                           uplink_bits=ubits, comm_s=comm_s, comp_s=comp_s,
+                           downlink_bits=dl_bits, n_survived=n_surv,
+                           n_dropped=n_drop, retransmissions=retx,
+                           staleness_mean=stal)
 
 
 def run_simulation(cfg: SimConfig, loss_fn, init_params: PyTree,
@@ -605,20 +790,24 @@ def _run_simulation_host(cfg: SimConfig, loss_fn, init_params: PyTree,
     aparams = _resolve_aparams(cfg)
     dist = wireless.sample_positions_jax(k_pos, chan, cfg.n_devices)
 
+    fargs = (cfg.faults,) if cfg.faults is not None else ()
     carry = init_carry(init_params)
     logs: List[RoundLog] = []
     for t in range(cfg.rounds):
         bt = (None if cfg.datagen is not None
               else sample_client_batches(t, cfg.n_devices))
-        carry, (loss, clock, mask, nsched, ubits, comm_s, comp_s) = step(
-            chan, cparams, aparams, dist, k_rounds, eval_batch, carry,
-            (jnp.int32(t), bt))
+        carry, (loss, clock, mask, nsched, ubits, comm_s, comp_s, dl_bits,
+                n_surv, n_drop, retx, stal) = step(
+            chan, cparams, aparams, *fargs, dist, k_rounds, eval_batch,
+            carry, (jnp.int32(t), bt))
         mask_np = np.asarray(mask)
         lv = float(loss)
         if eval_fn is not None and not has_eval:
             lv = eval_fn(carry[0].params)
         logs.append(RoundLog(t, float(clock), lv, int(nsched), mask_np,
-                             float(ubits), float(comm_s), float(comp_s)))
+                             float(ubits), float(comm_s), float(comp_s),
+                             float(dl_bits), int(n_surv), int(n_drop),
+                             float(retx), float(stal)))
     return logs
 
 
@@ -725,6 +914,7 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
               cparams_grid: Optional[Sequence[CompressionParams]] = None,
               algorithms: Optional[Sequence[str]] = None,
               aparams_grid: Optional[Sequence[AlgoParams]] = None,
+              fparams_grid: Optional[Sequence[FaultParams]] = None,
               eval_batch: Optional[Dict[str, jnp.ndarray]] = None,
               hcfg: Optional[HFLConfig] = None,
               hcfgs: Optional[Sequence[HFLConfig]] = None,
@@ -757,9 +947,16 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
     ``(policy, compression)`` / ``(policy, algorithm)`` /
     ``(policy, compression, algorithm)`` when the ``compressions`` /
     ``algorithms`` axes are given. Arrays have shape
-    ``(len(seeds)*len(wcfgs)*len(cparams_grid)*len(aparams_grid), rounds,
-    ...)``, variants ordered
-    ``itertools.product(seeds, wcfgs, cparams_grid, aparams_grid)``.
+    ``(len(seeds)*len(wcfgs)*len(cparams_grid)*len(aparams_grid)
+    [*len(fparams_grid)], rounds, ...)``, variants ordered
+    ``itertools.product(seeds, wcfgs, cparams_grid, aparams_grid[,
+    fparams_grid])``.
+
+    ``fparams_grid`` makes the fault model a sweep axis: every entry is a
+    traced :class:`~repro.core.faults.FaultParams`, so a dropout/churn/
+    straggler grid rides the same compiled engine (zero extra traces on a
+    warm cache). Omitting it while ``cfg.faults`` is set sweeps the single
+    configured fault point; omitting both keeps the fault-free engine.
 
     All ``wcfgs`` must share the static fields (``n_devices``,
     ``n_subchannels``; additionally ``bandwidth_hz`` when sweeping a
@@ -806,9 +1003,16 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
                     f"the traced backhaul_rate_bps): hcfgs[{i}] differs "
                     "from hcfgs[0]")
     mesh = _resolve_sweep_mesh(devices, mesh)
+    fparams_list = (list(fparams_grid) if fparams_grid is not None
+                    else ([cfg.faults] if cfg.faults is not None else None))
+    faults_on = fparams_list is not None
+    if faults_on and not fparams_list:
+        raise ValueError("fparams_grid= needs at least one FaultParams")
 
-    grid = list(itertools.product(seeds, wcfgs, cparams_list, aparams_list,
-                                  hlist if hlist is not None else [None]))
+    grid = list(itertools.product(
+        seeds, wcfgs, cparams_list, aparams_list,
+        fparams_list if faults_on else [None],
+        hlist if hlist is not None else [None]))
     if not grid:
         raise ValueError("run_sweep needs at least one "
                          "(seed, wcfg, cparams, aparams) variant")
@@ -816,7 +1020,8 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
     chans = wireless.stack_channel_params([g[1] for g in grid])
     cps = compression.stack_compression_params([g[2] for g in grid])
     aps = stack_algo_params([g[3] for g in grid])
-    bh = (jnp.asarray([g[4].backhaul_rate_bps for g in grid], jnp.float32)
+    fps = (stack_fault_params([g[4] for g in grid]) if faults_on else None)
+    bh = (jnp.asarray([g[5].backhaul_rate_bps for g in grid], jnp.float32)
           if hlist is not None else None)
     has_eval = eval_batch is not None
     shared = (init_params, batches, eval_batch)
@@ -830,11 +1035,13 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
         return parts[0] if len(parts) == 1 else parts
 
     def to_logs(outs) -> SimLogs:
-        (losses, clocks, masks, nsched, ubits,
-         comm_s, comp_s) = jax.device_get(outs)
+        (losses, clocks, masks, nsched, ubits, comm_s, comp_s, dl_bits,
+         n_surv, n_drop, retx, stal) = jax.device_get(outs)
         return SimLogs(loss=losses, latency_s=clocks, n_scheduled=nsched,
                        participation=masks, uplink_bits=ubits,
-                       comm_s=comm_s, comp_s=comp_s)
+                       comm_s=comm_s, comp_s=comp_s, downlink_bits=dl_bits,
+                       n_survived=n_surv, n_dropped=n_drop,
+                       retransmissions=retx, staleness_mean=stal)
 
     results: Dict[Any, SimLogs] = {}
     use_mixture = (hlist is None and policy_mode == "mixture"
@@ -846,14 +1053,18 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
         n_base = len(grid)
         pol_w = jnp.repeat(jnp.eye(len(policies), dtype=jnp.float32),
                            n_base, axis=0)
-        var_args = (_tile_variants(keys, len(policies)),
-                    _tile_variants(chans, len(policies)),
-                    _tile_variants(cps, len(policies)),
-                    _tile_variants(aps, len(policies)), pol_w)
+        var_args = ((_tile_variants(keys, len(policies)),
+                     _tile_variants(chans, len(policies)),
+                     _tile_variants(cps, len(policies)),
+                     _tile_variants(aps, len(policies)))
+                    + ((_tile_variants(fps, len(policies)),)
+                       if faults_on else ())
+                    + (pol_w,))
         for comp in comp_iter:
             for alg in algo_iter:
-                cfg_v = dataclasses.replace(cfg, policy=policies[0],
-                                            compression=comp, algorithm=alg)
+                cfg_v = dataclasses.replace(
+                    cfg, policy=policies[0], compression=comp, algorithm=alg,
+                    faults=fparams_list[0] if faults_on else cfg.faults)
                 engine = _get_engine(cfg_v, wcfgs[0], loss_fn, has_eval,
                                      vmapped=True, policy_axis=policy_axis,
                                      mesh=mesh)
@@ -868,17 +1079,20 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
     for pol in policies:
         for comp in comp_iter:
             for alg in algo_iter:
-                cfg_v = dataclasses.replace(cfg, policy=pol, compression=comp,
-                                            algorithm=alg)
+                cfg_v = dataclasses.replace(
+                    cfg, policy=pol, compression=comp, algorithm=alg,
+                    faults=fparams_list[0] if faults_on else cfg.faults)
                 if hlist is not None:
                     engine = _get_hfl_engine(cfg_v, hlist[0], wcfgs[0],
                                              loss_fn, has_eval, vmapped=True,
                                              mesh=mesh)
-                    var_args = (keys, chans, cps, aps, bh)
+                    var_args = ((keys, chans, cps, aps, bh)
+                                + ((fps,) if faults_on else ()))
                 else:
                     engine = _get_engine(cfg_v, wcfgs[0], loss_fn, has_eval,
                                          vmapped=True, mesh=mesh)
-                    var_args = (keys, chans, cps, aps)
+                    var_args = ((keys, chans, cps, aps)
+                                + ((fps,) if faults_on else ()))
                 outs = _dispatch_variants(engine, var_args, shared, mesh)
                 results[result_key(pol, comp, alg)] = to_logs(outs)
     return results
@@ -976,6 +1190,7 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
     comp_active = cfg.compression != "none"
     compress_fn = (compression.get_compressor(cfg.compression)
                    if comp_active else None)
+    faults_on = cfg.faults is not None
 
     def init_carry(init_params):
         d = fl_server.flat_dim(init_params)
@@ -987,36 +1202,54 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
         ctrl = jnp.zeros((n, d), jnp.float32) if algo.uses_ctrl else None
         cc = (jnp.zeros((n_clusters, d), jnp.float32) if algo.uses_ctrl
               else None)
-        return (cm, gm, ef, ctrl, cc, jnp.float32(0.0),
-                jnp.zeros(n, jnp.float32), jnp.ones(n, jnp.float32),
-                jnp.zeros(n, jnp.float32))
+        carry = (cm, gm, ef, ctrl, cc, jnp.float32(0.0),
+                 jnp.zeros(n, jnp.float32), jnp.ones(n, jnp.float32),
+                 jnp.zeros(n, jnp.float32))
+        if faults_on:
+            carry = carry + (jnp.ones(n, dtype=bool),
+                             jnp.zeros((n, 2), jnp.float32),
+                             jnp.zeros(n, jnp.float32))
+        return carry
 
     def make_step(chan: wireless.ChannelParams, cparams: CompressionParams,
-                  aparams: AlgoParams, bh_rate, geo, k_rounds: jax.Array,
-                  eval_batch):
+                  aparams: AlgoParams, bh_rate, fparams, geo,
+                  k_rounds: jax.Array, eval_batch):
         cluster_ids, dist, member, cluster_sizes = geo
         chan_dev = wireless.gather_channel_params(chan, cluster_ids)
         member_f = member.astype(jnp.float32)                       # (L, N)
         w_cluster = cluster_sizes / jnp.maximum(jnp.sum(cluster_sizes), 1.0)
 
+        def rate_of(snr_v):
+            # each device shares its own cell's uplink budget
+            if per_cluster_k:
+                ks_dev = jnp.asarray(ks, jnp.float32)[cluster_ids]
+                return wireless.shannon_rate_jax(
+                    snr_v, chan_dev.bandwidth_hz / ks_dev)
+            return wireless.shannon_rate_jax(
+                snr_v, chan_dev.bandwidth_hz / cfg.n_scheduled)
+
         def step(carry, xs):
-            cm, gm, ef, ctrl, cc, clock, ages, norms, avg_snr = carry
+            if faults_on:
+                (cm, gm, ef, ctrl, cc, clock, ages, norms, avg_snr,
+                 avail, fad, stal) = carry
+            else:
+                cm, gm, ef, ctrl, cc, clock, ages, norms, avg_snr = carry
             t, batches = xs
             kt = jax.random.fold_in(k_rounds, t)
             kf, kc, kp, kn, kz = jax.random.split(kt, 5)
 
             # --- channel draw + intra-cluster uplink pricing -------------
-            fading = wireless.sample_fading_jax(kf, n)
-            snr_lin = wireless.snr_jax(dist, fading, chan_dev)
-            if per_cluster_k:
-                # each device shares its own cell's uplink budget
-                ks_dev = jnp.asarray(ks, jnp.float32)[cluster_ids]
-                rates = wireless.shannon_rate_jax(
-                    snr_lin, chan_dev.bandwidth_hz / ks_dev)
+            if faults_on:
+                fad, fading = faults_lib.gauss_markov_fading(
+                    fparams, kt, fad, t)
             else:
-                rates = wireless.shannon_rate_jax(
-                    snr_lin, chan_dev.bandwidth_hz / cfg.n_scheduled)
+                fading = wireless.sample_fading_jax(kf, n)
+            snr_lin = wireless.snr_jax(dist, fading, chan_dev)
+            rates = rate_of(snr_lin)
             comp_lat = cfg.comp_latency_s * jax.random.exponential(kc, (n,))
+            if faults_on:
+                comp_lat = comp_lat * faults_lib.straggler_multiplier(
+                    fparams, kt, n)
             d_model = fl_server.flat_dim(gm)
             payload_scale = cfg.model_bits / (32.0 * d_model)
             if comp_active:
@@ -1030,6 +1263,12 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
                                 0.9 * avg_snr + 0.1 * snr_lin)
 
             # --- per-cluster scheduling (registry policy) ----------------
+            if faults_on:
+                # churned-off devices disappear from their cluster's view
+                avail = faults_lib.churn_step(fparams, kt, avail)
+                member_eff = member & avail[None, :]
+            else:
+                member_eff = member
             rstate = scheduling.RoundState(
                 t=t, key=kp, snr_lin=snr_lin, avg_snr=avg_snr, rates=rates,
                 comm_lat=comm_lat, comp_lat=comp_lat, ages=ages,
@@ -1057,19 +1296,12 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
                         g = jnp.mod(jnp.float32(t), g_l)
                         r = rank_pc[l]
                         return m & (r >= g * k_l) & (r < (g + 1) * k_l)
-                    stl = rstate._replace(
-                        key=key_l,
-                        snr_lin=jnp.where(m, snr_lin, 0.0),
-                        avg_snr=jnp.where(m, avg_snr, 1.0),
-                        rates=jnp.where(m, rates, 1e-9),
-                        comm_lat=jnp.where(m, comm_lat, jnp.inf),
-                        comp_lat=jnp.where(m, comp_lat, jnp.inf),
-                        update_norms=jnp.where(m, norms, 0.0))
+                    stl = scheduling.masked_round_state(rstate, m, key_l)
                     pcfg_l = dataclasses.replace(pcfg, n_scheduled=k_l)
                     return policy_fn(pcfg_l, stl) & m
 
                 masks_l = jnp.stack([
-                    sched_cluster(l, member[l], keys_l[l])
+                    sched_cluster(l, member_eff[l], keys_l[l])
                     for l in range(n_clusters)])
             elif cfg.policy == "random":
                 # cluster-aware twin of the registry policy: a random
@@ -1095,25 +1327,39 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
                     # intra-cluster view: non-members look unschedulable
                     # to every score-based policy (zero SNR/norm, infinite
                     # latency), so top-k picks min(k, |C_l|) members
-                    stl = rstate._replace(
-                        key=k,
-                        snr_lin=jnp.where(m, snr_lin, 0.0),
-                        avg_snr=jnp.where(m, avg_snr, 1.0),
-                        rates=jnp.where(m, rates, 1e-9),
-                        comm_lat=jnp.where(m, comm_lat, jnp.inf),
-                        comp_lat=jnp.where(m, comp_lat, jnp.inf),
-                        update_norms=jnp.where(m, norms, 0.0))
+                    stl = scheduling.masked_round_state(rstate, m, k)
                     return policy_fn(pcfg, stl) & m
 
             if not per_cluster_k:
                 if cfg.policy == "round_robin":
-                    masks_l = jax.vmap(sched_one)(member, keys_l, rank,
+                    masks_l = jax.vmap(sched_one)(member_eff, keys_l, rank,
                                                   n_groups)
                 else:
-                    masks_l = jax.vmap(sched_one)(member, keys_l)
+                    masks_l = jax.vmap(sched_one)(member_eff, keys_l)
             mask = jnp.any(masks_l, axis=0)
+            stal_pre = stal if faults_on else None
             ages = scheduling.update_ages_jax(ages, mask)
             mask_f = mask.astype(jnp.float32)
+
+            # --- mid-round dropout + decode failure + retransmissions ----
+            if faults_on:
+                dropped = faults_lib.dropout_draw(fparams, kt, n) & mask
+                ok = snr_lin >= fparams.snr_min
+                comm_eff = comm_lat
+                n_retx = jnp.zeros(n, jnp.float32)
+                for r in range(1, cfg.max_retries + 1):
+                    fad_r = faults_lib.retry_fading(kt, r, n)
+                    snr_r = wireless.snr_jax(dist, fad_r, chan_dev)
+                    lat_r = wireless.comm_latency_jax(bits_dev,
+                                                      rate_of(snr_r))
+                    need = ~ok
+                    comm_eff = comm_eff + jnp.where(need, lat_r, 0.0)
+                    n_retx = n_retx + need.astype(jnp.float32)
+                    ok = ok | (snr_r >= fparams.snr_min)
+                survived = mask & ~dropped & ok
+                part_f = survived.astype(jnp.float32)
+            else:
+                part_f = mask_f
 
             # --- local updates from each device's cluster model ----------
             client_params = broadcast_to_clients(cm, cluster_ids)
@@ -1144,7 +1390,12 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
                 keys_up = jax.random.split(k_up, n)
                 wire, bits = jax.vmap(compress_fn, in_axes=(None, 0, 0))(
                     cparams, keys_up, flat)
-                ef = flat - wire
+                if faults_on:
+                    # a dropped/undecoded client's residual carries forward
+                    # untouched — its payload never reached the SBS
+                    ef = jnp.where(survived[:, None], flat - wire, ef)
+                else:
+                    ef = flat - wire
                 flat = wire
                 if ctrl_flat is not None:
                     keys_c = jax.random.split(k_ctrl, n)
@@ -1152,29 +1403,50 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
                         compress_fn, in_axes=(None, 0, 0))(
                             cparams, keys_c, ctrl_flat)
                     bits = bits + cbits
-                ubits_intra = payload_scale * jnp.sum(bits * mask_f)
+                ubits_intra = payload_scale * jnp.sum(bits * part_f)
+                if faults_on:
+                    ubits_intra = ubits_intra + bits_dev * jnp.sum(
+                        jnp.where(mask & ~dropped,
+                                  n_retx + (~ok).astype(jnp.float32), 0.0))
             else:
                 k_bh = kz
-                ubits_intra = bits_dev * jnp.sum(mask_f)
+                if faults_on:
+                    ubits_intra = bits_dev * jnp.sum(jnp.where(
+                        mask & ~dropped, 1.0 + n_retx, 0.0))
+                else:
+                    ubits_intra = bits_dev * jnp.sum(mask_f)
 
             # --- SBS aggregation: masked per-cluster delta mean ----------
-            wgt = member_f * mask_f[None, :]                     # (L, N)
+            # (fault mode aggregates only the *survivors*; a cluster whose
+            # every scheduled member failed keeps its model bitwise)
+            wgt = member_f * part_f[None, :]                     # (L, N)
             cnt = jnp.sum(wgt, axis=1)                           # (L,)
             mean_delta = (wgt @ flat) / jnp.maximum(cnt, 1.0)[:, None]
             delta_tree = algo_registry.unflatten_rows(mean_delta, gm)
-            cm = jax.tree.map(
+            cm_new = jax.tree.map(
                 lambda m_, d_: (m_.astype(jnp.float32)
                                 + aparams.server_lr * d_).astype(m_.dtype),
                 cm, delta_tree)
+            if faults_on:
+                alive_l = cnt > 0.0
+                cm = jax.tree.map(
+                    lambda new, old: jnp.where(
+                        alive_l.reshape((n_clusters,)
+                                        + (1,) * (new.ndim - 1)), new, old),
+                    cm_new, cm)
+            else:
+                cm = cm_new
 
             # --- SCAFFOLD: cluster-level server control variates ---------
             # c_l = mean over the cluster's c_i stays invariant: scheduled
             # clients advance c_i by the *transmitted* ctrl delta, and the
             # SBS integrates the same quantity scaled by 1/|C_l|.
             if algo.uses_ctrl:
-                ctrl = ctrl + ctrl_wire * mask_f[:, None]
-                cc = cc + ((wgt @ ctrl_wire)
-                           / jnp.maximum(cluster_sizes, 1.0)[:, None])
+                ctrl = ctrl + ctrl_wire * part_f[:, None]
+                cc_upd = cc + ((wgt @ ctrl_wire)
+                               / jnp.maximum(cluster_sizes, 1.0)[:, None])
+                cc = (jnp.where(alive_l[:, None], cc_upd, cc)
+                      if faults_on else cc_upd)
 
             # --- periodic inter-cluster sync over the SBS->MBS backhaul --
             # lax.cond skips the (L, D) flatten/compress work entirely on
@@ -1220,31 +1492,68 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
                                                  (cm, gm, k_bh))
             ubits = ubits_intra + ubits_bh
 
-            # --- wall clock: slowest scheduled device + backhaul ---------
-            total = comm_lat + comp_lat
-            slowest = jnp.argmax(jnp.where(mask, total, -jnp.inf))
+            # --- downlink pricing (always on): each SBS broadcasts its
+            # cluster model to the members opening the round; on sync
+            # rounds the MBS additionally pushes the fresh global model
+            # back over every SBS's fronthaul link (parallel, equal cost).
+            mb = jnp.float32(cfg.model_bits)
+            dl_rate = wireless.shannon_rate_jax(
+                wireless.downlink_snr_jax(
+                    dist, faults_lib.downlink_fading(kt, n), chan_dev),
+                chan_dev.bandwidth_hz)
+            dl_lat = wireless.comm_latency_jax(mb, dl_rate)
             any_sched = jnp.any(mask)
-            comm_s = jnp.where(any_sched, comm_lat[slowest], 0.0)
-            comp_s = jnp.where(any_sched, comp_lat[slowest], 0.0)
-            clock = clock + comm_s + comp_s + bh_time
+            dl_s = jnp.max(jnp.where(mask, dl_lat, 0.0))
+            sync_f = sync.astype(jnp.float32)
+            bh_time = bh_time + sync_f * (mb / bh_rate)
+            dl_bits_out = (jnp.where(any_sched, mb * n_clusters, 0.0)
+                           + sync_f * mb * n_clusters)
+
+            # --- wall clock: slowest scheduled device + backhaul ---------
+            if faults_on:
+                comm_c = jnp.where(dropped, 0.0, comm_eff)
+                comp_c = jnp.where(dropped, 0.0, comp_lat)
+            else:
+                comm_c, comp_c = comm_lat, comp_lat
+            total = comm_c + comp_c
+            slowest = jnp.argmax(jnp.where(mask, total, -jnp.inf))
+            comm_s = jnp.where(any_sched, comm_c[slowest], 0.0)
+            comp_s = jnp.where(any_sched, comp_c[slowest], 0.0)
+            clock = clock + dl_s + comm_s + comp_s + bh_time
+
+            if faults_on:
+                stal_log = jnp.mean(stal_pre)
+                stal = jnp.where(survived, 0.0, stal + 1.0)
+                retx_log = jnp.sum(jnp.where(mask & ~dropped, n_retx, 0.0))
+                n_surv = jnp.sum(survived).astype(jnp.int32)
+                n_drop = jnp.sum(mask & ~survived).astype(jnp.int32)
+            else:
+                stal_log = jnp.float32(0.0)
+                retx_log = jnp.float32(0.0)
+                n_surv = jnp.sum(mask).astype(jnp.int32)
+                n_drop = jnp.int32(0)
 
             loss = jnp.mean(losses)
             if has_eval:
                 loss = loss_fn(inter_cluster_average(cm, cluster_sizes),
                                eval_batch)[0]
             norms = 0.9 * norms + 0.1 * jax.random.exponential(kn, (n,))
-            return (cm, gm, ef, ctrl, cc, clock, ages, norms, avg_snr), (
-                loss, clock, mask, jnp.sum(mask), ubits, comm_s, comp_s)
+            new_carry = (cm, gm, ef, ctrl, cc, clock, ages, norms, avg_snr)
+            if faults_on:
+                new_carry = new_carry + (avail, fad, stal)
+            return new_carry, (
+                loss, clock, mask, jnp.sum(mask), ubits, comm_s, comp_s,
+                dl_bits_out, n_surv, n_drop, retx_log, stal_log)
 
         return step
 
-    def engine(key, chan, cparams, aparams, bh_rate, init_params,
-               batches_all, eval_batch):
+    def _scan(key, chan, cparams, aparams, bh_rate, fparams, init_params,
+              batches_all, eval_batch):
         ENGINE_STATS["traces"] += 1  # python side effect: runs at trace only
         k_geo, k_rounds = jax.random.split(key)
         geo = hfl_geometry_jax(k_geo, hcfg, n)
-        step = make_step(chan, cparams, aparams, bh_rate, geo, k_rounds,
-                         eval_batch)
+        step = make_step(chan, cparams, aparams, bh_rate, fparams, geo,
+                         k_rounds, eval_batch)
         ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
         carry, outs = lax.scan(step, init_carry(init_params),
                                (ts, batches_all))
@@ -1253,6 +1562,17 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
             lambda p0, f: f.astype(p0.dtype), init_params,
             inter_cluster_average(cm, geo[3]))
         return final, outs
+
+    if faults_on:
+        def engine(key, chan, cparams, aparams, bh_rate, fparams,
+                   init_params, batches_all, eval_batch):
+            return _scan(key, chan, cparams, aparams, bh_rate, fparams,
+                         init_params, batches_all, eval_batch)
+    else:
+        def engine(key, chan, cparams, aparams, bh_rate, init_params,
+                   batches_all, eval_batch):
+            return _scan(key, chan, cparams, aparams, bh_rate, None,
+                         init_params, batches_all, eval_batch)
 
     return init_carry, make_step, engine
 
@@ -1272,15 +1592,16 @@ def _get_hfl_engine(cfg: SimConfig, hcfg: HFLConfig,
                     *, vmapped: bool = False, mesh=None) -> Callable:
     def make():
         _, _, engine = _make_hfl_fns(cfg, hcfg, wcfg, loss_fn, has_eval)
+        n_var = 5 + (cfg.faults is not None)
         if vmapped:
             vengine = jax.vmap(engine,
-                               in_axes=(0, 0, 0, 0, 0, None, None, None))
+                               in_axes=(0,) * n_var + (None,) * 3)
             if mesh is not None:
                 from jax.sharding import PartitionSpec as P
                 axis = mesh.axis_names[0]
                 vengine = compat.shard_map(
                     vengine, mesh=mesh,
-                    in_specs=(P(axis),) * 5 + (P(), P(), P()),
+                    in_specs=(P(axis),) * n_var + (P(), P(), P()),
                     out_specs=(P(axis), P(axis)))
             return jax.jit(vengine)
         # no donation: the broadcast to (L, ...) cluster models copies the
@@ -1302,10 +1623,16 @@ def _get_hfl_host_step(cfg: SimConfig, hcfg: HFLConfig,
     def make():
         _, make_step, _ = _make_hfl_fns(cfg, hcfg, wcfg, loss_fn, has_eval)
 
-        def host_step(chan, cparams, aparams, bh_rate, geo, k_rounds,
-                      eval_batch, carry, xs):
-            return make_step(chan, cparams, aparams, bh_rate, geo, k_rounds,
-                             eval_batch)(carry, xs)
+        if cfg.faults is not None:
+            def host_step(chan, cparams, aparams, bh_rate, fparams, geo,
+                          k_rounds, eval_batch, carry, xs):
+                return make_step(chan, cparams, aparams, bh_rate, fparams,
+                                 geo, k_rounds, eval_batch)(carry, xs)
+        else:
+            def host_step(chan, cparams, aparams, bh_rate, geo, k_rounds,
+                          eval_batch, carry, xs):
+                return make_step(chan, cparams, aparams, bh_rate, None, geo,
+                                 k_rounds, eval_batch)(carry, xs)
 
         return jax.jit(host_step)
 
@@ -1395,13 +1722,17 @@ def run_hfl(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
     eng = _get_hfl_engine(cfg, hcfg, wcfg_stat, loss_fn,
                           eval_batch is not None)
     key = jax.random.PRNGKey(cfg.seed)
+    fargs = (cfg.faults,) if cfg.faults is not None else ()
     _, outs = eng(key, chan, cparams, aparams,
-                  jnp.float32(hcfg.backhaul_rate_bps), init_params, batches,
-                  eval_batch)
-    losses, clocks, masks, nsched, ubits, comm_s, comp_s = jax.device_get(outs)
+                  jnp.float32(hcfg.backhaul_rate_bps), *fargs, init_params,
+                  batches, eval_batch)
+    (losses, clocks, masks, nsched, ubits, comm_s, comp_s, dl_bits,
+     n_surv, n_drop, retx, stal) = jax.device_get(outs)
     return SimLogs(loss=losses, latency_s=clocks, n_scheduled=nsched,
                    participation=masks, uplink_bits=ubits, comm_s=comm_s,
-                   comp_s=comp_s).to_round_logs()
+                   comp_s=comp_s, downlink_bits=dl_bits, n_survived=n_surv,
+                   n_dropped=n_drop, retransmissions=retx,
+                   staleness_mean=stal).to_round_logs()
 
 
 def _run_hfl_host(cfg: SimConfig, hcfg: HFLConfig, loss_fn,
@@ -1419,17 +1750,20 @@ def _run_hfl_host(cfg: SimConfig, hcfg: HFLConfig, loss_fn,
     cparams = _resolve_cparams(cfg, init_params)
     aparams = _resolve_aparams(cfg)
 
+    fargs = (cfg.faults,) if cfg.faults is not None else ()
     carry = init_carry(init_params)
     logs: List[RoundLog] = []
     for t in range(cfg.rounds):
         bt = sample_client_batches(t, cfg.n_devices)
-        carry, (loss, clock, mask, nsched, ubits, comm_s, comp_s) = step(
-            chan, cparams, aparams, jnp.float32(hcfg.backhaul_rate_bps), geo,
-            k_rounds, eval_batch, carry, (jnp.int32(t), bt))
+        carry, (loss, clock, mask, nsched, ubits, comm_s, comp_s, dl_bits,
+                n_surv, n_drop, retx, stal) = step(
+            chan, cparams, aparams, jnp.float32(hcfg.backhaul_rate_bps),
+            *fargs, geo, k_rounds, eval_batch, carry, (jnp.int32(t), bt))
         lv = float(loss)
         if eval_fn is not None and not has_eval:
             lv = eval_fn(inter_cluster_average(carry[0], geo[3]))
         logs.append(RoundLog(t, float(clock), lv, int(nsched),
                              np.asarray(mask), float(ubits), float(comm_s),
-                             float(comp_s)))
+                             float(comp_s), float(dl_bits), int(n_surv),
+                             int(n_drop), float(retx), float(stal)))
     return logs

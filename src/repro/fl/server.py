@@ -173,6 +173,8 @@ def fl_round(state: FLState, stacked_batches, loss_fn, *,
              compression_name: Optional[str] = None,
              chunk_size: Optional[int] = None,
              n_clients: Optional[int] = None,
+             staleness_weights: Optional[jnp.ndarray] = None,
+             gate_ef: bool = False, guard_empty: bool = False,
              lr=None, server=None, server_lr=None, slowmo_beta=None,
              momentum=None) -> Tuple[FLState, Dict[str, jnp.ndarray]]:
     """One FL round.
@@ -204,6 +206,18 @@ def fl_round(state: FLState, stacked_batches, loss_fn, *,
     through the kernel row APIs (real Pallas on TPU). The old ``lr=``/
     ``server=``/``server_lr=``/``slowmo_beta=``/``momentum=`` kwargs are
     deprecated and map onto the registry for one release.
+
+    Failure-aware hooks (the fault engine's degradation semantics):
+    ``staleness_weights`` (N,) multiplies each client's *wire* message
+    before the aggregation sum only — EF accrues the true residual and the
+    participation mask stays a select, so an all-ones weight vector is
+    bitwise identical to passing ``None`` (``x * 1.0`` is an IEEE-754
+    identity). ``gate_ef`` freezes non-participating clients' EF rows (a
+    dropped client's error state carries forward untouched instead of
+    accruing against an update that never shipped). ``guard_empty``
+    restores the pre-round params / server state / downlink EF when *no*
+    client participates — an all-failed round is bitwise a no-op even for
+    stateful server optimizers.
     """
     a, ap = _resolve_algo(algo, aparams, lr, server, server_lr, slowmo_beta,
                           momentum)
@@ -244,12 +258,19 @@ def fl_round(state: FLState, stacked_batches, loss_fn, *,
     part = (participation.astype(jnp.float32)
             if participation is not None else None)
 
+    sw = (staleness_weights.astype(jnp.float32)
+          if staleness_weights is not None else None)
+    if gate_ef and part is None:
+        raise ValueError("fl_round(gate_ef=True) needs participation= "
+                         "(the gate freezes non-participants' EF rows)")
+
     # --- one block of the client pass (Alg. 6/7 lines 4-11) ---------------
     # Per-client work only: local updates, message flattening, EF +
     # compression, then canonical partial sums. Every client compresses
     # (and accrues EF error) whether or not it is scheduled; participation
-    # gates the sums only. The unchunked pass is this function called once.
-    def client_block(ids, batches_b, part_b, ef_b, ctrl_b):
+    # gates the sums only (plus, under gate_ef, the EF advancement). The
+    # unchunked pass is this function called once.
+    def client_block(ids, batches_b, part_b, sw_b, ef_b, ctrl_b):
         valid = (ids < n).astype(jnp.float32)
         if a.uses_ctrl:
             ci_tree = algorithms.unflatten_rows(
@@ -295,8 +316,22 @@ def fl_round(state: FLState, stacked_batches, loss_fn, *,
                 ctrl_wire, cbits = rows_fn(cparams, keys_c, ctrl_flat)
                 bits = bits + cbits
 
+        if gate_ef and comp_active and ef_b is not None:
+            # dropped / failed clients' error state carries forward
+            # untouched (their residual is not lost against an update that
+            # never shipped); a row-select, so surviving rows stay bitwise
+            keep = (part_b != 0)
+            new_ef_b = jax.tree.map(
+                lambda nw, old: jnp.where(
+                    keep.reshape((-1,) + (1,) * (nw.ndim - 1)), nw, old),
+                new_ef_b, ef_b)
+
         w = valid if part_b is None else part_b
-        psums = {"delta": chunking.canonical_sum(flat, w),
+        # staleness discount multiplies the *wire* message in the sum only
+        # (EF above saw the true residual); all-ones weights are bitwise
+        # the unweighted sum (x * 1.0 == x in IEEE-754)
+        dsrc = flat if sw_b is None else flat * sw_b[:, None]
+        psums = {"delta": chunking.canonical_sum(dsrc, w),
                  "loss": chunking.canonical_sum(losses, valid)}
         if bits is not None:
             psums["bits"] = chunking.canonical_sum(bits, w)
@@ -315,21 +350,23 @@ def fl_round(state: FLState, stacked_batches, loss_fn, *,
         _check_state_rows(ef, state.ctrl, npad, "chunk_size")
         part_pad = (None if part is None
                     else jnp.pad(part, (0, npad - n)).reshape(m, chunk))
+        sw_pad = (None if sw is None
+                  else jnp.pad(sw, (0, npad - n)).reshape(m, chunk))
         ef_blocks = _reshape_rows(ef, (m, chunk))
         ctrl_blocks = _reshape_rows(state.ctrl, (m, chunk))
 
         def scan_block(_, xs):
-            b, part_b, ef_b, ctrl_b = xs
+            b, part_b, sw_b, ef_b, ctrl_b = xs
             ids = chunking.block_ids(b, chunk)
             psums, new_ef_b, new_ctrl_b = client_block(
                 ids, batch_fn(ids) if batch_fn is not None
                 else jax.tree.map(lambda x: x[ids], stacked_batches),
-                part_b, ef_b, ctrl_b)
+                part_b, sw_b, ef_b, ctrl_b)
             return None, (psums, new_ef_b, new_ctrl_b)
 
         _, (psums_m, ef_m, ctrl_m) = lax.scan(
             scan_block, None,
-            (jnp.arange(m, dtype=jnp.int32), part_pad, ef_blocks,
+            (jnp.arange(m, dtype=jnp.int32), part_pad, sw_pad, ef_blocks,
              ctrl_blocks))
         # block partials are aligned subtrees of the full canonical tree, so
         # folding them canonically reproduces the unchunked sum bit-for-bit
@@ -340,8 +377,8 @@ def fl_round(state: FLState, stacked_batches, loss_fn, *,
         _check_state_rows(ef, state.ctrl, n, "the client count")
         ids = jnp.arange(n, dtype=jnp.int32)
         batches = (batch_fn(ids) if batch_fn is not None else stacked_batches)
-        totals, client_error, new_ctrl = client_block(ids, batches, part, ef,
-                                                      state.ctrl)
+        totals, client_error, new_ctrl = client_block(ids, batches, part, sw,
+                                                      ef, state.ctrl)
 
     # --- aggregation (Alg. 6 line 12): participation-masked mean ----------
     nsched = jnp.sum(part) if part is not None else None
@@ -370,6 +407,22 @@ def fl_round(state: FLState, stacked_batches, loss_fn, *,
     # --- server update (registry triple) ---
     new_params, new_opt = a.server_update(ap, state.params, mean_delta,
                                           state.server_opt, ctrl_aux)
+
+    if guard_empty and part is not None:
+        # graceful degradation: an all-failed round is bitwise a no-op —
+        # the model, server optimizer state, and downlink EF all carry
+        # forward (a zero mean delta is *not* enough: momentum/Adam state
+        # and the fedbuff buffer counter would still advance). Rounds with
+        # any survivor select the freshly computed values elementwise,
+        # which is bitwise the unguarded result.
+        alive = nsched > 0
+        new_params = jax.tree.map(lambda a_, b_: jnp.where(alive, a_, b_),
+                                  new_params, state.params)
+        new_opt = jax.tree.map(lambda a_, b_: jnp.where(alive, a_, b_),
+                               new_opt, state.server_opt)
+        if server_error is not None:
+            server_error = jnp.where(alive, server_error,
+                                     state.server_error)
 
     metrics = {"loss": totals["loss"] / n,
                "delta_norm": _global_norm(mean_delta)}

@@ -29,7 +29,7 @@ def _make_problem():
 def test_registry_returns_triple_for_every_algorithm():
     assert set(algorithm_names()) == {
         "fedavg", "fedavg_m", "fedprox", "scaffold", "slowmo", "fedadam",
-        "fedyogi"}
+        "fedyogi", "fedbuff"}
     for name in algorithm_names():
         a = get_algorithm(name)
         assert callable(a.client_update) and callable(a.server_update)

@@ -236,6 +236,37 @@ def test_engine_sparse_bf16_runs_finite():
     assert np.all(np.isfinite(logs.loss))
 
 
+@pytest.mark.parametrize("algo,comp", [("fedavg", "topk"),
+                                       ("scaffold", "topk"),
+                                       ("fedbuff", "none")])
+def test_engine_chunk_parity_with_faults(algo, comp):
+    """Fault draws are keyed per-client (fold constants off the round key),
+    so the chunked client pass reproduces the unchunked engine bitwise
+    with churn + dropout + stragglers + retransmissions enabled."""
+    from repro.core.faults import fault_params
+    params, loss_fn, make_batches, _ = _problem()
+    rounds = 4
+    batches = rt.stack_batches(make_batches, rounds, N)
+    faults = fault_params(drop_prob=0.3, churn_p_off=0.2, churn_p_on=0.6,
+                          straggler_prob=0.3, snr_min=2.0, fading_rho=0.7)
+    out = {}
+    for chunk in (None, CHUNK):
+        cfg = rt.SimConfig(n_devices=N, n_scheduled=4, rounds=rounds,
+                           seed=9, algo_params=AP01, algorithm=algo,
+                           compression=comp, chunk_size=chunk,
+                           faults=faults, max_retries=2)
+        out[chunk] = rt.run_simulation_scan(
+            cfg, loss_fn, jax.tree.map(jnp.array, params), batches)
+    p_u, l_u = out[None]
+    p_c, l_c = out[CHUNK]
+    np.testing.assert_array_equal(l_u.loss, l_c.loss)
+    np.testing.assert_array_equal(l_u.latency_s, l_c.latency_s)
+    np.testing.assert_array_equal(l_u.n_survived, l_c.n_survived)
+    np.testing.assert_array_equal(l_u.retransmissions, l_c.retransmissions)
+    for a, b in zip(jax.tree.leaves(p_u), jax.tree.leaves(p_c)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_scan_engine_requires_batches_or_datagen():
     params, loss_fn, _, _ = _problem()
     cfg = rt.SimConfig(n_devices=N, n_scheduled=4, rounds=2,
