@@ -17,8 +17,8 @@ import traceback
 
 from benchmarks import (bench_algorithms, bench_compression, bench_faults,
                         bench_fleet, bench_hfl, bench_kernels,
-                        bench_rs_rr_pf, bench_scheduling, bench_sweep,
-                        bench_update_aware)
+                        bench_privacy, bench_rs_rr_pf, bench_scheduling,
+                        bench_sweep, bench_update_aware)
 from benchmarks import common, roofline
 
 MODULES = [
@@ -31,6 +31,7 @@ MODULES = [
     ("kernels", bench_kernels),
     ("fleet(chunked-engine)", bench_fleet),
     ("faults(failure-aware)", bench_faults),
+    ("privacy(secagg+dp)", bench_privacy),
     # last: it clears the engine cache to time cold-cache compile+dispatch
     ("sweep(mega)", bench_sweep),
 ]

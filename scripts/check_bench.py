@@ -43,7 +43,7 @@ from typing import Dict, List, Sequence, Tuple
 
 DEFAULT_GATED = ("engine.scan_us_per_round", "algorithms.*", "fleet.*",
                  "kernel.*_pallas", "sweep.variants_per_s*", "tune.*",
-                 "faults.*")
+                 "faults.*", "privacy.*")
 # fnmatch is full-string, so "kernel.*_pallas" gates the dispatch-path rows
 # (kernel.topk_pallas, ...) without catching kernel.*_pallas_interpret.
 # "sweep.variants_per_s*" gates the mega-sweep headline (one-call mixture
@@ -52,12 +52,14 @@ DEFAULT_GATED = ("engine.scan_us_per_round", "algorithms.*", "fleet.*",
 # "faults.*" gates the failure-aware engine's cost rows (us_per_round,
 # rounds_per_s, rounds_per_s_overhead) — the literal "." keeps the ungated
 # faults_frontier.* loss/wall-clock diagnostics out, and algorithms.fedbuff
-# is already gated by "algorithms.*".
+# is already gated by "algorithms.*". "privacy.*" likewise gates the
+# secagg+dp engine cost rows while the literal "." keeps the ungated
+# privacy_frontier.* loss/epsilon diagnostics out.
 
 # Gated metrics where *larger* is the good direction (throughput rows):
 # these regress when new < baseline / tolerance.
 HIGHER_IS_BETTER = ("fleet.rounds_per_s*", "sweep.variants_per_s*",
-                    "faults.rounds_per_s*")
+                    "faults.rounds_per_s*", "privacy.rounds_per_s*")
 SKIP_TOKEN = "[bench-skip]"
 
 

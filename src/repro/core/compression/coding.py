@@ -18,6 +18,7 @@ from typing import List, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 
 def _block_size(d: int, nnz: int) -> int:
@@ -123,3 +124,42 @@ def elias_gamma_bits_jax(gaps: jnp.ndarray) -> jnp.ndarray:
     g = jnp.asarray(gaps, jnp.float32)
     cost = 2.0 * jnp.floor(jnp.log2(jnp.maximum(g, 1.0)) + _LOG2_EPS) + 1.0
     return jnp.sum(jnp.where(g >= 1.0, cost, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Finite-field fixed-point codec (secure aggregation, core/privacy)
+# ---------------------------------------------------------------------------
+# Pairwise secure-aggregation masks only cancel *exactly* in modular
+# arithmetic: float addition neither wraps nor associates, so masked sums
+# must live in Z_{2^32}. The codec below maps a clipped float32 message onto
+# symmetric fixed point over uint32 — hardware wraparound is the field
+# reduction. ``field_bits`` is *traced* (a sweep axis); ``exp2`` is exact at
+# integer arguments so the scale is bit-deterministic. A sum of ``m``
+# encodings decodes exactly as long as ``m * 2^(field_bits-1) < 2^31``
+# (no int32 overflow of the centered representative) — 24-bit messages sum
+# 256 clients, 16-bit messages 65536.
+
+
+def field_scale(clip: jnp.ndarray, field_bits: jnp.ndarray) -> jnp.ndarray:
+    """Fixed-point scale: the clip value maps to ``2^(field_bits-1) - 1``."""
+    clip = jnp.asarray(clip, jnp.float32)
+    fb = jnp.asarray(field_bits, jnp.float32)
+    return (jnp.exp2(fb - 1.0) - 1.0) / jnp.maximum(clip, 1e-30)
+
+
+def to_field(x: jnp.ndarray, clip: jnp.ndarray,
+             field_bits: jnp.ndarray) -> jnp.ndarray:
+    """Clamp ``x`` to ``[-clip, clip]`` and encode as uint32 field elements
+    (symmetric fixed point, negative values wrap to the top of the ring)."""
+    clip = jnp.asarray(clip, jnp.float32)
+    s = field_scale(clip, field_bits)
+    q = jnp.round(jnp.clip(x.astype(jnp.float32), -clip, clip) * s)
+    return lax.bitcast_convert_type(q.astype(jnp.int32), jnp.uint32)
+
+
+def from_field(q: jnp.ndarray, clip: jnp.ndarray,
+               field_bits: jnp.ndarray) -> jnp.ndarray:
+    """Decode uint32 field elements (or modular *sums* of them) back to
+    float32, taking the centered representative in ``[-2^31, 2^31)``."""
+    s = field_scale(clip, field_bits)
+    return lax.bitcast_convert_type(q, jnp.int32).astype(jnp.float32) / s

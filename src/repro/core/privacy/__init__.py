@@ -1,0 +1,15 @@
+"""Privacy mechanisms as a registry axis (secure aggregation + DP).
+
+The static mechanism *name* keys the engine cache; every continuous knob
+(clip, noise multiplier, field width) rides the traced
+:class:`PrivacyParams`, so clip x sigma grids sweep with zero retraces.
+See :mod:`repro.core.privacy.registry` for the mechanism catalogue, the
+finite-field mask algebra, wire pricing, and the Renyi accountant.
+"""
+from repro.core.privacy.registry import (  # noqa: F401
+    ALPHAS, DELTA, FIELD_COMPATIBLE, KEY_BITS, MASK_FOLD, NOISE_FOLD,
+    PRIVACY_FOLD, Privacy, PrivacyParams, central_noise, clip_rows,
+    default_privacy_params, epsilon_of, field_noise_rows, get_privacy,
+    mask_bits_jax, mask_rows, pairwise_masks, privacy_names, privacy_params,
+    rdp_increment, stack_privacy_params, uplink_bits_jax,
+    validate_privacy_config)

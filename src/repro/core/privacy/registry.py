@@ -1,0 +1,370 @@
+"""First-class privacy registry for the compiled simulation engine.
+
+The source paper motivates collaborative training with data locality
+("addresses, to some extent, the privacy concern"), yet a bare FL round
+still ships every client's update to the server in the clear. The two
+standard remedies — **secure aggregation** (the server sees only the sum)
+and **differential privacy** (clipping + calibrated noise) — both cost
+something on the wireless link, and that cost is exactly what this engine
+prices. This registry makes privacy the *fourth* registry axis, following
+the compression/algorithm split:
+
+* the privacy **name** is static (an engine-cache key / Python-loop axis);
+* the continuous knobs travel in a traced :class:`PrivacyParams`
+  ``(clip, sigma, field_bits)`` NamedTuple, so a clip x sigma grid vmaps
+  through ``run_sweep(pparams_grid=)`` with zero retraces;
+* :func:`get_privacy` returns a pure-jnp
+  ``(client_transform, server_transform, init_privacy_state)`` triple plus
+  the static facts the engine specializes on (``uses_field`` /
+  ``uses_dp`` / ``uses_masks`` / ``dp_local``).
+
+Registered mechanisms
+---------------------
+
+``none``
+    The legacy clear-text path, bit-for-bit (the privacy key is not even
+    derived, so key streams are unchanged).
+``secagg``
+    Pairwise-mask secure aggregation over the uint32 finite field
+    (``coding.to_field`` fixed point). Client ``i`` adds
+    ``sum_{j in S, j != i} (g_i - g_j) = |S| * g_i - sum_{j in S} g_j``
+    to its encoded message, where ``g_i`` is its PRG mask vector and ``S``
+    the surviving cohort — exactly the Bonawitz et al. pairwise-mask
+    algebra *after* the server's dropout-recovery round has cancelled the
+    shares of failed clients (computed in closed form here: the key
+    agreement itself is priced, via :func:`mask_bits_jax`, not simulated
+    cryptographically). The masks cancel mod ``2^32`` for **any** survivor
+    set, so churn/dropout never bias the aggregate, and the modular sum is
+    associative, so the chunked pass is trivially exact.
+``dp``
+    Central (curator) DP-SGD: per-client L2 clipping to ``clip`` plus
+    server-side Gaussian noise ``sigma * clip * N(0, I)`` on the *sum*,
+    with a per-round Renyi (moments-accountant) ledger folding
+    ``(epsilon, delta)`` into the logs.
+``secagg_dp``
+    Composition: distributed DP under secure aggregation. Each client adds
+    *discrete* (rounded) Gaussian noise of std ``sigma * clip`` in the
+    field domain before masking, so the server's decoded sum carries
+    aggregate noise std ``sigma * clip * sqrt(m)`` — effective noise
+    multiplier ``sigma * sqrt(m)`` without any party seeing another's
+    update.
+
+A hidden ``"_secagg_unmasked"`` entry (resolvable, excluded from
+:func:`privacy_names`) runs the identical clip/encode/decode pipeline
+*without* masks — the bitwise oracle for the mask-cancellation acceptance
+tests.
+
+Composition with compression is constrained: masked sums need the finite
+field, so the wire message is dense ``field_bits``-per-coordinate and the
+sparse position-coded compressors (topk/randk/rtopk) are illegal under the
+field modes (:data:`FIELD_COMPATIBLE`, enforced by
+:func:`validate_privacy_config`). SCAFFOLD's second (control-variate)
+uplink is not privatized, so any privacy bans it; fedbuff's fractional
+staleness weights cannot scale uint32 field elements, so the field modes
+ban it (plain ``dp`` allows it — weights <= 1 keep the L2 sensitivity at
+``clip``).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import chunking
+from repro.core.compression import coding
+
+# domain-separation tags (disjoint from core.faults' and DATAGEN_FOLD's):
+# every privacy draw folds the round key under PRIVACY_FOLD first, so
+# enabling privacy never shifts the engine's legacy randomness streams,
+# then under its own sub-tag per consumer.
+PRIVACY_FOLD = 0x9C1A   # round key -> privacy key (derived only when active)
+MASK_FOLD = 0x3A5C      # per-client pairwise-mask PRG seeds
+NOISE_FOLD = 0xA01E     # DP noise (per-client for dp_local, server central)
+
+# mask-agreement pricing: one pairwise key agreement (e.g. an ECDH public
+# key each way) per client pair, re-run every round because the cohort
+# changes; 256 bits per key share.
+KEY_BITS = 256.0
+
+# compressors whose wire format survives field encoding: dense operators
+# only — the sparse family's position coding cannot pass through a masked
+# modular sum (every coordinate of the masked message is uniformly random).
+FIELD_COMPATIBLE = ("none", "sign", "scaled_sign", "blockwise_scaled_sign",
+                    "ternary", "qsgd")
+
+# Renyi-DP accountant grid: static orders so the per-round ledger is a
+# fixed-length traced vector in the scan carry; DELTA is the target delta
+# at which the logged epsilon is reported.
+ALPHAS = (2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
+DELTA = 1e-5
+
+
+class PrivacyParams(NamedTuple):
+    """Traceable (vmappable) privacy-mechanism parameters.
+
+    Continuous on purpose — a sweep stacks these along a leading variant
+    axis (:func:`stack_privacy_params`) and the engine vmaps over them, so
+    a clip x sigma x field_bits grid costs zero retraces. ``clip`` is the
+    per-client L2 sensitivity bound (also the field codec's clamp range),
+    ``sigma`` the noise multiplier (noise std = ``sigma * clip``), and
+    ``field_bits`` the fixed-point width of the secure-aggregation field
+    (a sum of ``m`` messages decodes exactly while
+    ``m * 2^(field_bits-1) < 2^31``).
+    """
+    clip: jnp.ndarray
+    sigma: jnp.ndarray
+    field_bits: jnp.ndarray
+
+
+def privacy_params(clip: float = 1.0, sigma: float = 0.0,
+                   field_bits: float = 20.0) -> PrivacyParams:
+    return PrivacyParams(clip=jnp.float32(clip), sigma=jnp.float32(sigma),
+                         field_bits=jnp.float32(field_bits))
+
+
+def default_privacy_params() -> PrivacyParams:
+    return privacy_params()
+
+
+def stack_privacy_params(ps) -> PrivacyParams:
+    """Stack params along a leading variant axis (``run_sweep``'s vmap)."""
+    ps = list(ps)
+    return PrivacyParams(*(jnp.stack([getattr(p, f) for p in ps])
+                           for f in PrivacyParams._fields))
+
+
+# ---------------------------------------------------------------------------
+# Per-client primitives (chunk-invariant: fold_in(tagged key, client_id))
+# ---------------------------------------------------------------------------
+def clip_rows(pp: PrivacyParams, rows: jnp.ndarray) -> jnp.ndarray:
+    """Per-row L2 clipping to ``pp.clip`` (the DP sensitivity bound).
+
+    Formulated as a *select* between the raw and rescaled row rather than
+    ``rows * minimum(1, clip/nrm)``: a bare multiply feeding the canonical
+    client sum is fair game for XLA fma contraction, which lowers
+    differently in the chunked scan body than in the one-shot pass and
+    breaks bitwise chunk invariance by 1 ulp. The select pins the wire
+    rows (identical math: the dropped factor is exactly 1.0)."""
+    nrm = jnp.linalg.norm(rows, axis=-1, keepdims=True)
+    scaled = rows * (pp.clip / jnp.maximum(nrm, 1e-30))
+    return jnp.where(nrm > pp.clip, scaled, rows)
+
+
+def mask_rows(privacy_key: jax.Array, ids: jnp.ndarray,
+              d: int) -> jnp.ndarray:
+    """Per-client PRG mask vectors ``g_i``: (len(ids), d) uint32, keyed
+    ``fold_in(fold_in(privacy_key, MASK_FOLD), id)`` so row ``i`` depends
+    only on (key, id) — invariant to client batching (chunked pass)."""
+    keys = chunking.client_keys(
+        jax.random.fold_in(privacy_key, MASK_FOLD), ids)
+    return jax.vmap(lambda k: jax.random.bits(k, (d,), jnp.uint32))(keys)
+
+
+def pairwise_masks(privacy_key: jax.Array, ids: jnp.ndarray, d: int,
+                   gsum: jnp.ndarray, cnt: jnp.ndarray) -> jnp.ndarray:
+    """Each surviving client's summed pairwise mask,
+    ``|S| * g_i - sum_{j in S} g_j`` (uint32, wraps): bit-for-bit the sum
+    of antisymmetric pair masks ``g_i - g_j`` over the surviving peers
+    ``j in S`` (a client's pair share with itself cancels), which is what
+    remains of the Bonawitz construction once dropped clients' shares are
+    reconstructed and removed. Sums to 0 mod ``2^32`` over any ``S``."""
+    g = mask_rows(privacy_key, ids, d)
+    return cnt.astype(jnp.uint32) * g - gsum[None, :]
+
+
+def field_noise_rows(pp: PrivacyParams, privacy_key: jax.Array,
+                     ids: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Per-client discrete (rounded) Gaussian noise in field units,
+    std ``sigma * clip`` in message space: (len(ids), d) uint32 addends."""
+    keys = chunking.client_keys(
+        jax.random.fold_in(privacy_key, NOISE_FOLD), ids)
+    z = jax.vmap(lambda k: jax.random.normal(k, (d,), jnp.float32))(keys)
+    s = coding.field_scale(pp.clip, pp.field_bits)
+    q = jnp.round(pp.sigma * pp.clip * s * z).astype(jnp.int32)
+    return jax.lax.bitcast_convert_type(q, jnp.uint32)
+
+
+def central_noise(pp: PrivacyParams, privacy_key: jax.Array,
+                  d: int) -> jnp.ndarray:
+    """Server-side Gaussian noise for the central-DP sum: (d,) float32 of
+    std ``sigma * clip`` (calibrated to the clipped per-client L2
+    sensitivity)."""
+    k = jax.random.fold_in(privacy_key, NOISE_FOLD)
+    return pp.sigma * pp.clip * jax.random.normal(k, (d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+# client_transform: (pp, privacy_key, ids, rows (c, D) float32) -> wire rows
+# (float32 for clear/dp modes, uint32 field elements for the field modes;
+# pairwise masks are applied separately — they need the cohort aggregate).
+# server_transform: (pp, privacy_key, total (D,)) -> float32 sum (decodes
+# the field / adds central noise). init_privacy_state: () -> accountant
+# state (the RDP ledger vector) or None.
+
+
+def _ct_none(pp, key, ids, rows):
+    return rows
+
+
+def _ct_dp(pp, key, ids, rows):
+    return clip_rows(pp, rows)
+
+
+def _ct_secagg(pp, key, ids, rows):
+    return coding.to_field(rows, pp.clip, pp.field_bits)
+
+
+def _ct_secagg_dp(pp, key, ids, rows):
+    q = coding.to_field(clip_rows(pp, rows), pp.clip, pp.field_bits)
+    return q + field_noise_rows(pp, key, ids, rows.shape[-1])
+
+
+def _st_none(pp, key, total):
+    return total
+
+
+def _st_dp(pp, key, total):
+    return total + central_noise(pp, key, total.shape[-1])
+
+
+def _st_field(pp, key, total):
+    return coding.from_field(total, pp.clip, pp.field_bits)
+
+
+def _init_state_none():
+    return None
+
+
+def _init_state_dp():
+    return jnp.zeros(len(ALPHAS), jnp.float32)
+
+
+class Privacy(NamedTuple):
+    """A registered privacy mechanism: the static facts the engine
+    specializes on plus the pure-jnp transform triple."""
+    name: str
+    uses_field: bool     # wire messages are uint32 field elements
+    uses_dp: bool        # clipping + noise + (epsilon, delta) accounting
+    uses_masks: bool     # pairwise secure-aggregation masks (priced)
+    dp_local: bool       # noise added per-client (in the field domain)
+    client_transform: Callable
+    server_transform: Callable
+    init_privacy_state: Callable
+
+
+_REGISTRY: Dict[str, Privacy] = {
+    "none": Privacy("none", False, False, False, False,
+                    _ct_none, _st_none, _init_state_none),
+    "secagg": Privacy("secagg", True, False, True, False,
+                      _ct_secagg, _st_field, _init_state_none),
+    "dp": Privacy("dp", False, True, False, False,
+                  _ct_dp, _st_dp, _init_state_dp),
+    "secagg_dp": Privacy("secagg_dp", True, True, True, True,
+                         _ct_secagg_dp, _st_field, _init_state_dp),
+    # hidden oracle: the secagg pipeline minus the masks — bitwise equal
+    # aggregates are the mask-cancellation acceptance criterion
+    "_secagg_unmasked": Privacy("_secagg_unmasked", True, False, False,
+                                False, _ct_secagg, _st_field,
+                                _init_state_none),
+}
+
+
+def get_privacy(name: str) -> Privacy:
+    """Registry lookup: name -> :class:`Privacy` (the *name* is a static
+    engine argument; every continuous knob rides :class:`PrivacyParams`)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown privacy mechanism {name!r}; "
+                         f"known: {sorted(privacy_names())}") from None
+
+
+def privacy_names() -> Tuple[str, ...]:
+    return tuple(n for n in _REGISTRY if not n.startswith("_"))
+
+
+def validate_privacy_config(name: str, *, compression: str,
+                            algorithm: str) -> None:
+    """Reject illegal (privacy, compression, algorithm) combinations with
+    actionable errors — silently wrong aggregates are worse than loud
+    configs. See the module docstring for the why of each rule."""
+    p = get_privacy(name)
+    if p.name == "none":
+        return
+    # lazy import: core.privacy stays importable without the algo registry
+    from repro.core.algorithms import registry as algo_registry
+    algo = algo_registry.get_algorithm(algorithm)
+    if p.uses_field and compression not in FIELD_COMPATIBLE:
+        raise ValueError(
+            f"privacy={name!r} aggregates in the uint32 finite field, where "
+            f"every coordinate of a masked message is uniformly random — "
+            f"the sparse position-coded compressor {compression!r} cannot "
+            f"ship such a message. Legal pairs: "
+            f"{'/'.join(FIELD_COMPATIBLE)}")
+    if algo.uses_ctrl:
+        raise ValueError(
+            f"privacy={name!r} does not cover algorithm={algorithm!r}: its "
+            "second (control-variate) uplink would leave the server a "
+            "per-client plaintext side channel. Use a ctrl-free algorithm")
+    if p.uses_field and algo.uses_staleness:
+        raise ValueError(
+            f"privacy={name!r} cannot run algorithm={algorithm!r}: "
+            "fractional staleness weights cannot scale uint32 field "
+            "elements (masked sums admit only modular integer arithmetic). "
+            "Plain 'dp' supports fedbuff — weights <= 1 keep the L2 "
+            "sensitivity at clip")
+
+
+# ---------------------------------------------------------------------------
+# Wire pricing — what privacy costs on the channel
+# ---------------------------------------------------------------------------
+def uplink_bits_jax(name: str, pp: PrivacyParams, d: int,
+                    base_bits) -> jnp.ndarray:
+    """Per-message payload bits under privacy ``name``: the field modes
+    replace the compressor's rate with dense ``field_bits`` per coordinate
+    (a masked message is incompressible); clear/dp modes keep
+    ``base_bits`` (the compressor's own accounting)."""
+    if get_privacy(name).uses_field:
+        return pp.field_bits * jnp.float32(d)
+    return jnp.asarray(base_bits, jnp.float32)
+
+
+def mask_bits_jax(name: str, n_peers) -> jnp.ndarray:
+    """Per-client mask-agreement overhead bits for one round: two
+    ``KEY_BITS`` key shares per surviving pair (Diffie-Hellman style), re-
+    run every round because the cohort changes. Zero for mask-free modes.
+    Raw protocol bits — not scaled by the model-payload ratio."""
+    if get_privacy(name).uses_masks:
+        return 2.0 * KEY_BITS * jnp.asarray(n_peers, jnp.float32)
+    return jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# (epsilon, delta) accounting — Renyi DP over a static order grid
+# ---------------------------------------------------------------------------
+def rdp_increment(q: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """One round's RDP cost at every order in :data:`ALPHAS` for the
+    subsampled Gaussian mechanism: sampling fraction ``q`` (survivors / N),
+    noise multiplier ``z``. Uses the classic moments-accountant bound
+    ``min(alpha / (2 z^2), 2 alpha q^2 / z^2)`` (Abadi et al., an upper
+    bound valid in the usual ``q < 1/4, z >= 1`` regime and a documented
+    approximation outside it); ``q = 0`` (no survivors) costs nothing and
+    ``z = 0`` (no noise) costs infinity."""
+    a = jnp.asarray(ALPHAS, jnp.float32)
+    z2 = jnp.maximum(z * z, 1e-30)
+    full = a / (2.0 * z2)                       # un-subsampled Gaussian
+    sub = 2.0 * a * q * q / z2                  # amplification by sampling
+    inc = jnp.where(q >= 1.0, full, jnp.minimum(full, sub))
+    inc = jnp.where(z > 0.0, inc, jnp.inf)
+    return jnp.where(q > 0.0, inc, 0.0)
+
+
+def epsilon_of(rdp: jnp.ndarray, delta: float = DELTA) -> jnp.ndarray:
+    """RDP-to-DP conversion: ``eps = min_alpha RDP(alpha) +
+    log(1/delta) / (alpha - 1)``. Monotone in the (non-decreasing) ledger,
+    so the per-round epsilon log is monotone by construction."""
+    a = jnp.asarray(ALPHAS, jnp.float32)
+    return jnp.min(rdp + jnp.log(1.0 / delta) / (a - 1.0))

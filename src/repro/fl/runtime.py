@@ -81,6 +81,9 @@ from repro.core.algorithms.registry import (AlgoParams, algo_params,
                                             stack_algo_params)
 from repro.core.compression import registry as compression
 from repro.core.compression.registry import CompressionParams
+from repro.core.privacy import registry as privacy_lib
+from repro.core.privacy.registry import (PrivacyParams, privacy_params,
+                                         stack_privacy_params)
 from repro.core.hierarchy import (HFLConfig, broadcast_to_clients,
                                   hfl_geometry_jax, inter_cluster_average)
 from repro.fl import server as fl_server
@@ -153,6 +156,14 @@ class SimConfig:
     # traced, so a fault grid is one more vmapped sweep axis.
     faults: Optional[FaultParams] = None
     max_retries: int = 0                 # static retransmission bound
+    # privacy axis (core.privacy registry): the mechanism *name* is static
+    # (engine-cache key) — "none" | "secagg" | "dp" | "secagg_dp" — while
+    # clip/sigma/field_bits ride the traced PrivacyParams, so a clip x
+    # sigma grid vmaps with zero retraces. Legal (privacy, compression,
+    # algorithm) combinations are validated here (see
+    # core.privacy.FIELD_COMPATIBLE).
+    privacy: str = "none"
+    privacy_params: Optional[PrivacyParams] = None
     # deprecated (one release): stringly-typed spellings, mapped onto
     # algorithm/algo_params by __post_init__ with a DeprecationWarning
     lr: Optional[float] = None
@@ -209,6 +220,18 @@ class SimConfig:
                   else algo_registry.default_algo_params())
             self.algo_params = ap._replace(lr=jnp.float32(self.lr))
             self.lr = None
+        if self.privacy_params is not None and not isinstance(
+                self.privacy_params, PrivacyParams):
+            raise ValueError(
+                "SimConfig.privacy_params must be a core.privacy."
+                "PrivacyParams (see privacy_params(...)), got "
+                f"{type(self.privacy_params).__name__}")
+        # raises on unknown names and on illegal (privacy, compression,
+        # algorithm) combinations — after the deprecated-server mapping so
+        # the resolved algorithm is what gets checked
+        privacy_lib.validate_privacy_config(
+            self.privacy, compression=self.compression,
+            algorithm=self.algorithm)
 
 
 @dataclasses.dataclass
@@ -226,6 +249,9 @@ class RoundLog:
     n_dropped: int = 0         # scheduled clients lost to faults
     retransmissions: float = 0.0   # extra uplink attempts this round
     staleness_mean: float = 0.0    # mean per-client staleness (fault mode)
+    epsilon: float = float("inf")  # cumulative DP epsilon after this round
+    delta: float = 1.0             # the delta the epsilon is reported at
+    mask_bits: float = 0.0         # secagg key-agreement overhead bits
 
 
 @dataclasses.dataclass
@@ -246,13 +272,18 @@ class SimLogs:
     n_dropped: Optional[np.ndarray] = None      # (..., rounds) lost to faults
     retransmissions: Optional[np.ndarray] = None  # (..., rounds) extra tx
     staleness_mean: Optional[np.ndarray] = None   # (..., rounds)
+    # privacy fields (epsilon is +inf and delta 1.0 when no DP mechanism
+    # runs; epsilon is monotone non-decreasing in rounds by construction)
+    epsilon: Optional[np.ndarray] = None     # (..., rounds) cumulative eps
+    delta: Optional[np.ndarray] = None       # (..., rounds) reporting delta
+    mask_bits: Optional[np.ndarray] = None   # (..., rounds) secagg overhead
 
     def to_round_logs(self) -> List[RoundLog]:
         if self.loss.ndim != 1:
             raise ValueError("to_round_logs needs unbatched (rounds,) logs")
 
-        def opt(field, t, cast):
-            return cast(field[t]) if field is not None else cast(0)
+        def opt(field, t, cast, default=0):
+            return cast(field[t]) if field is not None else cast(default)
         return [RoundLog(t, float(self.latency_s[t]), float(self.loss[t]),
                          int(self.n_scheduled[t]), self.participation[t],
                          float(self.uplink_bits[t]), float(self.comm_s[t]),
@@ -261,7 +292,10 @@ class SimLogs:
                          opt(self.n_survived, t, int),
                          opt(self.n_dropped, t, int),
                          opt(self.retransmissions, t, float),
-                         opt(self.staleness_mean, t, float))
+                         opt(self.staleness_mean, t, float),
+                         opt(self.epsilon, t, float, float("inf")),
+                         opt(self.delta, t, float, 1.0),
+                         opt(self.mask_bits, t, float))
                 for t in range(self.loss.shape[0])]
 
 
@@ -294,6 +328,12 @@ def _resolve_aparams(cfg: SimConfig) -> AlgoParams:
     if cfg.algo_params is not None:
         return cfg.algo_params
     return algo_registry.default_algo_params()
+
+
+def _resolve_pparams(cfg: SimConfig) -> PrivacyParams:
+    if cfg.privacy_params is not None:
+        return cfg.privacy_params
+    return privacy_lib.default_privacy_params()
 
 
 def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
@@ -332,10 +372,17 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
     n_rows = chunking.n_blocks(n, chunk) * chunk if chunk else n
     state_dt = (jnp.bfloat16 if cfg.state_dtype == "bfloat16"
                 else jnp.float32)
+    # static privacy switch: only the mechanism *name* specializes the
+    # trace; clip/sigma/field_bits are traced PrivacyParams. The privacy
+    # key is derived only when a mechanism is active, so privacy="none"
+    # reproduces the legacy randomness streams bit for bit.
+    priv_on = cfg.privacy != "none"
+    priv = privacy_lib.get_privacy(cfg.privacy) if priv_on else None
+    dp_on = priv_on and priv.uses_dp
     round_fn = functools.partial(
         fl_server.fl_round, loss_fn=loss_fn, algo=algo,
         compression_name=(cfg.compression if comp_active else None),
-        chunk_size=chunk, n_clients=n)
+        chunk_size=chunk, n_clients=n, privacy=priv)
 
     # static fault switch: only the *presence* of faults (and the retry
     # bound) specializes the trace — every probability is traced FaultParams
@@ -359,12 +406,19 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
             carry = carry + (jnp.ones(n, dtype=bool),
                              jnp.zeros((n, 2), jnp.float32),
                              jnp.zeros(n, jnp.float32))
+        if dp_on:
+            # Renyi accountant ledger (one slot per order in ALPHAS),
+            # appended *last* so the fault triple keeps its positions
+            carry = carry + (jnp.zeros(len(privacy_lib.ALPHAS),
+                                       jnp.float32),)
         return carry
 
     def make_step(chan: wireless.ChannelParams, cparams: CompressionParams,
-                  aparams: AlgoParams, fparams, pol_w, dist: jnp.ndarray,
-                  k_rounds: jax.Array, eval_batch):
+                  aparams: AlgoParams, fparams, pparams, pol_w,
+                  dist: jnp.ndarray, k_rounds: jax.Array, eval_batch):
         def step(carry, xs):
+            if dp_on:
+                carry, rdp = carry[:-1], carry[-1]
             if faults_on:
                 state, clock, ages, norms, avg_snr, avail, fad, stal = carry
             else:
@@ -372,6 +426,10 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
             t, batches = xs
             kt = jax.random.fold_in(k_rounds, t)
             kf, kc, kp, kn, kz = jax.random.split(kt, 5)
+            if priv_on:
+                # fold-tagged so the five legacy streams above are
+                # untouched — privacy="none" is bitwise the old engine
+                k_priv = jax.random.fold_in(kt, privacy_lib.PRIVACY_FOLD)
             if cfg.datagen is not None:
                 # per-round data key, derived only on the datagen path so
                 # pre-stacked runs keep their exact randomness stream
@@ -407,6 +465,19 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
                     cfg.compression, cparams, d_model) * algo.uplink_factor
             else:
                 bits_dev = jnp.float32(cfg.model_bits * algo.uplink_factor)
+            mask_over = jnp.float32(0.0)
+            if priv_on:
+                # field modes replace the compressor's rate with dense
+                # field_bits per coordinate (a masked message is
+                # incompressible); the pairwise key agreement adds raw
+                # protocol bits per round — both priced on the uplink
+                if priv.uses_field:
+                    bits_dev = payload_scale * privacy_lib.uplink_bits_jax(
+                        cfg.privacy, pparams, d_model,
+                        0.0) * algo.uplink_factor
+                if priv.uses_masks:
+                    mask_over = privacy_lib.mask_bits_jax(cfg.privacy, n - 1)
+                    bits_dev = bits_dev + mask_over
             comm_lat = wireless.comm_latency_jax(bits_dev, rates)
             # per-device time-averaged SNR (PF's denominator), seeded with
             # the first observation
@@ -468,12 +539,18 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
                   if algo.uses_staleness else None)
             fault_kw = (dict(gate_ef=True, guard_empty=True)
                         if faults_on else {})
+            priv_kw = (dict(pparams=pparams, privacy_key=k_priv)
+                       if priv_on else {})
             if comp_active:
                 state, metrics = round_fn(
                     state, batches, aparams=aparams, participation=part,
                     compress_fn=compress_fn, cparams=cparams, key=kz,
-                    staleness_weights=sw, **fault_kw)
+                    staleness_weights=sw, **fault_kw, **priv_kw)
                 ubits = payload_scale * metrics["uplink_bits"]
+                if priv_on and priv.uses_masks:
+                    # key-agreement overhead for every *scheduled* client
+                    # (agreement precedes the transmission that may fail)
+                    ubits = ubits + mask_over * jnp.sum(mask)
                 if faults_on:
                     # bill undecoded attempts' airtime too: retries plus the
                     # final failed payload of never-decoded clients
@@ -483,7 +560,7 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
             else:
                 state, metrics = round_fn(
                     state, batches, aparams=aparams, participation=part,
-                    staleness_weights=sw, **fault_kw)
+                    staleness_weights=sw, **fault_kw, **priv_kw)
                 if faults_on:
                     ubits = bits_dev * jnp.sum(jnp.where(
                         mask & ~dropped, 1.0 + n_retx, 0.0))
@@ -537,6 +614,26 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
                 n_surv = jnp.sum(mask).astype(jnp.int32)
                 n_drop = jnp.int32(0)
 
+            # --- (epsilon, delta) accounting: one subsampled-Gaussian
+            # round at sampling fraction survivors/N. secagg_dp's local
+            # field noise aggregates to an effective multiplier
+            # sigma * sqrt(survivors); central dp uses sigma directly.
+            if dp_on:
+                n_surv_f = jnp.sum(part)
+                q_frac = n_surv_f / n
+                if priv.dp_local:
+                    z_eff = pparams.sigma * jnp.sqrt(
+                        jnp.maximum(n_surv_f, 1.0))
+                else:
+                    z_eff = pparams.sigma
+                rdp = rdp + privacy_lib.rdp_increment(q_frac, z_eff)
+                eps = privacy_lib.epsilon_of(rdp)
+                delta_out = jnp.float32(privacy_lib.DELTA)
+            else:
+                eps = jnp.float32(jnp.inf)
+                delta_out = jnp.float32(1.0)
+            mask_bits_out = mask_over * jnp.sum(mask)
+
             loss = metrics["loss"]
             if has_eval:
                 loss = loss_fn(state.params, eval_batch)[0]
@@ -545,45 +642,38 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
             new_carry = (state, clock, ages, norms, avg_snr)
             if faults_on:
                 new_carry = new_carry + (avail, fad, stal)
+            if dp_on:
+                new_carry = new_carry + (rdp,)
             return new_carry, (
                 loss, clock, mask, jnp.sum(mask), ubits, comm_s, comp_s,
-                dl_bits_out, n_surv, n_drop, retx_log, stal_log)
+                dl_bits_out, n_surv, n_drop, retx_log, stal_log, eps,
+                delta_out, mask_bits_out)
         return step
 
-    def _scan(key, chan, cparams, aparams, fparams, pol_w, init_params,
-              batches_all, eval_batch):
+    def _scan(key, chan, cparams, aparams, fparams, pparams, pol_w,
+              init_params, batches_all, eval_batch):
         ENGINE_STATS["traces"] += 1  # python side effect: runs at trace only
         k_pos, k_rounds = jax.random.split(key)
         dist = wireless.sample_positions_jax(k_pos, chan, n)
-        step = make_step(chan, cparams, aparams, fparams, pol_w, dist,
-                         k_rounds, eval_batch)
+        step = make_step(chan, cparams, aparams, fparams, pparams, pol_w,
+                         dist, k_rounds, eval_batch)
         ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
         (state, *_), outs = lax.scan(
             step, init_carry(init_params), (ts, batches_all))
         return state.params, outs
 
-    # fparams rides *before* pol_w so both optional traced axes keep a
-    # stable relative order across the four engine signatures
-    if policy_axis is not None and faults_on:
-        def engine(key, chan, cparams, aparams, fparams, pol_w, init_params,
-                   batches_all, eval_batch):
-            return _scan(key, chan, cparams, aparams, fparams, pol_w,
-                         init_params, batches_all, eval_batch)
-    elif policy_axis is not None:
-        def engine(key, chan, cparams, aparams, pol_w, init_params,
-                   batches_all, eval_batch):
-            return _scan(key, chan, cparams, aparams, None, pol_w,
-                         init_params, batches_all, eval_batch)
-    elif faults_on:
-        def engine(key, chan, cparams, aparams, fparams, init_params,
-                   batches_all, eval_batch):
-            return _scan(key, chan, cparams, aparams, fparams, None,
-                         init_params, batches_all, eval_batch)
-    else:
-        def engine(key, chan, cparams, aparams, init_params, batches_all,
-                   eval_batch):
-            return _scan(key, chan, cparams, aparams, None, None,
-                         init_params, batches_all, eval_batch)
+    # the optional traced axes ride in a fixed relative order — fparams,
+    # then pparams, then pol_w — and only the axes this engine's static
+    # switches enable appear in its signature (the three shared trailing
+    # args close the argument list)
+    def engine(key, chan, cparams, aparams, *rest):
+        rest = list(rest)
+        fparams = rest.pop(0) if faults_on else None
+        pparams = rest.pop(0) if priv_on else None
+        pol_w = rest.pop(0) if policy_axis is not None else None
+        init_params, batches_all, eval_batch = rest
+        return _scan(key, chan, cparams, aparams, fparams, pparams, pol_w,
+                     init_params, batches_all, eval_batch)
 
     return init_carry, make_step, engine
 
@@ -605,6 +695,7 @@ def _engine_key(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
             cfg.age_alpha, cfg.algorithm, cfg.compression, cfg.double_ef,
             cfg.chunk_size, cfg.ef_mode, cfg.ef_slots, cfg.state_dtype,
             cfg.datagen, cfg.faults is not None, cfg.max_retries,
+            cfg.privacy,
             wcfg.n_subchannels, wcfg.bandwidth_hz, loss_fn, has_eval)
 
 
@@ -639,8 +730,9 @@ def _get_engine(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
         _, _, engine = _make_sim_fns(cfg, wcfg, loss_fn, has_eval,
                                      policy_axis)
         faults_on = cfg.faults is not None
+        priv_on = cfg.privacy != "none"
         if vmapped:
-            n_var = 4 + (policy_axis is not None) + faults_on
+            n_var = 4 + (policy_axis is not None) + faults_on + priv_on
             in_axes = (0,) * n_var + (None,) * 3
             vengine = jax.vmap(engine, in_axes=in_axes)
             if mesh is not None:
@@ -661,7 +753,7 @@ def _get_engine(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
         # init_params aliases the returned final params exactly; the
         # wrappers below pass a fresh copy, so donating it is safe and
         # lets XLA run the whole scan in-place on the parameter buffers.
-        return jax.jit(engine, donate_argnums=(4 + faults_on,))
+        return jax.jit(engine, donate_argnums=(4 + faults_on + priv_on,))
 
     return _cached(_ENGINE_CACHE,
                    _engine_key(cfg, wcfg, loss_fn, has_eval,
@@ -676,17 +768,17 @@ def _get_host_step(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
     is shared across runs of the same static config (no per-call retrace)."""
     def make():
         _, make_step, _ = _make_sim_fns(cfg, wcfg, loss_fn, has_eval)
+        faults_on = cfg.faults is not None
+        priv_on = cfg.privacy != "none"
 
-        if cfg.faults is not None:
-            def host_step(chan, cparams, aparams, fparams, dist, k_rounds,
-                          eval_batch, carry, xs):
-                return make_step(chan, cparams, aparams, fparams, None,
-                                 dist, k_rounds, eval_batch)(carry, xs)
-        else:
-            def host_step(chan, cparams, aparams, dist, k_rounds,
-                          eval_batch, carry, xs):
-                return make_step(chan, cparams, aparams, None, None, dist,
-                                 k_rounds, eval_batch)(carry, xs)
+        # optional args in the engines' fixed order: fparams, then pparams
+        def host_step(chan, cparams, aparams, *rest):
+            rest = list(rest)
+            fparams = rest.pop(0) if faults_on else None
+            pparams = rest.pop(0) if priv_on else None
+            dist, k_rounds, eval_batch, carry, xs = rest
+            return make_step(chan, cparams, aparams, fparams, pparams,
+                             None, dist, k_rounds, eval_batch)(carry, xs)
 
         return jax.jit(host_step)
 
@@ -718,16 +810,18 @@ def run_simulation_scan(cfg: SimConfig, loss_fn, init_params: PyTree,
     aparams = _resolve_aparams(cfg)
     init_copy = jax.tree.map(jnp.array, init_params)  # donated to the engine
     fargs = (cfg.faults,) if cfg.faults is not None else ()
-    params, outs = engine(key, chan, cparams, aparams, *fargs, init_copy,
-                          batches, eval_batch)
+    pargs = (_resolve_pparams(cfg),) if cfg.privacy != "none" else ()
+    params, outs = engine(key, chan, cparams, aparams, *fargs, *pargs,
+                          init_copy, batches, eval_batch)
     (losses, clocks, masks, nsched, ubits, comm_s, comp_s, dl_bits,
-     n_surv, n_drop, retx, stal) = jax.device_get(outs)
+     n_surv, n_drop, retx, stal, eps, dlt, mbits) = jax.device_get(outs)
     return params, SimLogs(loss=losses, latency_s=clocks,
                            n_scheduled=nsched, participation=masks,
                            uplink_bits=ubits, comm_s=comm_s, comp_s=comp_s,
                            downlink_bits=dl_bits, n_survived=n_surv,
                            n_dropped=n_drop, retransmissions=retx,
-                           staleness_mean=stal)
+                           staleness_mean=stal, epsilon=eps, delta=dlt,
+                           mask_bits=mbits)
 
 
 def run_simulation(cfg: SimConfig, loss_fn, init_params: PyTree,
@@ -791,15 +885,16 @@ def _run_simulation_host(cfg: SimConfig, loss_fn, init_params: PyTree,
     dist = wireless.sample_positions_jax(k_pos, chan, cfg.n_devices)
 
     fargs = (cfg.faults,) if cfg.faults is not None else ()
+    pargs = (_resolve_pparams(cfg),) if cfg.privacy != "none" else ()
     carry = init_carry(init_params)
     logs: List[RoundLog] = []
     for t in range(cfg.rounds):
         bt = (None if cfg.datagen is not None
               else sample_client_batches(t, cfg.n_devices))
         carry, (loss, clock, mask, nsched, ubits, comm_s, comp_s, dl_bits,
-                n_surv, n_drop, retx, stal) = step(
-            chan, cparams, aparams, *fargs, dist, k_rounds, eval_batch,
-            carry, (jnp.int32(t), bt))
+                n_surv, n_drop, retx, stal, eps, dlt, mbits) = step(
+            chan, cparams, aparams, *fargs, *pargs, dist, k_rounds,
+            eval_batch, carry, (jnp.int32(t), bt))
         mask_np = np.asarray(mask)
         lv = float(loss)
         if eval_fn is not None and not has_eval:
@@ -807,7 +902,8 @@ def _run_simulation_host(cfg: SimConfig, loss_fn, init_params: PyTree,
         logs.append(RoundLog(t, float(clock), lv, int(nsched), mask_np,
                              float(ubits), float(comm_s), float(comp_s),
                              float(dl_bits), int(n_surv), int(n_drop),
-                             float(retx), float(stal)))
+                             float(retx), float(stal), float(eps),
+                             float(dlt), float(mbits)))
     return logs
 
 
@@ -915,6 +1011,8 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
               algorithms: Optional[Sequence[str]] = None,
               aparams_grid: Optional[Sequence[AlgoParams]] = None,
               fparams_grid: Optional[Sequence[FaultParams]] = None,
+              privacies: Optional[Sequence[str]] = None,
+              pparams_grid: Optional[Sequence[PrivacyParams]] = None,
               eval_batch: Optional[Dict[str, jnp.ndarray]] = None,
               hcfg: Optional[HFLConfig] = None,
               hcfgs: Optional[Sequence[HFLConfig]] = None,
@@ -957,6 +1055,16 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
     straggler grid rides the same compiled engine (zero extra traces on a
     warm cache). Omitting it while ``cfg.faults`` is set sweeps the single
     configured fault point; omitting both keeps the fault-free engine.
+
+    ``privacies`` iterates privacy mechanism *names* in Python (another
+    static axis, growing the result key like ``compressions``/
+    ``algorithms``); ``pparams_grid`` makes the continuous privacy knobs a
+    traced sweep axis — a clip x sigma grid of
+    :class:`~repro.core.privacy.PrivacyParams` dispatches as **one**
+    compiled call per static (policy, compression, algorithm, privacy)
+    name tuple. When the name set mixes ``"none"`` with real mechanisms
+    the pparams axis stays in the grid for every name (uniform variant
+    shapes) but is only passed to privacy-enabled engines.
 
     All ``wcfgs`` must share the static fields (``n_devices``,
     ``n_subchannels``; additionally ``bandwidth_hz`` when sweeping a
@@ -1008,10 +1116,22 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
     faults_on = fparams_list is not None
     if faults_on and not fparams_list:
         raise ValueError("fparams_grid= needs at least one FaultParams")
+    priv_iter = list(privacies) if privacies is not None else [cfg.privacy]
+    if not priv_iter:
+        raise ValueError("privacies= needs at least one mechanism name")
+    any_priv = any(p != "none" for p in priv_iter)
+    # the pparams axis stays in the grid even when "none" rides along
+    # (uniform variant shapes across the name axis); the stacked params
+    # are simply not passed to privacy-free engines
+    pparams_list = (list(pparams_grid) if pparams_grid is not None
+                    else ([_resolve_pparams(cfg)] if any_priv else None))
+    if pparams_list is not None and not pparams_list:
+        raise ValueError("pparams_grid= needs at least one PrivacyParams")
 
     grid = list(itertools.product(
         seeds, wcfgs, cparams_list, aparams_list,
         fparams_list if faults_on else [None],
+        pparams_list if pparams_list is not None else [None],
         hlist if hlist is not None else [None]))
     if not grid:
         raise ValueError("run_sweep needs at least one "
@@ -1021,27 +1141,40 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
     cps = compression.stack_compression_params([g[2] for g in grid])
     aps = stack_algo_params([g[3] for g in grid])
     fps = (stack_fault_params([g[4] for g in grid]) if faults_on else None)
-    bh = (jnp.asarray([g[5].backhaul_rate_bps for g in grid], jnp.float32)
+    pps = (stack_privacy_params([g[5] for g in grid])
+           if pparams_list is not None else None)
+    bh = (jnp.asarray([g[6].backhaul_rate_bps for g in grid], jnp.float32)
           if hlist is not None else None)
     has_eval = eval_batch is not None
     shared = (init_params, batches, eval_batch)
     comp_iter = comp_names if comp_names is not None else [cfg.compression]
     algo_iter = algo_names if algo_names is not None else [cfg.algorithm]
 
-    def result_key(pol, comp, alg):
+    def result_key(pol, comp, alg, priv):
         parts = ((pol,)
                  + ((comp,) if comp_names is not None else ())
-                 + ((alg,) if algo_names is not None else ()))
+                 + ((alg,) if algo_names is not None else ())
+                 + ((priv,) if privacies is not None else ()))
         return parts[0] if len(parts) == 1 else parts
 
     def to_logs(outs) -> SimLogs:
         (losses, clocks, masks, nsched, ubits, comm_s, comp_s, dl_bits,
-         n_surv, n_drop, retx, stal) = jax.device_get(outs)
+         n_surv, n_drop, retx, stal, eps, dlt, mbits) = jax.device_get(outs)
         return SimLogs(loss=losses, latency_s=clocks, n_scheduled=nsched,
                        participation=masks, uplink_bits=ubits,
                        comm_s=comm_s, comp_s=comp_s, downlink_bits=dl_bits,
                        n_survived=n_surv, n_dropped=n_drop,
-                       retransmissions=retx, staleness_mean=stal)
+                       retransmissions=retx, staleness_mean=stal,
+                       epsilon=eps, delta=dlt, mask_bits=mbits)
+
+    def cfg_variant(pol, comp, alg, priv) -> SimConfig:
+        return dataclasses.replace(
+            cfg, policy=pol, compression=comp, algorithm=alg,
+            faults=fparams_list[0] if faults_on else cfg.faults,
+            privacy=priv,
+            privacy_params=(pparams_list[0] if priv != "none"
+                            and pparams_list is not None
+                            else cfg.privacy_params))
 
     results: Dict[Any, SimLogs] = {}
     use_mixture = (hlist is None and policy_mode == "mixture"
@@ -1051,50 +1184,61 @@ def run_sweep(cfg: SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
         # policy-major and select each block's policy by a traced one-hot
         policy_axis = tuple(policies)
         n_base = len(grid)
-        pol_w = jnp.repeat(jnp.eye(len(policies), dtype=jnp.float32),
+        n_pol = len(policies)
+        pol_w = jnp.repeat(jnp.eye(n_pol, dtype=jnp.float32),
                            n_base, axis=0)
-        var_args = ((_tile_variants(keys, len(policies)),
-                     _tile_variants(chans, len(policies)),
-                     _tile_variants(cps, len(policies)),
-                     _tile_variants(aps, len(policies)))
-                    + ((_tile_variants(fps, len(policies)),)
-                       if faults_on else ())
-                    + (pol_w,))
+        base_args = (_tile_variants(keys, n_pol),
+                     _tile_variants(chans, n_pol),
+                     _tile_variants(cps, n_pol),
+                     _tile_variants(aps, n_pol))
+        fps_t = _tile_variants(fps, n_pol) if faults_on else None
+        pps_t = _tile_variants(pps, n_pol) if pps is not None else None
         for comp in comp_iter:
             for alg in algo_iter:
-                cfg_v = dataclasses.replace(
-                    cfg, policy=policies[0], compression=comp, algorithm=alg,
-                    faults=fparams_list[0] if faults_on else cfg.faults)
-                engine = _get_engine(cfg_v, wcfgs[0], loss_fn, has_eval,
-                                     vmapped=True, policy_axis=policy_axis,
-                                     mesh=mesh)
-                outs = _dispatch_variants(engine, var_args, shared, mesh)
-                arrs = jax.device_get(outs)
-                for p_i, pol in enumerate(policies):
-                    block = tuple(a[p_i * n_base:(p_i + 1) * n_base]
-                                  for a in arrs)
-                    results[result_key(pol, comp, alg)] = to_logs(block)
+                for priv in priv_iter:
+                    cfg_v = dataclasses.replace(
+                        cfg_variant(policies[0], comp, alg, priv),
+                        policy=policies[0])
+                    engine = _get_engine(cfg_v, wcfgs[0], loss_fn, has_eval,
+                                         vmapped=True,
+                                         policy_axis=policy_axis, mesh=mesh)
+                    var_args = (base_args
+                                + ((fps_t,) if faults_on else ())
+                                + ((pps_t,) if priv != "none" else ())
+                                + (pol_w,))
+                    outs = _dispatch_variants(engine, var_args, shared,
+                                              mesh)
+                    arrs = jax.device_get(outs)
+                    for p_i, pol in enumerate(policies):
+                        block = tuple(a[p_i * n_base:(p_i + 1) * n_base]
+                                      for a in arrs)
+                        results[result_key(pol, comp, alg,
+                                           priv)] = to_logs(block)
         return results
 
     for pol in policies:
         for comp in comp_iter:
             for alg in algo_iter:
-                cfg_v = dataclasses.replace(
-                    cfg, policy=pol, compression=comp, algorithm=alg,
-                    faults=fparams_list[0] if faults_on else cfg.faults)
-                if hlist is not None:
-                    engine = _get_hfl_engine(cfg_v, hlist[0], wcfgs[0],
-                                             loss_fn, has_eval, vmapped=True,
+                for priv in priv_iter:
+                    cfg_v = cfg_variant(pol, comp, alg, priv)
+                    pargs = (pps,) if priv != "none" else ()
+                    if hlist is not None:
+                        engine = _get_hfl_engine(cfg_v, hlist[0], wcfgs[0],
+                                                 loss_fn, has_eval,
+                                                 vmapped=True, mesh=mesh)
+                        var_args = ((keys, chans, cps, aps, bh)
+                                    + ((fps,) if faults_on else ())
+                                    + pargs)
+                    else:
+                        engine = _get_engine(cfg_v, wcfgs[0], loss_fn,
+                                             has_eval, vmapped=True,
                                              mesh=mesh)
-                    var_args = ((keys, chans, cps, aps, bh)
-                                + ((fps,) if faults_on else ()))
-                else:
-                    engine = _get_engine(cfg_v, wcfgs[0], loss_fn, has_eval,
-                                         vmapped=True, mesh=mesh)
-                    var_args = ((keys, chans, cps, aps)
-                                + ((fps,) if faults_on else ()))
-                outs = _dispatch_variants(engine, var_args, shared, mesh)
-                results[result_key(pol, comp, alg)] = to_logs(outs)
+                        var_args = ((keys, chans, cps, aps)
+                                    + ((fps,) if faults_on else ())
+                                    + pargs)
+                    outs = _dispatch_variants(engine, var_args, shared,
+                                              mesh)
+                    results[result_key(pol, comp, alg, priv)] = to_logs(outs)
     return results
 
 
@@ -1191,6 +1335,16 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
     compress_fn = (compression.get_compressor(cfg.compression)
                    if comp_active else None)
     faults_on = cfg.faults is not None
+    # static privacy switch, mirroring _make_sim_fns: the mechanism *name*
+    # specializes the trace; clip/sigma/field_bits ride traced PrivacyParams.
+    # Masks cancel *within each cluster*: the SBS is the honest-but-curious
+    # aggregator, so pairwise keys (and their wire overhead) are scoped to
+    # cluster peers, and the per-cluster modular sum unmasks exactly.
+    priv_on = cfg.privacy != "none"
+    priv = privacy_lib.get_privacy(cfg.privacy) if priv_on else None
+    dp_on = priv_on and priv.uses_dp
+    masks_on = priv_on and priv.uses_masks
+    field_on = priv_on and priv.uses_field
 
     def init_carry(init_params):
         d = fl_server.flat_dim(init_params)
@@ -1209,10 +1363,13 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
             carry = carry + (jnp.ones(n, dtype=bool),
                              jnp.zeros((n, 2), jnp.float32),
                              jnp.zeros(n, jnp.float32))
+        if dp_on:
+            carry = carry + (jnp.zeros(len(privacy_lib.ALPHAS),
+                                       jnp.float32),)
         return carry
 
     def make_step(chan: wireless.ChannelParams, cparams: CompressionParams,
-                  aparams: AlgoParams, bh_rate, fparams, geo,
+                  aparams: AlgoParams, bh_rate, fparams, pparams, geo,
                   k_rounds: jax.Array, eval_batch):
         cluster_ids, dist, member, cluster_sizes = geo
         chan_dev = wireless.gather_channel_params(chan, cluster_ids)
@@ -1229,6 +1386,8 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
                 snr_v, chan_dev.bandwidth_hz / cfg.n_scheduled)
 
         def step(carry, xs):
+            if dp_on:
+                carry, rdp = carry[:-1], carry[-1]
             if faults_on:
                 (cm, gm, ef, ctrl, cc, clock, ages, norms, avg_snr,
                  avail, fad, stal) = carry
@@ -1237,6 +1396,10 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
             t, batches = xs
             kt = jax.random.fold_in(k_rounds, t)
             kf, kc, kp, kn, kz = jax.random.split(kt, 5)
+            if priv_on:
+                # fold-tagged so the legacy streams above are untouched —
+                # privacy="none" is bitwise the old HFL engine
+                k_priv = jax.random.fold_in(kt, privacy_lib.PRIVACY_FOLD)
 
             # --- channel draw + intra-cluster uplink pricing -------------
             if faults_on:
@@ -1257,7 +1420,28 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
                     cfg.compression, cparams, d_model)
             else:
                 msg_bits = jnp.float32(cfg.model_bits)
+            if field_on:
+                # a masked message is incompressible: dense field_bits per
+                # coordinate replaces the compressor's rate on the wire
+                msg_bits = payload_scale * privacy_lib.uplink_bits_jax(
+                    cfg.privacy, pparams, d_model, 0.0)
             bits_dev = msg_bits * algo.uplink_factor
+            mask_over = jnp.float32(0.0)
+            if masks_on:
+                # pairwise key agreement with *cluster* peers only — the
+                # per-device overhead varies with its cell's population, so
+                # bits_dev becomes a (N,) vector here
+                mask_over = privacy_lib.mask_bits_jax(
+                    cfg.privacy,
+                    jnp.maximum(cluster_sizes[cluster_ids] - 1.0, 0.0))
+                bits_dev = bits_dev + mask_over
+
+            def bill(w_):
+                # bits_dev is per-device when mask overhead is on; the
+                # faults/legacy scalar form is kept bitwise otherwise
+                return (jnp.sum(bits_dev * w_) if masks_on
+                        else bits_dev * jnp.sum(w_))
+
             comm_lat = wireless.comm_latency_jax(bits_dev, rates)
             avg_snr = jnp.where(t == 0, snr_lin,
                                 0.9 * avg_snr + 0.1 * snr_lin)
@@ -1403,25 +1587,74 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
                         compress_fn, in_axes=(None, 0, 0))(
                             cparams, keys_c, ctrl_flat)
                     bits = bits + cbits
+                if field_on:
+                    # the wire carries field elements, not compressor output
+                    bits = jnp.broadcast_to(
+                        pparams.field_bits * jnp.float32(d_model),
+                        bits.shape)
                 ubits_intra = payload_scale * jnp.sum(bits * part_f)
+                if masks_on:
+                    # key agreement for every *scheduled* member (it
+                    # precedes the transmission that may then fail)
+                    ubits_intra = ubits_intra + jnp.sum(mask_over * mask_f)
                 if faults_on:
-                    ubits_intra = ubits_intra + bits_dev * jnp.sum(
+                    ubits_intra = ubits_intra + bill(
                         jnp.where(mask & ~dropped,
                                   n_retx + (~ok).astype(jnp.float32), 0.0))
             else:
                 k_bh = kz
                 if faults_on:
-                    ubits_intra = bits_dev * jnp.sum(jnp.where(
+                    ubits_intra = bill(jnp.where(
                         mask & ~dropped, 1.0 + n_retx, 0.0))
                 else:
-                    ubits_intra = bits_dev * jnp.sum(mask_f)
+                    ubits_intra = bill(mask_f)
 
             # --- SBS aggregation: masked per-cluster delta mean ----------
             # (fault mode aggregates only the *survivors*; a cluster whose
             # every scheduled member failed keeps its model bitwise)
             wgt = member_f * part_f[None, :]                     # (L, N)
             cnt = jnp.sum(wgt, axis=1)                           # (L,)
-            mean_delta = (wgt @ flat) / jnp.maximum(cnt, 1.0)[:, None]
+            if field_on:
+                # finite-field secure aggregation per cluster: encode every
+                # client row, add pairwise masks scoped to *cluster* peers
+                # (closed-form post-dropout algebra over each survivor
+                # set), modular-sum per cluster, decode the centered
+                # representative. uint32 wraparound is the field reduction.
+                surv = part_f > 0.0
+                ids_all = jnp.arange(n)
+                q = priv.client_transform(pparams, k_priv, ids_all, flat)
+                if masks_on:
+                    g = privacy_lib.mask_rows(k_priv, ids_all, d_model)
+                    gsum_l = jax.ops.segment_sum(
+                        jnp.where(surv[:, None], g, jnp.uint32(0)),
+                        cluster_ids, num_segments=n_clusters)
+                    cnt_u_l = jax.ops.segment_sum(
+                        surv.astype(jnp.uint32), cluster_ids,
+                        num_segments=n_clusters)
+                    q = q + (cnt_u_l[cluster_ids][:, None] * g
+                             - gsum_l[cluster_ids])
+                qsum_l = jax.ops.segment_sum(
+                    jnp.where(surv[:, None], q, jnp.uint32(0)),
+                    cluster_ids, num_segments=n_clusters)
+                tot = priv.server_transform(pparams, k_priv, qsum_l)
+                mean_delta = tot / jnp.maximum(cnt, 1.0)[:, None]
+            elif priv_on:
+                # central DP at each SBS: clip every client row, then add
+                # *independent* Gaussian noise per cluster aggregate (one
+                # shared draw would correlate the cells)
+                flat_c = priv.client_transform(
+                    pparams, k_priv, jnp.arange(n), flat)
+                keys_l = chunking.client_keys(
+                    jax.random.fold_in(k_priv, privacy_lib.NOISE_FOLD),
+                    jnp.arange(n_clusters))
+                noise = jax.vmap(
+                    lambda k_: pparams.sigma * pparams.clip
+                    * jax.random.normal(k_, (d_model,)))(keys_l)
+                tot = (wgt @ flat_c
+                       + jnp.where(cnt[:, None] > 0.0, noise, 0.0))
+                mean_delta = tot / jnp.maximum(cnt, 1.0)[:, None]
+            else:
+                mean_delta = (wgt @ flat) / jnp.maximum(cnt, 1.0)[:, None]
             delta_tree = algo_registry.unflatten_rows(mean_delta, gm)
             cm_new = jax.tree.map(
                 lambda m_, d_: (m_.astype(jnp.float32)
@@ -1533,6 +1766,28 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
                 n_surv = jnp.sum(mask).astype(jnp.int32)
                 n_drop = jnp.int32(0)
 
+            # --- (epsilon, delta) accounting: clusters compose in
+            # *parallel* (disjoint populations), so the round's guarantee
+            # is the worst cell's. Local field noise aggregates to an
+            # effective multiplier sigma * sqrt(m) in the smallest
+            # non-empty cluster; central dp adds sigma per cluster.
+            if dp_on:
+                q_frac = jnp.sum(part_f) / n
+                if priv.dp_local:
+                    cnt_pos = jnp.where(cnt > 0.0, cnt, jnp.inf)
+                    m_min = jnp.min(cnt_pos)
+                    z_eff = pparams.sigma * jnp.sqrt(
+                        jnp.where(jnp.isfinite(m_min), m_min, 1.0))
+                else:
+                    z_eff = pparams.sigma
+                rdp = rdp + privacy_lib.rdp_increment(q_frac, z_eff)
+                eps = privacy_lib.epsilon_of(rdp)
+                delta_out = jnp.float32(privacy_lib.DELTA)
+            else:
+                eps = jnp.float32(jnp.inf)
+                delta_out = jnp.float32(1.0)
+            mask_bits_out = jnp.sum(mask_over * mask_f)
+
             loss = jnp.mean(losses)
             if has_eval:
                 loss = loss_fn(inter_cluster_average(cm, cluster_sizes),
@@ -1541,19 +1796,22 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
             new_carry = (cm, gm, ef, ctrl, cc, clock, ages, norms, avg_snr)
             if faults_on:
                 new_carry = new_carry + (avail, fad, stal)
+            if dp_on:
+                new_carry = new_carry + (rdp,)
             return new_carry, (
                 loss, clock, mask, jnp.sum(mask), ubits, comm_s, comp_s,
-                dl_bits_out, n_surv, n_drop, retx_log, stal_log)
+                dl_bits_out, n_surv, n_drop, retx_log, stal_log, eps,
+                delta_out, mask_bits_out)
 
         return step
 
-    def _scan(key, chan, cparams, aparams, bh_rate, fparams, init_params,
-              batches_all, eval_batch):
+    def _scan(key, chan, cparams, aparams, bh_rate, fparams, pparams,
+              init_params, batches_all, eval_batch):
         ENGINE_STATS["traces"] += 1  # python side effect: runs at trace only
         k_geo, k_rounds = jax.random.split(key)
         geo = hfl_geometry_jax(k_geo, hcfg, n)
-        step = make_step(chan, cparams, aparams, bh_rate, fparams, geo,
-                         k_rounds, eval_batch)
+        step = make_step(chan, cparams, aparams, bh_rate, fparams, pparams,
+                         geo, k_rounds, eval_batch)
         ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
         carry, outs = lax.scan(step, init_carry(init_params),
                                (ts, batches_all))
@@ -1563,16 +1821,15 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
             inter_cluster_average(cm, geo[3]))
         return final, outs
 
-    if faults_on:
-        def engine(key, chan, cparams, aparams, bh_rate, fparams,
-                   init_params, batches_all, eval_batch):
-            return _scan(key, chan, cparams, aparams, bh_rate, fparams,
-                         init_params, batches_all, eval_batch)
-    else:
-        def engine(key, chan, cparams, aparams, bh_rate, init_params,
-                   batches_all, eval_batch):
-            return _scan(key, chan, cparams, aparams, bh_rate, None,
-                         init_params, batches_all, eval_batch)
+    # optional traced axes in the same fixed order as the flat engine:
+    # fparams, then pparams (the three shared trailing args close the list)
+    def engine(key, chan, cparams, aparams, bh_rate, *rest):
+        rest = list(rest)
+        fparams = rest.pop(0) if faults_on else None
+        pparams = rest.pop(0) if priv_on else None
+        init_params, batches_all, eval_batch = rest
+        return _scan(key, chan, cparams, aparams, bh_rate, fparams, pparams,
+                     init_params, batches_all, eval_batch)
 
     return init_carry, make_step, engine
 
@@ -1592,7 +1849,7 @@ def _get_hfl_engine(cfg: SimConfig, hcfg: HFLConfig,
                     *, vmapped: bool = False, mesh=None) -> Callable:
     def make():
         _, _, engine = _make_hfl_fns(cfg, hcfg, wcfg, loss_fn, has_eval)
-        n_var = 5 + (cfg.faults is not None)
+        n_var = 5 + (cfg.faults is not None) + (cfg.privacy != "none")
         if vmapped:
             vengine = jax.vmap(engine,
                                in_axes=(0,) * n_var + (None,) * 3)
@@ -1622,17 +1879,17 @@ def _get_hfl_host_step(cfg: SimConfig, hcfg: HFLConfig,
     runs of the same static config, exactly like :func:`_get_host_step`."""
     def make():
         _, make_step, _ = _make_hfl_fns(cfg, hcfg, wcfg, loss_fn, has_eval)
+        faults_on = cfg.faults is not None
+        priv_on = cfg.privacy != "none"
 
-        if cfg.faults is not None:
-            def host_step(chan, cparams, aparams, bh_rate, fparams, geo,
-                          k_rounds, eval_batch, carry, xs):
-                return make_step(chan, cparams, aparams, bh_rate, fparams,
-                                 geo, k_rounds, eval_batch)(carry, xs)
-        else:
-            def host_step(chan, cparams, aparams, bh_rate, geo, k_rounds,
-                          eval_batch, carry, xs):
-                return make_step(chan, cparams, aparams, bh_rate, None, geo,
-                                 k_rounds, eval_batch)(carry, xs)
+        # optional args in the engines' fixed order: fparams, then pparams
+        def host_step(chan, cparams, aparams, bh_rate, *rest):
+            rest = list(rest)
+            fparams = rest.pop(0) if faults_on else None
+            pparams = rest.pop(0) if priv_on else None
+            geo, k_rounds, eval_batch, carry, xs = rest
+            return make_step(chan, cparams, aparams, bh_rate, fparams,
+                             pparams, geo, k_rounds, eval_batch)(carry, xs)
 
         return jax.jit(host_step)
 
@@ -1723,16 +1980,18 @@ def run_hfl(cfg: SimConfig, hcfg: HFLConfig, loss_fn, init_params: PyTree,
                           eval_batch is not None)
     key = jax.random.PRNGKey(cfg.seed)
     fargs = (cfg.faults,) if cfg.faults is not None else ()
+    pargs = (_resolve_pparams(cfg),) if cfg.privacy != "none" else ()
     _, outs = eng(key, chan, cparams, aparams,
-                  jnp.float32(hcfg.backhaul_rate_bps), *fargs, init_params,
-                  batches, eval_batch)
+                  jnp.float32(hcfg.backhaul_rate_bps), *fargs, *pargs,
+                  init_params, batches, eval_batch)
     (losses, clocks, masks, nsched, ubits, comm_s, comp_s, dl_bits,
-     n_surv, n_drop, retx, stal) = jax.device_get(outs)
+     n_surv, n_drop, retx, stal, eps, dlt, mbits) = jax.device_get(outs)
     return SimLogs(loss=losses, latency_s=clocks, n_scheduled=nsched,
                    participation=masks, uplink_bits=ubits, comm_s=comm_s,
                    comp_s=comp_s, downlink_bits=dl_bits, n_survived=n_surv,
                    n_dropped=n_drop, retransmissions=retx,
-                   staleness_mean=stal).to_round_logs()
+                   staleness_mean=stal, epsilon=eps, delta=dlt,
+                   mask_bits=mbits).to_round_logs()
 
 
 def _run_hfl_host(cfg: SimConfig, hcfg: HFLConfig, loss_fn,
@@ -1751,19 +2010,22 @@ def _run_hfl_host(cfg: SimConfig, hcfg: HFLConfig, loss_fn,
     aparams = _resolve_aparams(cfg)
 
     fargs = (cfg.faults,) if cfg.faults is not None else ()
+    pargs = (_resolve_pparams(cfg),) if cfg.privacy != "none" else ()
     carry = init_carry(init_params)
     logs: List[RoundLog] = []
     for t in range(cfg.rounds):
         bt = sample_client_batches(t, cfg.n_devices)
         carry, (loss, clock, mask, nsched, ubits, comm_s, comp_s, dl_bits,
-                n_surv, n_drop, retx, stal) = step(
+                n_surv, n_drop, retx, stal, eps, dlt, mbits) = step(
             chan, cparams, aparams, jnp.float32(hcfg.backhaul_rate_bps),
-            *fargs, geo, k_rounds, eval_batch, carry, (jnp.int32(t), bt))
+            *fargs, *pargs, geo, k_rounds, eval_batch, carry,
+            (jnp.int32(t), bt))
         lv = float(loss)
         if eval_fn is not None and not has_eval:
             lv = eval_fn(inter_cluster_average(carry[0], geo[3]))
         logs.append(RoundLog(t, float(clock), lv, int(nsched),
                              np.asarray(mask), float(ubits), float(comm_s),
                              float(comp_s), float(dl_bits), int(n_surv),
-                             int(n_drop), float(retx), float(stal)))
+                             int(n_drop), float(retx), float(stal),
+                             float(eps), float(dlt), float(mbits)))
     return logs

@@ -34,6 +34,8 @@ from repro.core.compression import error_feedback
 from repro.core.compression import registry as compression_lib
 from repro.core.compression.error_feedback import SparseEF
 from repro.core.compression.registry import CompressionParams, CompressorFn
+from repro.core.privacy import registry as privacy_lib
+from repro.core.privacy.registry import Privacy, PrivacyParams
 
 PyTree = Any
 
@@ -174,6 +176,9 @@ def fl_round(state: FLState, stacked_batches, loss_fn, *,
              chunk_size: Optional[int] = None,
              n_clients: Optional[int] = None,
              staleness_weights: Optional[jnp.ndarray] = None,
+             privacy: Optional[Union[str, Privacy]] = None,
+             pparams: Optional[PrivacyParams] = None,
+             privacy_key: Optional[jax.Array] = None,
              gate_ef: bool = False, guard_empty: bool = False,
              lr=None, server=None, server_lr=None, slowmo_beta=None,
              momentum=None) -> Tuple[FLState, Dict[str, jnp.ndarray]]:
@@ -218,6 +223,22 @@ def fl_round(state: FLState, stacked_batches, loss_fn, *,
     restores the pre-round params / server state / downlink EF when *no*
     client participates — an all-failed round is bitwise a no-op even for
     stateful server optimizers.
+
+    Privacy (``core.privacy`` registry): ``privacy=`` names a mechanism
+    (``secagg``/``dp``/``secagg_dp``), ``pparams`` carries the traced
+    ``(clip, sigma, field_bits)``, and ``privacy_key`` seeds mask PRGs and
+    DP noise (fold-tagged, chunk-invariant). The mechanism's
+    ``client_transform`` runs on each client's *wire* message after
+    EF/compression (clipping and field-quantization error are deliberately
+    not EF-tracked — the residual the server never saw must not leak back
+    into client state), pairwise masks over uint32 are added for the
+    surviving cohort (they cancel mod ``2^32`` for any survivor set), and
+    ``server_transform`` decodes the field sum / adds central DP noise
+    before the participation-masked mean. Field modes report dense
+    ``field_bits * d`` uplink bits (masked messages are incompressible) and
+    are incompatible with ``staleness_weights`` and sparse position-coded
+    compressors; any privacy bans control-variate (second-uplink)
+    algorithms — all enforced with explicit errors.
     """
     a, ap = _resolve_algo(algo, aparams, lr, server, server_lr, slowmo_beta,
                           momentum)
@@ -263,6 +284,39 @@ def fl_round(state: FLState, stacked_batches, loss_fn, *,
     if gate_ef and part is None:
         raise ValueError("fl_round(gate_ef=True) needs participation= "
                          "(the gate freezes non-participants' EF rows)")
+
+    priv = None
+    if privacy is not None:
+        priv = (privacy_lib.get_privacy(privacy) if isinstance(privacy, str)
+                else privacy)
+        if priv.name == "none":
+            priv = None
+    if priv is not None:
+        if privacy_key is None:
+            raise ValueError(
+                f"fl_round(privacy={priv.name!r}) needs privacy_key= — mask "
+                "PRG seeds and DP noise must be fresh every round")
+        if pparams is None:
+            pparams = privacy_lib.default_privacy_params()
+        if a.uses_ctrl:
+            raise ValueError(
+                f"privacy={priv.name!r} does not cover algo={a.name!r}: the "
+                "control-variate uplink would be a per-client plaintext "
+                "side channel")
+        if priv.uses_field and sw is not None:
+            raise ValueError(
+                f"privacy={priv.name!r} is incompatible with "
+                "staleness_weights=: fractional weights cannot scale uint32 "
+                "field elements")
+        if (priv.uses_field and compression_name is not None
+                and compression_name not in privacy_lib.FIELD_COMPATIBLE):
+            raise ValueError(
+                f"privacy={priv.name!r} cannot ship "
+                f"compression={compression_name!r} messages through a masked "
+                f"field sum; legal: {'/'.join(privacy_lib.FIELD_COMPATIBLE)}")
+    mask_env = None
+    if priv is not None and priv.uses_masks:
+        mask_env = _mask_prepass(privacy_key, n, d, part, chunk_size)
 
     # --- one block of the client pass (Alg. 6/7 lines 4-11) ---------------
     # Per-client work only: local updates, message flattening, EF +
@@ -327,6 +381,20 @@ def fl_round(state: FLState, stacked_batches, loss_fn, *,
                 new_ef_b, ef_b)
 
         w = valid if part_b is None else part_b
+        if priv is not None:
+            # privacy acts on the wire message (post-EF/compression): clip,
+            # field-encode, add local noise; then the cohort's pairwise
+            # masks. Masks on non-survivor rows are garbage but harmless —
+            # canonical_sum where-selects w == 0 rows away.
+            flat = priv.client_transform(pparams, privacy_key, ids, flat)
+            if mask_env is not None:
+                gsum, cnt = mask_env
+                flat = flat + privacy_lib.pairwise_masks(
+                    privacy_key, ids, d, gsum, cnt)
+            if priv.uses_field and bits is not None:
+                # a masked field message is dense: field_bits per coordinate
+                bits = jnp.broadcast_to(
+                    pparams.field_bits * jnp.float32(d), bits.shape)
         # staleness discount multiplies the *wire* message in the sum only
         # (EF above saw the true residual); all-ones weights are bitwise
         # the unweighted sum (x * 1.0 == x in IEEE-754)
@@ -383,8 +451,13 @@ def fl_round(state: FLState, stacked_batches, loss_fn, *,
     # --- aggregation (Alg. 6 line 12): participation-masked mean ----------
     nsched = jnp.sum(part) if part is not None else None
     denom = (jnp.float32(n) if part is None else jnp.maximum(nsched, 1.0))
-    mean_delta = algorithms.unflatten_vec(totals["delta"] / denom,
-                                          state.params)
+    tot_delta = totals["delta"]
+    if priv is not None:
+        # decode the modular field sum back to float / add central DP noise
+        # (noise calibrated to the clipped per-client sensitivity, so it is
+        # added to the *sum*, before the mean)
+        tot_delta = priv.server_transform(pparams, privacy_key, tot_delta)
+    mean_delta = algorithms.unflatten_vec(tot_delta / denom, state.params)
     uplink_bits = totals.get("bits")
 
     # --- downlink (PS-side) EF compression (Alg. 6 lines 15-17) ---
@@ -430,6 +503,43 @@ def fl_round(state: FLState, stacked_batches, loss_fn, *,
         metrics["uplink_bits"] = uplink_bits
     return FLState(new_params, client_error, server_error, new_opt,
                    new_ctrl, state.round + 1), metrics
+
+
+def _mask_prepass(privacy_key: jax.Array, n: int, d: int,
+                  part: Optional[jnp.ndarray], chunk_size: Optional[int]
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cohort aggregate every pairwise mask needs: ``(gsum, cnt)`` where
+    ``gsum = sum_{j in S} g_j`` (uint32, wraps) and ``cnt = |S|`` over the
+    survivor set S (participation != 0; all clients when ``part is None``).
+    uint32 addition is exactly associative, so accumulating per chunk-sized
+    block (O(chunk * D) memory, mirroring the client pass) is bitwise the
+    one-shot sum for any blocking. PRG rows are regenerated in the main
+    client pass — 2x PRG cost buys O(chunk * D) instead of O(N * D)."""
+    if chunk_size is not None and chunk_size < n:
+        chunk = chunk_size
+        m = chunking.n_blocks(n, chunk)
+
+        def body(carry, b):
+            gs, cn = carry
+            ids_b = chunking.block_ids(b, chunk)
+            surv_b = ids_b < n
+            if part is not None:
+                surv_b &= part[jnp.minimum(ids_b, n - 1)] != 0
+            g = privacy_lib.mask_rows(privacy_key, ids_b, d)
+            gs = gs + jnp.sum(jnp.where(surv_b[:, None], g, jnp.uint32(0)),
+                              axis=0, dtype=jnp.uint32)
+            return (gs, cn + jnp.sum(surv_b.astype(jnp.uint32))), None
+
+        (gsum, cnt), _ = lax.scan(
+            body, (jnp.zeros(d, jnp.uint32), jnp.uint32(0)),
+            jnp.arange(m, dtype=jnp.int32))
+        return gsum, cnt
+    ids = jnp.arange(n, dtype=jnp.int32)
+    surv = jnp.ones(n, bool) if part is None else part != 0
+    g = privacy_lib.mask_rows(privacy_key, ids, d)
+    gsum = jnp.sum(jnp.where(surv[:, None], g, jnp.uint32(0)), axis=0,
+                   dtype=jnp.uint32)
+    return gsum, jnp.sum(surv.astype(jnp.uint32))
 
 
 def _kernel_sign_ef(flat: jnp.ndarray, e: jnp.ndarray):

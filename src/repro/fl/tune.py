@@ -76,14 +76,27 @@ class TuneResult:
     n_variants: int                      # total simulated variants dispatched
 
 
-def loss_at_budget(logs: rt.SimLogs, budget_s: Optional[float]) -> np.ndarray:
+def loss_at_budget(logs: rt.SimLogs, budget_s: Optional[float],
+                   eps_budget: Optional[float] = None) -> np.ndarray:
     """Per-variant score: loss at the last round whose cumulative latency
-    fits ``budget_s`` (final loss if no budget, ``inf`` if no round fits)."""
+    fits ``budget_s`` AND whose cumulative DP epsilon fits ``eps_budget``
+    (final loss if neither budget, ``inf`` if no round fits both).
+
+    Both feasibility prefixes are monotone — latency and epsilon are
+    cumulative over rounds — so their AND is a prefix too and the same
+    last-True index trick scores it. An ``eps_budget`` against a run with
+    no DP mechanism (epsilon = +inf every round) scores ``inf``."""
     loss = np.asarray(logs.loss)
-    if budget_s is None:
+    if budget_s is None and eps_budget is None:
         return loss[..., -1]
-    lat = np.asarray(logs.latency_s)
-    fits = lat <= budget_s                       # latency is cumulative ->
+    fits = np.ones(loss.shape, dtype=bool)
+    if budget_s is not None:
+        lat = np.asarray(logs.latency_s)
+        fits &= lat <= budget_s                  # latency is cumulative
+    if eps_budget is not None:
+        eps = (np.asarray(logs.epsilon) if logs.epsilon is not None
+               else np.full(loss.shape, np.inf))
+        fits &= eps <= eps_budget                # epsilon is cumulative
     idx = fits.cumsum(-1).argmax(-1)             # index of the last True
     picked = np.take_along_axis(loss, idx[..., None], axis=-1)[..., 0]
     return np.where(fits.any(-1), picked, np.inf)
@@ -94,7 +107,7 @@ def _score_group(cfg: rt.SimConfig, loss_fn, init_params, batches, *,
                  policies: Sequence[str], cps: Sequence[CompressionParams],
                  k_grid: Sequence[int], aps: Sequence[AlgoParams],
                  lr_grid: Sequence[float], wcfg, eval_batch, budget_s,
-                 devices, mesh) -> Dict[Candidate, float]:
+                 eps_budget, devices, mesh) -> Dict[Candidate, float]:
     """One mega-sweep call for a (n_scheduled, compression) group: the full
     policy x k x lr x seed traced grid, scored and seed-averaged."""
     cfg_g = dataclasses.replace(cfg, n_scheduled=n_scheduled,
@@ -107,7 +120,7 @@ def _score_group(cfg: rt.SimConfig, loss_fn, init_params, batches, *,
                        devices=devices, mesh=mesh)
     scores: Dict[Candidate, float] = {}
     for pol in policies:
-        s = loss_at_budget(out[pol], budget_s)
+        s = loss_at_budget(out[pol], budget_s, eps_budget)
         s = s.reshape(len(seeds), len(cps), len(aps))
         s = np.where(np.isfinite(s), s, np.inf).mean(axis=0)
         for i, k in enumerate(k_grid):
@@ -149,6 +162,7 @@ def tune(cfg: rt.SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
          k_grid: Optional[Sequence[int]] = None,
          lr_grid: Optional[Sequence[float]] = None,
          budget_s: Optional[float] = None,
+         eps_budget: Optional[float] = None,
          eval_batch=None, reduction: int = 2,
          refine_n_scheduled: bool = False,
          devices=None, mesh=None) -> TuneResult:
@@ -163,7 +177,10 @@ def tune(cfg: rt.SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
 
     Scores are seed-averaged :func:`loss_at_budget` values (lower is
     better); ``budget_s`` turns the objective into "best loss reachable
-    within this simulated wall-clock". Returns a :class:`TuneResult`;
+    within this simulated wall-clock", and ``eps_budget`` (with a DP
+    mechanism configured via ``cfg.privacy``) into "best loss before the
+    accounted (epsilon, delta) guarantee exceeds this epsilon" — both can
+    gate at once. Returns a :class:`TuneResult`;
     repeating the same call hits the engine cache and adds zero traces.
     """
     policies = (list(policies) if policies
@@ -203,8 +220,8 @@ def tune(cfg: rt.SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
                 cfg, loss_fn, init_params, batches, n_scheduled=n_s,
                 comp=comp, seeds=rung_seeds, policies=policies, cps=cps,
                 k_grid=k_grid, aps=aps, lr_grid=lr_grid, wcfg=wcfg,
-                eval_batch=eval_batch, budget_s=budget_s, devices=devices,
-                mesh=mesh)
+                eval_batch=eval_batch, budget_s=budget_s,
+                eps_budget=eps_budget, devices=devices, mesh=mesh)
             rung_scores.update(got)
             n_variants += len(rung_seeds) * len(policies) * len(cps) * len(aps)
         scores.update(rung_scores)
@@ -237,7 +254,7 @@ def tune(cfg: rt.SimConfig, loss_fn, init_params: PyTree, batches: PyTree, *,
                 comp=best.compression, seeds=seeds, policies=[best.policy],
                 cps=cp, k_grid=[best.k], aps=ap, lr_grid=[best.lr],
                 wcfg=wcfg, eval_batch=eval_batch, budget_s=budget_s,
-                devices=devices, mesh=mesh)
+                eps_budget=eps_budget, devices=devices, mesh=mesh)
             n_variants += len(seeds)
             return next(iter(got.values()))
 

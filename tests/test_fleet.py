@@ -23,6 +23,7 @@ from benchmarks.common import make_linear_problem
 from repro.core import chunking, compression
 from repro.core.compression import SparseEF, compression_params
 from repro.core.hierarchy import HFLConfig
+from repro.core.privacy import privacy_params
 from repro.data import make_linear_datagen
 from repro.fl import runtime as rt
 from repro.fl import server
@@ -68,7 +69,8 @@ def test_canonical_sum_weighted_matches_masked():
 # chunked fl_round == unchunked fl_round, bitwise (under jit)
 # ---------------------------------------------------------------------------
 def _round_outputs(name, chunk, *, ef_mode="dense", state_dtype=jnp.float32,
-                   algo="fedavg", double_ef=False, with_part=False):
+                   algo="fedavg", double_ef=False, with_part=False,
+                   privacy=None):
     params, loss_fn, make_batches, _ = _problem()
     batches = jax.tree.map(jnp.asarray, make_batches(0, N))
     # chunk >= N degenerates to the unchunked pass (N state rows)
@@ -87,6 +89,10 @@ def _round_outputs(name, chunk, *, ef_mode="dense", state_dtype=jnp.float32,
     if with_part:
         part = (jnp.arange(N) % 2).astype(jnp.float32)
         kwargs.update(participation=part)
+    if privacy is not None:
+        kwargs.update(privacy=privacy,
+                      pparams=privacy_params(clip=0.5, sigma=0.3),
+                      privacy_key=jax.random.PRNGKey(11))
     fn = jax.jit(functools.partial(server.fl_round, **kwargs))
     new_state, metrics = fn(state, batches)
     return new_state, metrics
@@ -152,6 +158,23 @@ def test_chunked_parity_double_ef_and_participation():
 def test_chunk_ge_n_degenerates_to_unchunked():
     _assert_rounds_equal(_round_outputs("topk", 16),
                          _round_outputs("topk", None))
+
+
+@pytest.mark.parametrize("privacy", ["secagg", "dp", "secagg_dp"])
+def test_chunked_parity_with_privacy(privacy):
+    """The chunked client pass stays bitwise chunk-invariant with privacy
+    transforms active: per-client masks/noise key off absolute client ids
+    (domain-separated fold_in), not chunk-local positions, and the uint32
+    field sum is exactly associative."""
+    _assert_rounds_equal(_round_outputs("none", CHUNK, privacy=privacy),
+                         _round_outputs("none", None, privacy=privacy))
+
+
+def test_chunked_parity_privacy_composes_with_compression():
+    """secagg over a field-compatible compressor (sign) is chunk-invariant
+    too — EF and the mask prepass both ride the chunked scan."""
+    _assert_rounds_equal(_round_outputs("sign", CHUNK, privacy="secagg"),
+                         _round_outputs("sign", None, privacy="secagg"))
 
 
 def test_wrong_state_rows_raises():
