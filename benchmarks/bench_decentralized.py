@@ -1,0 +1,113 @@
+"""Compiled gossip + fog engine cost and loss-vs-wall-clock frontiers.
+
+The decentralized engine (``fl/decentralized.py``) runs a whole multi-round
+gossip schedule as one ``lax.scan`` with the mixing matrix ``W`` traced, so
+a topology grid rides one compiled program. This module emits:
+
+* ``gossip.us_per_round@N=<n>`` / ``gossip.rounds_per_s@N=<n>`` — cost of
+  the scanned D2D engine (priced per-edge channel, slowest-edge rounds);
+  both gated by ``scripts/check_bench.py``;
+* ``gossip_frontier.*`` — ungated loss-vs-wall-clock rows across the
+  standard topology grid (ring/torus/complete/ER), one vmapped engine call,
+  trace count recorded in the derived column;
+* ``fog.us_per_round@N=<n>`` / ``fog.rounds_per_s@N=<n>`` — cost of the
+  fog hybrid (intra-cluster D2D gossip between SBS sync rounds; arXiv
+  2006.03594), gated;
+* ``fog_frontier.*`` — ungated loss/wall-clock across a ``gossip_steps``
+  grid (more local D2D work per sync round trades backhaul for airtime).
+
+Keys say ``@N=<n>`` so ``--fast`` smoke numbers never alias full-run rows.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks import common
+from benchmarks.common import bench_rounds, emit, make_linear_problem
+from repro.core import topology as topo
+from repro.core.algorithms.registry import algo_params
+from repro.core.hierarchy import HFLConfig
+from repro.fl import decentralized as dz
+from repro.fl import runtime as rt
+
+ROUNDS = 40
+N_FULL = 64
+N_FAST = 16
+FOG_STEPS_GRID = (1, 2, 4)
+
+
+def _timed(run) -> float:
+    t0 = time.perf_counter()
+    out = run()
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    return time.perf_counter() - t0
+
+
+def main() -> None:
+    n = N_FAST if common.FAST else N_FULL
+    rounds = bench_rounds(ROUNDS)
+    params, loss_fn, make_batches, _ = make_linear_problem()
+    cfg = dz.GossipConfig(n_nodes=n, rounds=rounds,
+                          algo_params=algo_params(lr=0.1))
+
+    # --- scanned gossip engine cost (torus: constant-degree D2D graph) ----
+    side = int(n ** 0.5)
+    w = topo.laplacian_mixing(topo.torus_2d(side, n // side))
+
+    def run():
+        return dz.run_gossip(cfg, loss_fn, params, make_batches, w)
+
+    run()  # compile
+    dt = min(_timed(run) for _ in range(2))
+    _, logs = run()
+    emit(f"gossip.us_per_round@N={n}", dt / rounds * 1e6,
+         f"torus;edges={int(logs.n_edges[-1])};"
+         f"wall_clock={float(logs.latency_s[-1]):.1f}s")
+    emit(f"gossip.rounds_per_s@N={n}", 0.0,
+         "scanned D2D gossip throughput", value=rounds / dt)
+
+    # --- topology frontier: one vmapped call, W is the traced sweep axis --
+    adjs = topo.standard_adjacencies(n, seed=0, p=0.3)
+    names = sorted(adjs)
+    wgrid = [topo.laplacian_mixing(adjs[k]) for k in names]
+    t0 = rt.ENGINE_STATS["traces"]
+    slogs = dz.run_gossip_sweep(cfg, loss_fn, params, make_batches,
+                                wgrid=wgrid, seeds=(0,))
+    n_traces = rt.ENGINE_STATS["traces"] - t0
+    for i, name in enumerate(names):
+        emit(f"gossip_frontier.loss@{name}", 0.0,
+             f"wall_clock={float(slogs.latency_s[i, -1]):.1f}s;"
+             f"traces={n_traces}", value=float(slogs.loss[i, -1]))
+        emit(f"gossip_frontier.wall_clock_s@{name}", 0.0,
+             f"edges={int(slogs.n_edges[i, -1])}",
+             value=float(slogs.latency_s[i, -1]))
+
+    # --- fog hybrid: k D2D gossip steps between SBS sync rounds ----------
+    hcfg = HFLConfig(n_clusters=7, inter_cluster_period=4)
+
+    def run_fog(k):
+        fcfg = dz.GossipConfig(n_nodes=n, rounds=rounds, gossip_steps=k,
+                               algo_params=algo_params(lr=0.1))
+        return dz.run_fog(fcfg, hcfg, loss_fn, params, make_batches)
+
+    run_fog(2)  # compile
+    dt_fog = min(_timed(lambda: run_fog(2)) for _ in range(2))
+    _, flogs = run_fog(2)
+    emit(f"fog.us_per_round@N={n}", dt_fog / rounds * 1e6,
+         f"L=7,H=4,k=2;backhaul={float(flogs.backhaul_bits.sum()):.2e}b")
+    emit(f"fog.rounds_per_s@N={n}", 0.0,
+         "fog hybrid scan throughput", value=rounds / dt_fog)
+    for k in FOG_STEPS_GRID:
+        _, kl = run_fog(k)
+        emit(f"fog_frontier.loss@k={k}", 0.0,
+             f"wall_clock={float(kl.latency_s[-1]):.1f}s",
+             value=float(kl.loss[-1]))
+        emit(f"fog_frontier.wall_clock_s@k={k}", 0.0,
+             f"drift={float(kl.consensus_err[-1]):.2e}",
+             value=float(kl.latency_s[-1]))
+
+
+if __name__ == "__main__":
+    main()

@@ -15,10 +15,11 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_algorithms, bench_compression, bench_faults,
-                        bench_fleet, bench_hfl, bench_kernels,
-                        bench_privacy, bench_rs_rr_pf, bench_scheduling,
-                        bench_sweep, bench_update_aware)
+from benchmarks import (bench_algorithms, bench_compression,
+                        bench_decentralized, bench_faults, bench_fleet,
+                        bench_hfl, bench_kernels, bench_privacy,
+                        bench_rs_rr_pf, bench_scheduling, bench_sweep,
+                        bench_update_aware)
 from benchmarks import common, roofline
 
 MODULES = [
@@ -32,6 +33,7 @@ MODULES = [
     ("fleet(chunked-engine)", bench_fleet),
     ("faults(failure-aware)", bench_faults),
     ("privacy(secagg+dp)", bench_privacy),
+    ("decentralized(gossip+fog)", bench_decentralized),
     # last: it clears the engine cache to time cold-cache compile+dispatch
     ("sweep(mega)", bench_sweep),
 ]

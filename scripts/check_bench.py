@@ -43,7 +43,7 @@ from typing import Dict, List, Sequence, Tuple
 
 DEFAULT_GATED = ("engine.scan_us_per_round", "algorithms.*", "fleet.*",
                  "kernel.*_pallas", "sweep.variants_per_s*", "tune.*",
-                 "faults.*", "privacy.*")
+                 "faults.*", "privacy.*", "gossip.*", "fog.*")
 # fnmatch is full-string, so "kernel.*_pallas" gates the dispatch-path rows
 # (kernel.topk_pallas, ...) without catching kernel.*_pallas_interpret.
 # "sweep.variants_per_s*" gates the mega-sweep headline (one-call mixture
@@ -54,12 +54,16 @@ DEFAULT_GATED = ("engine.scan_us_per_round", "algorithms.*", "fleet.*",
 # faults_frontier.* loss/wall-clock diagnostics out, and algorithms.fedbuff
 # is already gated by "algorithms.*". "privacy.*" likewise gates the
 # secagg+dp engine cost rows while the literal "." keeps the ungated
-# privacy_frontier.* loss/epsilon diagnostics out.
+# privacy_frontier.* loss/epsilon diagnostics out; same pattern for the
+# decentralized engines: "gossip.*"/"fog.*" gate the D2D + fog-hybrid cost
+# rows, gossip_frontier.*/fog_frontier.* stay diagnostics.
 
 # Gated metrics where *larger* is the good direction (throughput rows):
-# these regress when new < baseline / tolerance.
-HIGHER_IS_BETTER = ("fleet.rounds_per_s*", "sweep.variants_per_s*",
-                    "faults.rounds_per_s*", "privacy.rounds_per_s*")
+# these regress when new < baseline / tolerance. Any ``*rounds_per_s*``
+# key is throughput by construction (every engine's headline follows the
+# ``<module>.rounds_per_s@N=`` convention), so new modules inherit the
+# right direction without touching this list.
+HIGHER_IS_BETTER = ("*rounds_per_s*", "sweep.variants_per_s*")
 SKIP_TOKEN = "[bench-skip]"
 
 

@@ -1,0 +1,143 @@
+#!/usr/bin/env python
+"""Refresh the committed benchmark baseline from a CI smoke artifact.
+
+The bench-smoke CI job uploads its ``--fast`` table as the
+``bench-fast-<run_id>`` artifact (dispatch a run manually via the
+``workflow_dispatch`` trigger when you want a fresh one from a quiet
+runner). This script turns that artifact into a
+``benchmarks/BENCH_engine_fast.baseline.json`` refresh:
+
+1. resolves the input — a ``bench_new.json`` file, a downloaded artifact
+   ``.zip``, or a directory holding the json (what ``gh run download``
+   leaves behind); with ``--run-id`` it calls ``gh run download`` itself;
+2. sanity-checks the table: valid ``{str: number}`` json that still covers
+   every *gated* key pattern (``scripts/check_bench.py DEFAULT_GATED``) the
+   current baseline covers — a table from a run where a module failed, or
+   from a stale branch missing rows, is rejected rather than silently
+   shrinking the gate;
+3. writes the baseline (sorted keys, 2-space indent — same format
+   ``benchmarks.run`` emits) and prints the key-level diff. Commit the
+   result; nothing is committed for you.
+
+Usage::
+
+    python scripts/refresh_baseline.py bench_new.json
+    python scripts/refresh_baseline.py bench-fast-123456.zip
+    python scripts/refresh_baseline.py --run-id 123456    # needs gh auth
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import json
+import subprocess
+import sys
+import tempfile
+import zipfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from check_bench import DEFAULT_GATED  # noqa: E402
+
+import fnmatch  # noqa: E402
+
+BASELINE = Path("benchmarks/BENCH_engine_fast.baseline.json")
+ARTIFACT_JSON = "bench_new.json"
+
+
+def _load_table(source: Path) -> dict:
+    """Accepts the json itself, an artifact zip, or a directory holding it."""
+    if source.is_dir():
+        hits = sorted(source.rglob("*.json"))
+        if not hits:
+            raise SystemExit(f"refresh_baseline: no .json under {source}")
+        if len(hits) > 1:
+            named = [h for h in hits if h.name == ARTIFACT_JSON]
+            if len(named) != 1:
+                raise SystemExit(
+                    f"refresh_baseline: ambiguous jsons under {source}: "
+                    f"{[str(h) for h in hits]}")
+            hits = named
+        source = hits[0]
+    if source.suffix == ".zip":
+        with zipfile.ZipFile(source) as zf:
+            names = [n for n in zf.namelist() if n.endswith(".json")]
+            if len(names) != 1:
+                raise SystemExit(
+                    f"refresh_baseline: expected one .json in {source}, "
+                    f"found {names}")
+            return json.load(io.TextIOWrapper(zf.open(names[0])))
+    with open(source) as f:
+        return json.load(f)
+
+
+def _download(run_id: str, dest: Path) -> Path:
+    """``gh run download`` the bench-fast artifact for ``run_id``."""
+    name = f"bench-fast-{run_id}"
+    subprocess.run(["gh", "run", "download", run_id, "--name", name,
+                    "--dir", str(dest)], check=True)
+    return dest
+
+
+def _gated(table: dict) -> set:
+    return {k for k in table
+            if any(fnmatch.fnmatch(k, p) for p in DEFAULT_GATED)}
+
+
+def sanity_check(new: dict, old: dict) -> None:
+    bad = {k: v for k, v in new.items()
+           if not isinstance(k, str) or not isinstance(v, (int, float))}
+    if bad or not new:
+        raise SystemExit(f"refresh_baseline: not a name->number table "
+                         f"(bad entries: {list(bad)[:5]!r})")
+    lost = _gated(old) - _gated(new)
+    if lost:
+        raise SystemExit(
+            "refresh_baseline: refusing to refresh — these gated keys "
+            f"would vanish from the baseline (module failure or stale "
+            f"branch?): {sorted(lost)}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("source", nargs="?",
+                    help="bench_new.json, artifact .zip, or a directory")
+    ap.add_argument("--run-id", default=None,
+                    help="CI run id: download bench-fast-<id> via gh")
+    ap.add_argument("--baseline", type=Path, default=BASELINE)
+    args = ap.parse_args(argv)
+    if bool(args.source) == bool(args.run_id):
+        ap.error("give exactly one of: a source path, or --run-id")
+
+    if args.run_id:
+        with tempfile.TemporaryDirectory() as td:
+            new = _load_table(_download(args.run_id, Path(td)))
+    else:
+        new = _load_table(Path(args.source))
+
+    with open(args.baseline) as f:
+        old = json.load(f)
+    sanity_check(new, old)
+
+    added = sorted(set(new) - set(old))
+    removed = sorted(set(old) - set(new))
+    for k in added:
+        print(f"  + {k} = {new[k]:.1f}")
+    for k in removed:
+        print(f"  - {k} (was {old[k]:.1f})")
+    for k in sorted(set(new) & set(old)):
+        if old[k] > 0 and not 0.5 < new[k] / old[k] < 2.0:
+            print(f"  ~ {k}: {old[k]:.1f} -> {new[k]:.1f}")
+
+    # same byte format benchmarks.run's write_json emits (no trailing \n)
+    with open(args.baseline, "w") as f:
+        json.dump(new, f, indent=2, sort_keys=True)
+    print(f"refresh_baseline: wrote {args.baseline} ({len(new)} entries, "
+          f"+{len(added)}/-{len(removed)}); review and commit the diff")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

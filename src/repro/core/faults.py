@@ -59,6 +59,7 @@ STRAGGLER_FOLD = 0x57A6
 FADING_FOLD = 0xFAD0
 RETRY_FOLD = 0x2E72
 DOWNLINK_FOLD = 0xD0DE
+D2D_FOLD = 0xD2D0  # device-to-device (gossip/fog) edge channel stream
 
 
 class FaultParams(NamedTuple):
@@ -146,6 +147,18 @@ def retry_fading(kt: jax.Array, attempt: int, n: int) -> jnp.ndarray:
     round's Gauss-Markov state (which advances once per round)."""
     k = jax.random.fold_in(jax.random.fold_in(kt, RETRY_FOLD), attempt)
     keys = chunking.client_keys(k, jnp.arange(n, dtype=jnp.int32))
+    return jax.vmap(lambda kk: jax.random.exponential(kk, ()))(keys)
+
+
+def d2d_fading(kt: jax.Array, n_edges: jnp.ndarray | int) -> jnp.ndarray:
+    """I.i.d. Rayleigh power per directed D2D edge (gossip/fog engines;
+    ``fl/decentralized.py``). Keyed per edge index under :data:`D2D_FOLD`,
+    so the stream is (a) invariant to how edges are batched and (b)
+    disjoint from every cellular-uplink/downlink draw — adding a D2D
+    overlay never shifts the flat/HFL engines' randomness. Callers reshape
+    the ``(n_edges,)`` result to their ``(N, N)`` edge matrix."""
+    keys = chunking.client_keys(jax.random.fold_in(kt, D2D_FOLD),
+                                jnp.arange(n_edges, dtype=jnp.int32))
     return jax.vmap(lambda kk: jax.random.exponential(kk, ()))(keys)
 
 

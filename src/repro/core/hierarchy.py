@@ -70,19 +70,22 @@ def hex_centers(n_clusters: int = 7, pitch_m: float = 500.0) -> np.ndarray:
     return np.asarray(pts[:n_clusters])
 
 
-def hfl_geometry_jax(key: jax.Array, hcfg: HFLConfig, n_devices: int
-                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
-                                jnp.ndarray]:
-    """Device deployment for the wireless-aware HFL engine (traceable).
+def hfl_geometry_xy_jax(key: jax.Array, hcfg: HFLConfig, n_devices: int
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                   jnp.ndarray, jnp.ndarray]:
+    """Device deployment for the wireless-aware HFL/fog engines (traceable).
 
     Samples ``n_devices`` uniformly in the deployment disk, assigns each to
     its nearest SBS on the hex grid, and returns
 
-    ``(cluster_ids (N,) int32, dist_to_sbs (N,) m, member (L, N) bool,
-    cluster_sizes (L,) float32)``
+    ``(pos_xy (N, 2) m, cluster_ids (N,) int32, dist_to_sbs (N,) m,
+    member (L, N) bool, cluster_sizes (L,) float32)``
 
     — all jnp, so the whole setup lives inside the compiled engine and a
-    seed sweep re-deploys per variant under ``vmap``.
+    seed sweep re-deploys per variant under ``vmap``. The fog hybrid
+    (``fl/decentralized.run_fog``) consumes ``pos_xy`` to build and price
+    the intra-cluster D2D graph; the pure-HFL engine ignores it
+    (:func:`hfl_geometry_jax` keeps the old 4-tuple contract).
     """
     centers = jnp.asarray(hex_centers(hcfg.n_clusters, hcfg.sbs_pitch_m),
                           jnp.float32)
@@ -96,6 +99,16 @@ def hfl_geometry_jax(key: jax.Array, hcfg: HFLConfig, n_devices: int
     member = jax.nn.one_hot(cluster_ids, hcfg.n_clusters,
                             dtype=jnp.float32).T.astype(bool)      # (L, N)
     cluster_sizes = jnp.sum(member.astype(jnp.float32), axis=1)    # (L,)
+    return pos, cluster_ids, dist_to_sbs, member, cluster_sizes
+
+
+def hfl_geometry_jax(key: jax.Array, hcfg: HFLConfig, n_devices: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                jnp.ndarray]:
+    """4-tuple contract of the pure-HFL engine (no xy positions); see
+    :func:`hfl_geometry_xy_jax` for the full geometry."""
+    _, cluster_ids, dist_to_sbs, member, cluster_sizes = (
+        hfl_geometry_xy_jax(key, hcfg, n_devices))
     return cluster_ids, dist_to_sbs, member, cluster_sizes
 
 

@@ -4,9 +4,22 @@ Mixing matrices W built from graph Laplacians; convergence speed is governed
 by the spectral gap 1 - |lambda_2(W)|. The torus topology maps natively onto
 TPU ICI (DESIGN.md §3) and is what ``fl/decentralized.py`` uses with
 ``lax.ppermute``.
+
+Two layers, mirroring ``core/wireless.py``:
+
+* numpy builders/diagnostics — host-side graph construction. A W built here
+  is a *traced argument* of the compiled gossip engine
+  (``fl/decentralized.py``), so a grid of topologies is one more vmapped
+  sweep axis sharing a single trace.
+* jnp twins (``laplacian_mixing_jax``, ``metropolis_hastings_mixing_jax``,
+  ``gate_mixing_jax``) — the same math on traced adjacency/availability, for
+  graphs built *inside* a compiled program (the fog hybrid derives its
+  intra-cluster D2D graph from in-program geometry; time-varying graphs
+  renormalize W under the churn mask every round).
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -48,15 +61,44 @@ def star(n: int) -> np.ndarray:
     return a
 
 
+def is_connected(adj: np.ndarray) -> bool:
+    """BFS reachability from node 0 (edges where ``adj > 0``)."""
+    a = np.asarray(adj) > 0
+    n = a.shape[0]
+    reached = np.zeros(n, dtype=bool)
+    reached[0] = True
+    frontier = reached.copy()
+    while frontier.any():
+        frontier = a[frontier].any(axis=0) & ~reached
+        reached |= frontier
+    return bool(reached.all())
+
+
 def erdos_renyi(seed: int, n: int, p: float) -> np.ndarray:
-    """Connected ER graph (retries with a ring overlay if disconnected)."""
+    """Connected ER graph: overlays a ring *only if* the G(n, p) draw is
+    disconnected. (The overlay used to be unconditional, which silently
+    forced every node's degree >= 2 and changed the degree distribution of
+    every draw, not just the disconnected ones.)"""
     rng = np.random.default_rng(seed)
     a = (rng.random((n, n)) < p).astype(float)
     a = np.triu(a, 1)
     a = a + a.T
-    # guarantee connectivity by overlaying a ring
-    a = np.maximum(a, ring(n))
+    if not is_connected(a):
+        a = np.maximum(a, ring(n))
     return a
+
+
+def standard_adjacencies(n: int, seed: int = 0, p: float = 0.3):
+    """Name -> adjacency for the standard topology grid at size ``n`` (the
+    sweep axis of ``run_gossip_sweep(wgrid=)``): ring, 2-D torus (square
+    ``n`` only), complete, and a connected ER draw."""
+    adjs = {"ring": ring(n)}
+    side = int(round(np.sqrt(n)))
+    if side * side == n and side >= 2:
+        adjs["torus"] = torus_2d(side, side)
+    adjs["complete"] = complete(n)
+    adjs["erdos_renyi"] = erdos_renyi(seed, n, p)
+    return adjs
 
 
 # ---------------------------------------------------------------------------
@@ -91,16 +133,65 @@ def is_doubly_stochastic(w: np.ndarray, tol: float = 1e-8) -> bool:
             and (w >= -tol).all())
 
 
+def _abs_eigvals_desc(w: np.ndarray) -> np.ndarray:
+    """|eigenvalues| of a symmetric mixing matrix, descending. ``eigvalsh``
+    (not ``eigvals``): both mixing builders return symmetric W, and the
+    symmetric solver is exact-real — the general solver's spurious
+    ~1e-16 imaginary parts used to flow into |lambda_2|."""
+    sym = 0.5 * (w + w.T)
+    return np.sort(np.abs(np.linalg.eigvalsh(sym)))[::-1]
+
+
 def spectral_gap(w: np.ndarray) -> float:
     """1 - |lambda_2|; larger gap -> faster consensus."""
-    ev = np.sort(np.abs(np.linalg.eigvals(w)))[::-1]
+    ev = _abs_eigvals_desc(w)
     return float(1.0 - ev[1]) if len(ev) > 1 else 1.0
 
 
 def consensus_rounds(w: np.ndarray, eps: float = 1e-3) -> float:
     """Rounds for consensus error eps: ~ log(eps)/log(|lambda_2|)."""
-    ev = np.sort(np.abs(np.linalg.eigvals(w)))[::-1]
+    ev = _abs_eigvals_desc(w)
     lam2 = ev[1] if len(ev) > 1 else 0.0
     if lam2 <= 0:
         return 1.0
     return float(np.log(eps) / np.log(lam2))
+
+
+# ---------------------------------------------------------------------------
+# jnp twins (compiled-engine path: traced adjacency / availability)
+# ---------------------------------------------------------------------------
+def laplacian_mixing_jax(adj: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (8) on a traced adjacency: W = I - (D - A) / (d_max + 1).
+
+    Same math as :func:`laplacian_mixing` but pure-jnp, so the fog engine
+    can build its intra-cluster D2D mixing matrix from in-program geometry
+    (the graph then re-deploys per variant under ``vmap``)."""
+    a = adj.astype(jnp.float32)
+    deg = jnp.sum(a, axis=1)
+    d_max = jnp.max(deg)
+    lap = jnp.diag(deg) - a
+    return jnp.eye(a.shape[0], dtype=jnp.float32) - lap / (d_max + 1.0)
+
+
+def metropolis_hastings_mixing_jax(adj: jnp.ndarray) -> jnp.ndarray:
+    """Degree-aware twin of :func:`metropolis_hastings_mixing` on a traced
+    adjacency: W_ij = 1/(1+max(d_i, d_j)) on edges, diagonal absorbs the
+    leftover row mass."""
+    a = adj.astype(jnp.float32)
+    deg = jnp.sum(a, axis=1)
+    pair_max = jnp.maximum(deg[:, None], deg[None, :])
+    w = a / (1.0 + pair_max)
+    return w + jnp.diag(1.0 - jnp.sum(w, axis=1))
+
+
+def gate_mixing_jax(w: jnp.ndarray, avail: jnp.ndarray) -> jnp.ndarray:
+    """Effective mixing matrix under a node-availability mask (time-varying
+    graphs): edges touching an offline node are cut and their weight folds
+    back into *both* endpoint diagonals, so W_eff stays symmetric-doubly-
+    stochastic whenever W is. An isolated (offline) node's row becomes
+    exactly one-hot — its diagonal is computed as ``1 - sum(0) == 1.0`` —
+    so it keeps its own model bitwise through the consensus product."""
+    a = avail.astype(w.dtype)
+    off = w * (a[:, None] * a[None, :])
+    off = off - jnp.diag(jnp.diag(off))
+    return off + jnp.diag(1.0 - jnp.sum(off, axis=1))

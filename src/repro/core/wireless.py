@@ -206,6 +206,26 @@ def sample_positions_jax(key: jax.Array, cp: ChannelParams,
     return jnp.maximum(r, 1.0)
 
 
+def sample_positions_xy_jax(key: jax.Array, cp: ChannelParams,
+                            n_devices: int) -> jnp.ndarray:
+    """Uniform (N, 2) xy deployment in the disk of radius R. The D2D
+    (gossip) engine needs full coordinates — pairwise device distances,
+    not distances to a base station at the origin — so this is the xy
+    companion of :func:`sample_positions_jax` (same disk law)."""
+    k_r, k_t = jax.random.split(key)
+    theta = jax.random.uniform(k_t, (n_devices,)) * (2.0 * jnp.pi)
+    r = cp.cell_radius_m * jnp.sqrt(jax.random.uniform(k_r, (n_devices,)))
+    return jnp.stack([r * jnp.cos(theta), r * jnp.sin(theta)], axis=-1)
+
+
+def pairwise_dist_jax(pos_xy: jnp.ndarray) -> jnp.ndarray:
+    """(N, 2) positions -> (N, N) pairwise distances, clamped to >= 1 m so
+    the log-distance path loss stays finite (the self-distance diagonal is
+    clamped too; self-edges are never priced)."""
+    diff = pos_xy[:, None, :] - pos_xy[None, :, :]
+    return jnp.maximum(jnp.linalg.norm(diff, axis=-1), 1.0)
+
+
 def path_gain_jax(dist_m: jnp.ndarray, cp: ChannelParams) -> jnp.ndarray:
     loss_db = cp.ref_loss_db + 10.0 * cp.path_loss_exponent * jnp.log10(dist_m)
     return 10.0 ** (-loss_db / 10.0)

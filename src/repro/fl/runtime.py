@@ -51,7 +51,12 @@ An entire multi-round simulation compiles into **one XLA program**:
 * compiled engines are cached per static config (``_ENGINE_CACHE``, bounded
   FIFO) so repeated calls never re-trace; on the single-run path the initial
   params are donated (they alias the returned final params, letting XLA run
-  the scan in-place on the parameter buffers).
+  the scan in-place on the parameter buffers);
+* decentralized gossip and the fog hybrid (``fl/decentralized.py``) are
+  built on the same pattern and plug into this module's engine cache,
+  ``ENGINE_STATS`` trace counter, and :func:`message_bits_jax` payload
+  pricing — their mixing matrix ``W`` is one more *traced* argument, so a
+  topology grid is a sweep axis like any other.
 
 ``run_simulation`` / ``run_hfl`` keep the legacy host-loop signature as thin
 wrappers: ``engine="host"`` (or a host-only ``eval_fn`` with no attached
@@ -317,6 +322,21 @@ def _policy_cfg(cfg: SimConfig, wcfg: wireless.WirelessConfig
         n_subchannels=wcfg.n_subchannels)
 
 
+def message_bits_jax(compression_name: str, cparams: CompressionParams,
+                     model_bits: float, d_model: int) -> jnp.ndarray:
+    """Simulated bits-on-the-wire of one model-sized message: ``model_bits``
+    scaled by the compressor's bits-per-parameter rate on the actual d-dim
+    message (data-independent, so a round can be priced *before*
+    transmission). ``"none"`` sends exactly ``model_bits``. Shared pricing
+    model of the flat, HFL, and gossip/fog engines
+    (``fl/decentralized.py``)."""
+    if compression_name == "none":
+        return jnp.float32(model_bits)
+    payload_scale = model_bits / (32.0 * d_model)
+    return payload_scale * compression.uplink_bits_jax(
+        compression_name, cparams, d_model)
+
+
 def _resolve_cparams(cfg: SimConfig, init_params) -> CompressionParams:
     if cfg.compression_params is not None:
         return cfg.compression_params
@@ -461,8 +481,9 @@ def _make_sim_fns(cfg: SimConfig, wcfg: wireless.WirelessConfig, loss_fn,
             d_model = fl_server.flat_dim(state.params)
             payload_scale = cfg.model_bits / (32.0 * d_model)
             if comp_active:
-                bits_dev = payload_scale * compression.uplink_bits_jax(
-                    cfg.compression, cparams, d_model) * algo.uplink_factor
+                bits_dev = message_bits_jax(
+                    cfg.compression, cparams, cfg.model_bits,
+                    d_model) * algo.uplink_factor
             else:
                 bits_dev = jnp.float32(cfg.model_bits * algo.uplink_factor)
             mask_over = jnp.float32(0.0)
@@ -1415,11 +1436,8 @@ def _make_hfl_fns(cfg: SimConfig, hcfg: HFLConfig,
                     fparams, kt, n)
             d_model = fl_server.flat_dim(gm)
             payload_scale = cfg.model_bits / (32.0 * d_model)
-            if comp_active:
-                msg_bits = payload_scale * compression.uplink_bits_jax(
-                    cfg.compression, cparams, d_model)
-            else:
-                msg_bits = jnp.float32(cfg.model_bits)
+            msg_bits = message_bits_jax(cfg.compression, cparams,
+                                        cfg.model_bits, d_model)
             if field_on:
                 # a masked message is incompressible: dense field_bits per
                 # coordinate replaces the compressor's rate on the wire

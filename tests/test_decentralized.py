@@ -1,0 +1,380 @@
+"""Compiled gossip + fog engines (fl/decentralized.py).
+
+Parity contract, same as the flat/HFL engines: the scanned engine and the
+host loop (per-round dispatch of the same jitted step) agree **bitwise**;
+the uncompressed consensus exchange matches the numpy ``W @ X`` reference;
+a topology grid sweeps with exactly one trace.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import make_linear_problem
+from repro.core import topology as topo
+from repro.core.compression.registry import compression_params
+from repro.core.faults import fault_params
+from repro.core.hierarchy import HFLConfig
+from repro.fl import decentralized as dz
+from repro.fl.runtime import ENGINE_STATS
+
+N = 9
+
+TOPOLOGIES = {
+    "ring": lambda: topo.laplacian_mixing(topo.ring(N)),
+    "torus": lambda: topo.laplacian_mixing(topo.torus_2d(3, 3)),
+    "er_mh": lambda: topo.metropolis_hastings_mixing(
+        topo.erdos_renyi(1, N, 0.4)),
+    "star": lambda: topo.laplacian_mixing(topo.star(N)),
+}
+
+_LOG_FIELDS = ("loss", "latency_s", "comm_s", "comp_s", "uplink_bits",
+               "backhaul_bits", "consensus_err", "n_edges", "n_online")
+
+
+def _problem():
+    params0, loss_fn, make_batches, _ = make_linear_problem()
+    return params0, loss_fn, make_batches
+
+
+def _assert_logs_bitwise(a: dz.GossipLogs, b: dz.GossipLogs):
+    for f in _LOG_FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# scan vs host bitwise parity (>= 3 topologies, plus compressed / faulted)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("topology", sorted(TOPOLOGIES))
+def test_gossip_scan_host_bitwise_parity(topology):
+    params0, loss_fn, make_batches = _problem()
+    w = TOPOLOGIES[topology]()
+    cfg = dz.GossipConfig(n_nodes=N, rounds=5)
+    ps, logs = dz.run_gossip(cfg, loss_fn, params0, make_batches, w)
+    ph, logs_h = dz.run_gossip(cfg, loss_fn, params0, make_batches, w,
+                               engine="host")
+    _assert_logs_bitwise(logs, logs_h)
+    np.testing.assert_array_equal(np.asarray(ps["w"]), np.asarray(ph["w"]))
+
+
+@pytest.mark.parametrize("compression", ["topk", "qsgd"])
+def test_gossip_compressed_parity(compression):
+    params0, loss_fn, make_batches = _problem()
+    w = TOPOLOGIES["torus"]()
+    cfg = dz.GossipConfig(n_nodes=N, rounds=4, compression=compression,
+                          compression_params=compression_params(k=4))
+    _, logs = dz.run_gossip(cfg, loss_fn, params0, make_batches, w)
+    _, logs_h = dz.run_gossip(cfg, loss_fn, params0, make_batches, w,
+                              engine="host")
+    _assert_logs_bitwise(logs, logs_h)
+
+
+def test_gossip_faulted_parity():
+    params0, loss_fn, make_batches = _problem()
+    w = TOPOLOGIES["er_mh"]()
+    cfg = dz.GossipConfig(
+        n_nodes=N, rounds=5, compression="sign",
+        faults=fault_params(churn_p_off=0.2, churn_p_on=0.6,
+                            straggler_prob=0.3, fading_rho=0.5))
+    _, logs = dz.run_gossip(cfg, loss_fn, params0, make_batches, w)
+    _, logs_h = dz.run_gossip(cfg, loss_fn, params0, make_batches, w,
+                              engine="host")
+    _assert_logs_bitwise(logs, logs_h)
+
+
+# ---------------------------------------------------------------------------
+# numpy reference: uncompressed exchange is exactly W @ X
+# ---------------------------------------------------------------------------
+def test_consensus_matches_numpy_reference():
+    """Run T and T+1 rounds; the extra round's pre-update model must equal
+    the numpy float32 ``W @ X_T`` of the T-round per-node params (the
+    engine's exchange has no hidden extra terms), and the post-update model
+    must equal mixed + the per-node local delta computed independently."""
+    params0, loss_fn, make_batches = _problem()
+    w = TOPOLOGIES["torus"]()
+    cfg_t = dz.GossipConfig(n_nodes=N, rounds=3, comp_latency_s=0.0)
+    cfg_t1 = dz.GossipConfig(n_nodes=N, rounds=4, comp_latency_s=0.0)
+    ps_t, _ = dz.run_gossip(cfg_t, loss_fn, params0, make_batches, w)
+    ps_t1, _ = dz.run_gossip(cfg_t1, loss_fn, params0, make_batches, w)
+    x_t = np.asarray(ps_t["w"], np.float32)          # (N, D) after 3 rounds
+    mixed_ref = np.asarray(w, np.float32) @ x_t       # numpy reference mix
+    # re-run the local update on the reference-mixed model
+    from repro.core.algorithms import registry as algo_registry
+    aparams = algo_registry.default_algo_params()
+    algo = algo_registry.get_algorithm("fedavg")
+    batches = make_batches(3, N)
+
+    def one(p, b):
+        return algo.client_update(loss_fn, aparams, {"w": p}, b, None)
+
+    deltas, _, _ = jax.vmap(one)(jnp.asarray(mixed_ref), batches)
+    x_t1_ref = mixed_ref + np.asarray(deltas["w"], np.float32)
+    np.testing.assert_allclose(np.asarray(ps_t1["w"]), x_t1_ref,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_consensus_shrinks_drift_lr0():
+    """With lr=0 the run is pure consensus: drift decreases monotonically
+    and the node average is preserved (doubly stochastic W)."""
+    from repro.core.algorithms.registry import algo_params
+    params0, loss_fn, make_batches = _problem()
+    # heterogeneity comes from one warmup round with lr>0
+    w = TOPOLOGIES["ring"]()
+    cfg = dz.GossipConfig(n_nodes=N, rounds=8,
+                          algo_params=algo_params(lr=0.1))
+    _, logs = dz.run_gossip(cfg, loss_fn, params0, make_batches, w)
+    assert logs.consensus_err[-1] < logs.consensus_err[1]
+
+
+def test_denser_graph_faster_consensus():
+    """Spectral gap ordering shows up in the engine: complete-graph gossip
+    reaches lower model drift than ring gossip after the same rounds."""
+    params0, loss_fn, make_batches = _problem()
+    cfg = dz.GossipConfig(n_nodes=N, rounds=6)
+    _, ring_logs = dz.run_gossip(cfg, loss_fn, params0, make_batches,
+                                 topo.laplacian_mixing(topo.ring(N)))
+    _, full_logs = dz.run_gossip(cfg, loss_fn, params0, make_batches,
+                                 topo.laplacian_mixing(topo.complete(N)))
+    assert full_logs.consensus_err[-1] < ring_logs.consensus_err[-1]
+
+
+# ---------------------------------------------------------------------------
+# traced W: topology grid sweeps with exactly one trace
+# ---------------------------------------------------------------------------
+def test_topology_grid_single_trace():
+    params0, loss_fn, make_batches = _problem()
+    wgrid = [topo.laplacian_mixing(a)
+             for a in topo.standard_adjacencies(N, seed=2).values()]
+    cfg = dz.GossipConfig(n_nodes=N, rounds=4)
+    before = ENGINE_STATS["traces"]
+    logs = dz.run_gossip_sweep(cfg, loss_fn, params0, make_batches,
+                               wgrid=wgrid, seeds=(0, 1))
+    assert ENGINE_STATS["traces"] - before == 1
+    assert logs.loss.shape == (2 * len(wgrid), cfg.rounds)
+    assert np.isfinite(logs.loss).all()
+
+
+def test_rerun_with_new_w_does_not_retrace():
+    params0, loss_fn, make_batches = _problem()
+    cfg = dz.GossipConfig(n_nodes=N, rounds=3)
+    dz.run_gossip(cfg, loss_fn, params0, make_batches, TOPOLOGIES["ring"]())
+    before = ENGINE_STATS["traces"]
+    dz.run_gossip(cfg, loss_fn, params0, make_batches, TOPOLOGIES["star"]())
+    assert ENGINE_STATS["traces"] == before
+
+
+def test_sweep_matches_single_runs():
+    """Each sweep variant reproduces the corresponding single run (vmap may
+    pick a different batched-matmul lowering, so tight allclose, not
+    bitwise — bitwise is the scan-vs-host contract)."""
+    params0, loss_fn, make_batches = _problem()
+    ws = [TOPOLOGIES["ring"](), TOPOLOGIES["er_mh"]()]
+    cfg = dz.GossipConfig(n_nodes=N, rounds=4)
+    logs = dz.run_gossip_sweep(cfg, loss_fn, params0, make_batches,
+                               wgrid=ws, seeds=(0,))
+    for v, w in enumerate(ws):
+        _, single = dz.run_gossip(cfg, loss_fn, params0, make_batches, w)
+        np.testing.assert_allclose(logs.loss[v], single.loss, rtol=1e-6)
+        np.testing.assert_allclose(logs.latency_s[v], single.latency_s,
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# channel pricing
+# ---------------------------------------------------------------------------
+def test_compression_shortens_gossip_rounds():
+    """Same channel draws, smaller payload -> strictly smaller slowest-edge
+    airtime every round (the compression stream is key-separated from the
+    fading stream)."""
+    params0, loss_fn, make_batches = _problem()
+    w = TOPOLOGIES["torus"]()
+    dense = dz.GossipConfig(n_nodes=N, rounds=5)
+    sparse = dz.GossipConfig(n_nodes=N, rounds=5, compression="topk",
+                             compression_params=compression_params(k=2))
+    _, dlogs = dz.run_gossip(dense, loss_fn, params0, make_batches, w)
+    _, slogs = dz.run_gossip(sparse, loss_fn, params0, make_batches, w)
+    assert (slogs.comm_s < dlogs.comm_s).all()
+    assert (slogs.uplink_bits < dlogs.uplink_bits).all()
+
+
+def test_gossip_latency_is_channel_driven():
+    """Per-round comm time varies with the fading draws (no constants) and
+    every priced quantity is positive on a connected graph."""
+    params0, loss_fn, make_batches = _problem()
+    w = TOPOLOGIES["ring"]()
+    cfg = dz.GossipConfig(n_nodes=N, rounds=6)
+    _, logs = dz.run_gossip(cfg, loss_fn, params0, make_batches, w)
+    assert (logs.comm_s > 0).all()
+    assert np.unique(logs.comm_s).size > 1
+    assert (np.diff(logs.latency_s) > 0).all()
+    # ring: every node has 2 out-edges -> 2N directed edges
+    assert (logs.n_edges == 2 * N).all()
+
+
+def test_uplink_bits_count_active_edges():
+    params0, loss_fn, make_batches = _problem()
+    w = TOPOLOGIES["ring"]()
+    cfg = dz.GossipConfig(n_nodes=N, rounds=3, model_bits=1e6)
+    _, logs = dz.run_gossip(cfg, loss_fn, params0, make_batches, w)
+    np.testing.assert_allclose(logs.uplink_bits, 1e6 * 2 * N)
+
+
+# ---------------------------------------------------------------------------
+# time-varying graphs (faults composition)
+# ---------------------------------------------------------------------------
+def test_all_offline_keeps_models_bitwise():
+    """churn_p_off=1 isolates every node from round 0: the final per-node
+    params equal the initial broadcast bitwise and no compute is billed."""
+    params0, loss_fn, make_batches = _problem()
+    w = TOPOLOGIES["er_mh"]()
+    cfg = dz.GossipConfig(n_nodes=N, rounds=4,
+                          faults=fault_params(churn_p_off=1.0,
+                                              churn_p_on=0.0))
+    ps, logs = dz.run_gossip(cfg, loss_fn, params0, make_batches, w)
+    x0 = np.tile(np.asarray(params0["w"], np.float32)[None], (N, 1))
+    np.testing.assert_array_equal(np.asarray(ps["w"]), x0)
+    assert (logs.n_online == 0).all()
+    assert (logs.n_edges == 0).all()
+    assert (logs.comp_s == 0).all()
+
+
+def test_churn_reduces_active_edges():
+    params0, loss_fn, make_batches = _problem()
+    w = TOPOLOGIES["torus"]()
+    healthy = dz.GossipConfig(n_nodes=N, rounds=6)
+    churny = dz.GossipConfig(
+        n_nodes=N, rounds=6,
+        faults=fault_params(churn_p_off=0.5, churn_p_on=0.3))
+    _, hlogs = dz.run_gossip(healthy, loss_fn, params0, make_batches, w)
+    _, clogs = dz.run_gossip(churny, loss_fn, params0, make_batches, w)
+    assert clogs.n_edges.sum() < hlogs.n_edges.sum()
+    assert (clogs.n_online <= N).all()
+
+
+def test_fault_grid_sweeps_in_one_trace():
+    params0, loss_fn, make_batches = _problem()
+    cfg = dz.GossipConfig(n_nodes=N, rounds=3)
+    fgrid = [fault_params(churn_p_off=p, churn_p_on=0.5)
+             for p in (0.0, 0.2, 0.5)]
+    before = ENGINE_STATS["traces"]
+    logs = dz.run_gossip_sweep(cfg, loss_fn, params0, make_batches,
+                               wgrid=[TOPOLOGIES["ring"]()],
+                               fparams_grid=fgrid)
+    assert ENGINE_STATS["traces"] - before == 1
+    assert logs.loss.shape == (3, 3)
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+def test_config_validation():
+    with pytest.raises(ValueError, match="server-free"):
+        dz.GossipConfig(algorithm="scaffold")
+    with pytest.raises(ValueError, match="unknown compressor"):
+        dz.GossipConfig(compression="middle-out")
+    with pytest.raises(ValueError, match="gossip_steps"):
+        dz.GossipConfig(gossip_steps=0)
+    with pytest.raises(ValueError, match="mixing"):
+        dz.GossipConfig(mixing="magic")
+    with pytest.raises(TypeError, match="FaultParams"):
+        dz.GossipConfig(faults={"drop_prob": 0.5})
+
+
+def test_bad_w_rejected():
+    params0, loss_fn, make_batches = _problem()
+    cfg = dz.GossipConfig(n_nodes=N, rounds=2)
+    with pytest.raises(ValueError, match="doubly stochastic"):
+        dz.run_gossip(cfg, loss_fn, params0, make_batches,
+                      topo.ring(N))  # adjacency, not a mixing matrix
+    with pytest.raises(ValueError, match="mixing matrix must be"):
+        dz.run_gossip(cfg, loss_fn, params0, make_batches,
+                      topo.laplacian_mixing(topo.ring(N + 1)))
+
+
+# ---------------------------------------------------------------------------
+# fog hybrid
+# ---------------------------------------------------------------------------
+FOG_N = 12
+FOG_HCFG = HFLConfig(n_clusters=3, inter_cluster_period=3)
+
+
+def test_fog_scan_host_bitwise_parity():
+    params0, loss_fn, make_batches = _problem()
+    cfg = dz.GossipConfig(n_nodes=FOG_N, rounds=6, gossip_steps=2)
+    ps, logs = dz.run_fog(cfg, FOG_HCFG, loss_fn, params0, make_batches)
+    ph, logs_h = dz.run_fog(cfg, FOG_HCFG, loss_fn, params0, make_batches,
+                            engine="host")
+    _assert_logs_bitwise(logs, logs_h)
+    np.testing.assert_array_equal(np.asarray(ps["w"]), np.asarray(ph["w"]))
+
+
+def test_fog_sync_collapses_drift_and_prices_backhaul():
+    """Between SBS syncs the clusters drift apart (only intra-cluster D2D
+    edges exist); on each sync round the MBS average pulls drift to ~0 and
+    the backhaul/uplink bits are billed exactly there."""
+    params0, loss_fn, make_batches = _problem()
+    cfg = dz.GossipConfig(n_nodes=FOG_N, rounds=6, gossip_steps=2,
+                          model_bits=1e6)
+    _, logs = dz.run_fog(cfg, FOG_HCFG, loss_fn, params0, make_batches)
+    period = FOG_HCFG.inter_cluster_period
+    sync_rounds = [t for t in range(cfg.rounds) if (t + 1) % period == 0]
+    off_rounds = [t for t in range(cfg.rounds) if (t + 1) % period != 0]
+    assert (logs.backhaul_bits[sync_rounds] > 0).all()
+    assert (logs.backhaul_bits[off_rounds] == 0).all()
+    # drift right after a sync is tiny vs the round before it
+    for t in sync_rounds:
+        assert logs.consensus_err[t] < 1e-4
+        assert logs.consensus_err[t - 1] > 1e-3
+    # sync rounds bill the member uplink on top of the D2D exchange
+    assert logs.uplink_bits[sync_rounds[0]] > logs.uplink_bits[off_rounds[0]]
+
+
+def test_fog_d2d_radius_prunes_edges():
+    params0, loss_fn, make_batches = _problem()
+    wide = dz.GossipConfig(n_nodes=FOG_N, rounds=3)
+    tight = dz.GossipConfig(n_nodes=FOG_N, rounds=3, d2d_radius_m=150.0)
+    _, wlogs = dz.run_fog(wide, FOG_HCFG, loss_fn, params0, make_batches)
+    _, tlogs = dz.run_fog(tight, FOG_HCFG, loss_fn, params0, make_batches)
+    assert tlogs.n_edges[0] <= wlogs.n_edges[0]
+
+
+def test_fog_compressed_d2d_parity():
+    params0, loss_fn, make_batches = _problem()
+    cfg = dz.GossipConfig(n_nodes=FOG_N, rounds=4, gossip_steps=2,
+                          compression="topk",
+                          compression_params=compression_params(k=4),
+                          mixing="mh")
+    _, logs = dz.run_fog(cfg, FOG_HCFG, loss_fn, params0, make_batches)
+    _, logs_h = dz.run_fog(cfg, FOG_HCFG, loss_fn, params0, make_batches,
+                           engine="host")
+    _assert_logs_bitwise(logs, logs_h)
+
+
+def test_fog_faulted_runs_and_matches_host():
+    params0, loss_fn, make_batches = _problem()
+    cfg = dz.GossipConfig(
+        n_nodes=FOG_N, rounds=5,
+        faults=fault_params(churn_p_off=0.3, churn_p_on=0.5))
+    _, logs = dz.run_fog(cfg, FOG_HCFG, loss_fn, params0, make_batches)
+    _, logs_h = dz.run_fog(cfg, FOG_HCFG, loss_fn, params0, make_batches,
+                           engine="host")
+    _assert_logs_bitwise(logs, logs_h)
+    assert (logs.n_online <= FOG_N).all()
+
+
+def test_fog_learns():
+    """End to end: fog training reduces the training loss."""
+    params0, loss_fn, make_batches = _problem()
+    cfg = dz.GossipConfig(n_nodes=FOG_N, rounds=8, gossip_steps=1)
+    _, logs = dz.run_fog(cfg, FOG_HCFG, loss_fn, params0, make_batches)
+    assert logs.loss[-1] < 0.5 * logs.loss[0]
+
+
+def test_gossip_learns_with_eval_batch():
+    params0, loss_fn, make_batches = _problem()
+    w = TOPOLOGIES["torus"]()
+    eval_batch = jax.tree.map(lambda a: a[0, 0], make_batches(99, N))
+    cfg = dz.GossipConfig(n_nodes=N, rounds=8)
+    _, logs = dz.run_gossip(cfg, loss_fn, params0, make_batches, w,
+                            eval_batch=eval_batch)
+    assert logs.loss[-1] < 0.5 * logs.loss[0]

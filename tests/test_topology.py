@@ -40,3 +40,120 @@ def test_consensus_converges_numerically():
     for _ in range(200):
         x = w @ x
     np.testing.assert_allclose(x, np.tile(target, (16, 1)), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# erdos_renyi connectivity bugfix
+# ---------------------------------------------------------------------------
+def test_is_connected():
+    assert topo.is_connected(topo.ring(6))
+    disconnected = np.zeros((4, 4))
+    disconnected[0, 1] = disconnected[1, 0] = 1
+    disconnected[2, 3] = disconnected[3, 2] = 1
+    assert not topo.is_connected(disconnected)
+
+
+def test_erdos_renyi_connected_draw_untouched():
+    """A draw that comes out connected keeps its raw degree distribution:
+    no unconditional ring overlay (the old behaviour forced every node's
+    degree >= 2 on every draw)."""
+    seed, n, p = 0, 10, 0.6
+    rng = np.random.default_rng(seed)
+    raw = (rng.random((n, n)) < p).astype(float)
+    raw = np.triu(raw, 1)
+    raw = raw + raw.T
+    assert topo.is_connected(raw), "pick a (seed, n, p) with a connected draw"
+    np.testing.assert_array_equal(topo.erdos_renyi(seed, n, p), raw)
+
+
+def test_erdos_renyi_disconnected_draw_gets_ring():
+    """p=0 draws the empty graph -> the ring overlay kicks in."""
+    a = topo.erdos_renyi(0, 8, 0.0)
+    np.testing.assert_array_equal(a, topo.ring(8))
+    assert topo.is_connected(a)
+
+
+def test_erdos_renyi_always_connected():
+    for seed in range(20):
+        assert topo.is_connected(topo.erdos_renyi(seed, 12, 0.15))
+
+
+# ---------------------------------------------------------------------------
+# eigvalsh bugfix: builder x mixing property sweep
+# ---------------------------------------------------------------------------
+_BUILDERS = [lambda: topo.ring(8), lambda: topo.ring(2),
+             lambda: topo.torus_2d(3, 4), lambda: topo.torus_2d(4, 4),
+             lambda: topo.complete(6), lambda: topo.star(7),
+             lambda: topo.erdos_renyi(0, 10, 0.3),
+             lambda: topo.erdos_renyi(7, 9, 0.15),
+             lambda: topo.erdos_renyi(3, 11, 0.9)]
+_MIXINGS = [topo.laplacian_mixing, topo.metropolis_hastings_mixing]
+
+
+@pytest.mark.parametrize("mixing", _MIXINGS,
+                         ids=["laplacian", "metropolis_hastings"])
+@pytest.mark.parametrize("adj_fn", _BUILDERS)
+def test_every_builder_mixing_doubly_stochastic_gap_in_0_1(adj_fn, mixing):
+    """Every builder x both mixings: W symmetric doubly-stochastic with
+    spectral gap in (0, 1]. The gap must be real — ``eigvalsh`` on the
+    symmetric W, not ``eigvals`` (whose spurious complex parts could push
+    |lambda_2| past 1 and the gap negative)."""
+    w = mixing(adj_fn())
+    np.testing.assert_allclose(w, w.T, atol=1e-12)
+    assert topo.is_doubly_stochastic(w)
+    gap = topo.spectral_gap(w)
+    assert 0.0 < gap <= 1.0 + 1e-12
+    # complete graphs converge in < 1 round (lambda_2 ~ 0); just finite > 0
+    assert 0.0 < topo.consensus_rounds(w) < np.inf
+
+
+def test_spectral_gap_exact_on_complete_graph():
+    """Closed form: the Laplacian of K_n has eigenvalues {0, n^(n-1)}, so
+    W = I - L/n has eigenvalues {1, 0^(n-1)} and the gap is exactly 1."""
+    w = topo.laplacian_mixing(topo.complete(8))
+    assert topo.spectral_gap(w) == pytest.approx(1.0, abs=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# jnp twins
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("adj_fn", [
+    lambda: topo.ring(8), lambda: topo.torus_2d(3, 3),
+    lambda: topo.erdos_renyi(2, 10, 0.4)])
+def test_jnp_twins_match_numpy(adj_fn):
+    import jax.numpy as jnp
+    a = adj_fn()
+    np.testing.assert_allclose(
+        np.asarray(topo.laplacian_mixing_jax(jnp.asarray(a))),
+        topo.laplacian_mixing(a), rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(
+        np.asarray(topo.metropolis_hastings_mixing_jax(jnp.asarray(a))),
+        topo.metropolis_hastings_mixing(a), rtol=1e-6, atol=1e-7)
+
+
+def test_gate_mixing_jax_properties():
+    import jax.numpy as jnp
+    w = topo.laplacian_mixing(topo.erdos_renyi(5, 9, 0.4))
+    avail = np.array([1, 1, 0, 1, 0, 1, 1, 1, 0], bool)
+    w_eff = np.asarray(topo.gate_mixing_jax(jnp.asarray(w, jnp.float32),
+                                            jnp.asarray(avail)))
+    assert topo.is_doubly_stochastic(w_eff, tol=1e-6)
+    # offline rows are *exactly* one-hot (bitwise model preservation)
+    for i in np.where(~avail)[0]:
+        expected = np.zeros(9, np.float32)
+        expected[i] = 1.0
+        np.testing.assert_array_equal(w_eff[i], expected)
+        np.testing.assert_array_equal(w_eff[:, i], expected)
+    # all-online mask keeps the off-diagonal support
+    w_on = np.asarray(topo.gate_mixing_jax(jnp.asarray(w, jnp.float32),
+                                           jnp.ones(9, bool)))
+    np.testing.assert_allclose(w_on, w, atol=1e-6)
+
+
+def test_standard_adjacencies_grid():
+    adjs = topo.standard_adjacencies(16, seed=1, p=0.3)
+    assert set(adjs) == {"ring", "torus", "complete", "erdos_renyi"}
+    for name, a in adjs.items():
+        assert a.shape == (16, 16)
+        assert topo.is_connected(a), name
+    assert "torus" not in topo.standard_adjacencies(10)
